@@ -1,0 +1,94 @@
+"""Kernel microbenchmarks: us_per_call for the Pallas kernels (interpret
+mode on CPU — structural validation; real-TPU timing is a deploy step)
+and their pure-jnp oracles (XLA:CPU compiled — the actual CPU perf
+reference). Derived column: modeled TPU-v5e HBM-bound time from the
+bytes each variant moves (the paper's memory-traffic claim).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ops  # noqa: E402
+from repro.kernels.ref import (  # noqa: E402
+    kmeans_stats_ref,
+    lutq_gemv_packed_ref,
+    lutq_matmul_ref,
+    pack4,
+)
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(emit=print):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, Kin, N = 8, 2048, 2048
+    x = jax.random.normal(key, (B, Kin), jnp.float32)
+    a = jax.random.randint(key, (Kin, N), 0, 16, jnp.int8)
+    packed = pack4(a)
+    d = jnp.sort(jax.random.normal(key, (16,)))
+
+    # modeled v5e HBM-bound decode times (weight bytes / bw)
+    t_bf16 = Kin * N * 2 / HBM_BW * 1e6
+    t_int8 = Kin * N * 1 / HBM_BW * 1e6
+    t_pack4 = Kin * N / 2 / HBM_BW * 1e6
+
+    us = _time(lambda: lutq_matmul_ref(x, a, d))
+    rows.append(("lutq_matmul_ref_jnp", us, f"v5e_model_us={t_int8:.3f}"))
+    us = _time(lambda: ops.lutq_matmul(x, a, d, bm=B, bn=256, bk=256,
+                                       interpret=True))
+    rows.append(("lutq_matmul_pallas_interp", us, f"v5e_model_us={t_int8:.3f}"))
+
+    us = _time(lambda: lutq_gemv_packed_ref(x, packed, d))
+    rows.append(("lutq_gemv_packed_ref_jnp", us, f"v5e_model_us={t_pack4:.3f}"))
+    us = _time(lambda: ops.lutq_gemv_packed(x, packed, d, bn=256, bk=256,
+                                            interpret=True))
+    rows.append(("lutq_gemv_packed_pallas_interp", us,
+                 f"v5e_model_us={t_pack4:.3f}"))
+    rows.append(("bf16_weight_traffic_model", t_bf16,
+                 f"pack4_speedup={t_bf16/t_pack4:.1f}x"))
+
+    w = jax.random.normal(key, (1 << 18,))
+    d8 = jnp.sort(jax.random.normal(key, (16,)))
+    us = _time(lambda: kmeans_stats_ref(w, d8))
+    rows.append(("kmeans_stats_ref_jnp", us, "K=16,N=262144"))
+    us = _time(lambda: ops.kmeans_stats(w, d8, bn=8192, interpret=True))
+    rows.append(("kmeans_stats_pallas_interp", us, "K=16,N=262144"))
+
+    # causal flash attention: block-skipped kernel vs dense oracle
+    from repro.kernels.flash_attn import flash_attention_tpu
+    from repro.nn.attention import dense_attention
+    BH, S, D = 4, 512, 64
+    ks = jax.random.split(key, 3)
+    q, kk, vv = (jax.random.normal(ks[i], (BH, S, D)) for i in range(3))
+    us = _time(lambda: dense_attention(q[:, :, None], kk[:, :, None],
+                                       vv[:, :, None], causal=True))
+    rows.append(("causal_attn_dense_jnp", us, f"S={S},full_S2_flops"))
+    us = _time(lambda: flash_attention_tpu(q, kk, vv, causal=True,
+                                           interpret=True))
+    rows.append(("causal_flash_pallas_interp", us,
+                 f"S={S},block_skipped=~S2/2_flops"))
+
+    for name, us, derived in rows:
+        emit(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run artifacts + roofline model. Narrative sections are maintained by
+hand in EXPERIMENTS.md; this prints the data tables to splice in.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent
+sys.path.insert(0, str(ROOT.parent / "src"))
+sys.path.insert(0, str(ROOT))
+
+from repro.configs import list_archs  # noqa: E402
+from repro.models.api import SHAPES   # noqa: E402
+
+import roofline  # noqa: E402
+
+
+def dryrun_table(mesh_tag: str) -> str:
+    d = ROOT / "artifacts/dryrun" / mesh_tag
+    lines = [
+        f"| arch | shape | kind | status | compile s | args GiB/dev | temp GiB/dev "
+        f"| AG | AR | RS | A2A | CP |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        for shape in SHAPES:
+            f = d / f"{arch}__{shape}.json"
+            if not f.exists():
+                continue
+            r = json.loads(f.read_text())
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | - | SKIP (full attn) "
+                             f"| | | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | - | ERROR | | | | | | | | |")
+                continue
+            m = r["memory"]
+            c = r["collectives_count"]
+            lines.append(
+                f"| {arch} | {shape} | {r['kind']} | ok | {r['compile_s']} "
+                f"| {m['argument_bytes']/2**30:.2f} | {m['temp_bytes']/2**30:.2f} "
+                f"| {c['all-gather']} | {c['all-reduce']} | {c['reduce-scatter']} "
+                f"| {c['all-to-all']} | {c['collective-permute']} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    d = ROOT / "artifacts/dryrun/pod16x16"
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "proj. MFU | useful ratio | one-line fix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        for shape in SHAPES:
+            f = d / f"{arch}__{shape}.json"
+            artifact = json.loads(f.read_text()) if f.exists() else None
+            if artifact and artifact.get("status") == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                             f"skipped: full quadratic attention |")
+                continue
+            r = roofline.analyze_cell(arch, shape, artifact)
+            hint = roofline._FIX_HINTS[r["dominant"]].split(":")[1].split(",")[0].strip()
+            lines.append(
+                f"| {arch} | {shape} | {r['t_compute_s']*1e3:.1f} ms "
+                f"| {r['t_memory_s']*1e3:.1f} ms | {r['t_collective_s']*1e3:.1f} ms "
+                f"| **{r['dominant']}** | {r['mfu_proj']*100:.1f}% "
+                f"| {r['useful_ratio']*100:.1f}% | {hint} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### single pod (16x16)\n")
+        print(dryrun_table("pod16x16"))
+        print("\n### multi-pod (2x16x16)\n")
+        print(dryrun_table("pod2x16x16"))
+    if which in ("all", "roofline"):
+        print("\n### roofline (single pod)\n")
+        print(roofline_table())

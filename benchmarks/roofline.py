@@ -1,0 +1,404 @@
+"""Roofline analysis: three terms per (arch x shape) cell on TPU v5e.
+
+    compute    = FLOPs / (chips * 197e12)            [bf16 MXU peak]
+    memory     = HBM bytes / (chips * 819e9)
+    collective = ICI bytes / (chips * 50e9 per link)
+
+Accounting methodology (documented in EXPERIMENTS.md §Roofline):
+XLA's HloCostAnalysis counts while-loop bodies ONCE (calibrated in this
+repo: a 10-iteration scan of matmuls reports 1x the matmul FLOPs), so
+``compiled.cost_analysis()`` underreports any scanned program. The terms
+below therefore come from a closed-form analytic model of the exact
+program we lower (including its inefficiencies: full-S^2 masked causal
+flash, remat recompute, capacity-factor padding, k-means passes), while
+the compiled artifact supplies (a) per-device memory_analysis, (b) the
+collective op inventory (type/count/per-trip bytes) used to cross-check
+the analytic collective term, (c) compile evidence for every cell.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the assignment;
+the ratio MODEL_FLOPS / total_flops exposes remat/attention/dispatch
+overhead ("how much compiled compute is useful").
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (per-chip effective)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_config  # noqa: E402
+from repro.models.api import SHAPES   # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (matmul params only — what turns into FLOPs)
+# ---------------------------------------------------------------------------
+
+def param_groups(cfg) -> Dict[str, float]:
+    D, F, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    dh = cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    g: Dict[str, float] = {}
+    if cfg.family == "ssm":  # rwkv6
+        per_layer = 5 * D * D + D * 64 * 2          # r,k,v,g,o + decay lora
+        per_layer += D * F + F * D + D * D          # channel mix
+        g["layer"] = per_layer * L
+    elif cfg.family == "hybrid":  # zamba2
+        d_in = cfg.resolved_d_inner
+        per_m = D * (2 * d_in + 2 * cfg.ssm_state + d_in // cfg.ssm_head_dim)
+        per_m += d_in * D
+        g["layer"] = per_m * L
+        shared = D * (H + 2 * Hkv) * dh + H * dh * D + 2 * D * F + F * D
+        g["shared_attn"] = shared  # params stored once, APPLIED L/attn_every x
+    else:
+        if cfg.use_mla:
+            attn = (D * H * (cfg.qk_nope + cfg.qk_rope)
+                    + D * (cfg.kv_lora + cfg.qk_rope)
+                    + cfg.kv_lora * H * cfg.qk_nope
+                    + cfg.kv_lora * H * cfg.v_head
+                    + H * cfg.v_head * D)
+        else:
+            attn = D * (H + 2 * Hkv) * dh + H * dh * D
+        if cfg.n_experts:
+            moe = cfg.n_experts * 3 * D * F
+            shared = 3 * D * (cfg.d_ff_shared or 0)
+            mlp_total = moe + shared
+            mlp_active = cfg.top_k * 3 * D * F + shared
+        else:
+            mlp_total = mlp_active = 3 * D * F
+        n_moe_layers = L - cfg.first_dense
+        dense_ff = 3 * D * (10944 if cfg.first_dense else F)  # dsv2 dense layer
+        g["attn"] = attn * L
+        g["mlp_total"] = mlp_total * n_moe_layers + (dense_ff * cfg.first_dense)
+        g["mlp_active"] = mlp_active * n_moe_layers + (dense_ff * cfg.first_dense)
+        if cfg.family == "encdec":
+            enc = cfg.enc_layers * (D * (H + 2 * Hkv) * dh + H * dh * D + 3 * D * F)
+            xattn = L * (D * (H + 2 * Hkv) * dh + H * dh * D)
+            g["encoder"] = enc
+            g["xattn"] = xattn
+    g["embed"] = V * D * (1 if cfg.tie_embeddings else 2)
+    return g
+
+
+def active_params(cfg) -> float:
+    g = param_groups(cfg)
+    tot = sum(v for k, v in g.items() if k not in ("mlp_total", "mlp_active"))
+    tot += g.get("mlp_active", g.get("mlp_total", 0.0))
+    return tot
+
+
+def all_params(cfg) -> float:
+    g = param_groups(cfg)
+    tot = sum(v for k, v in g.items() if k not in ("mlp_active",))
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs for the program we actually lower
+# ---------------------------------------------------------------------------
+
+def _attn_flops_fwd(cfg, B, S, Skv=None, useful=False):
+    """QK^T + PV einsum flops. Our chunked-flash causal path computes the
+    full S x Skv score matrix with masking -> count it all unless
+    `useful` (causal halves it)."""
+    Skv = Skv or S
+    if cfg.window is not None:
+        Skv_eff = min(cfg.window + cfg.attn_kv_block, Skv)
+    else:
+        Skv_eff = Skv
+    dh = cfg.resolved_head_dim
+    if cfg.use_mla:
+        dh = cfg.qk_nope + cfg.qk_rope
+        dv = cfg.v_head
+    else:
+        dv = dh
+    f = 2 * B * cfg.n_heads * S * Skv_eff * (dh + dv)
+    if useful and cfg.window is None:
+        f *= 0.5
+    return f
+
+
+def forward_flops(cfg, B, S, *, useful=False):
+    """One forward pass over B x S tokens."""
+    T = B * S
+    g = param_groups(cfg)
+    f = 0.0
+    if cfg.family == "ssm":
+        f += 2 * T * g["layer"]
+        # wkv recurrence: 3 * dk * dv mults per head-step (negligible)
+        H = cfg.d_model // cfg.ssm_head_dim
+        f += 2 * 3 * T * H * cfg.ssm_head_dim ** 2
+    elif cfg.family == "hybrid":
+        f += 2 * T * g["layer"]
+        napp = cfg.n_layers // cfg.attn_every
+        f += 2 * T * g["shared_attn"] * napp
+        f += _attn_flops_fwd(cfg, B, S, useful=useful) * napp
+        # SSD intra-chunk quadratic: per chunk L_c^2 terms
+        d_in = cfg.resolved_d_inner
+        H = d_in // cfg.ssm_head_dim
+        Lc = cfg.ssm_chunk
+        f += 2 * B * (S * Lc) * (H * cfg.ssm_head_dim + cfg.ssm_state) * cfg.n_layers
+    else:
+        mlp = g.get("mlp_active", g.get("mlp_total", 0.0))
+        f += 2 * T * (g["attn"] + mlp) if "attn" in g else 0.0
+        f += _attn_flops_fwd(cfg, B, S, useful=useful) * cfg.n_layers
+        if cfg.n_experts and not useful:
+            f += 2 * T * cfg.n_experts * cfg.n_layers  # router
+            # capacity-factor padding: dispatched buffers are cf x tokens
+            pad = max(cfg.capacity_factor - 1.0, 0.0)
+            f += pad * 2 * T * cfg.top_k * 3 * cfg.d_model * cfg.d_ff * \
+                (cfg.n_layers - cfg.first_dense)
+        if cfg.family == "encdec":
+            Ssrc = S
+            f += 2 * B * Ssrc * g["encoder"] / max(cfg.enc_layers, 1) * cfg.enc_layers
+            f += _attn_flops_fwd(cfg, B, Ssrc, useful=useful) * cfg.enc_layers
+            f += 2 * T * g["xattn"] / max(cfg.n_layers, 1) * cfg.n_layers
+            f += _attn_flops_fwd(cfg, B, S, Skv=Ssrc) * cfg.n_layers
+    # logits
+    f += 2 * T * cfg.d_model * cfg.vocab
+    return f
+
+
+def kmeans_flops(cfg, n_q_params):
+    """Step 4: K compares + K masked-sum passes per quantized weight."""
+    K = cfg.quant.K if cfg.quant else 0
+    return 2.0 * K * n_q_params
+
+
+def cell_flops(cfg, shape):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        fwd = forward_flops(cfg, B, S)
+        # remat scan: fwd + recompute + 2x bwd = 4x fwd; 'dots' policy
+        # saves matmul outputs so the recompute pass is ~free -> 3x
+        remat_factor = 3.0 if cfg.remat_policy == "dots" else 4.0
+        total = remat_factor * fwd
+        nq = all_params(cfg)  # all matmul weights are LUT-Q (embed incl.)
+        total += kmeans_flops(cfg, nq)
+        # optimizer elementwise ~ 10 flops/param (negligible, counted)
+        total += 10.0 * all_params(cfg)
+        useful = 6.0 * active_params(cfg) * B * S
+        return total, useful
+    if shape.kind == "prefill":
+        fwd = forward_flops(cfg, B, S)
+        return fwd, 2.0 * active_params(cfg) * B * S
+    # decode: one token against S-cache
+    T = B
+    g = param_groups(cfg)
+    if cfg.family == "ssm":
+        f = 2 * T * g["layer"]
+        H = cfg.d_model // cfg.ssm_head_dim
+        f += 2 * 3 * T * H * cfg.ssm_head_dim ** 2
+    elif cfg.family == "hybrid":
+        napp = cfg.n_layers // cfg.attn_every
+        f = 2 * T * (g["layer"] + g["shared_attn"] * napp)
+        Skv = min(cfg.window, S) if cfg.window else S
+        f += 2 * T * cfg.n_heads * Skv * 2 * cfg.resolved_head_dim * napp
+    else:
+        mlp = g.get("mlp_active", g.get("mlp_total", 0.0))
+        f = 2 * T * (g.get("attn", 0.0) + mlp)
+        Skv = min(cfg.window, S) if cfg.window else S
+        if cfg.use_mla:
+            # absorbed decode: scores+outputs against the rank-r latent
+            f += 2 * T * cfg.n_heads * Skv * 2 * cfg.kv_lora * cfg.n_layers
+        else:
+            f += 2 * T * cfg.n_heads * Skv * 2 * cfg.resolved_head_dim * cfg.n_layers
+        if cfg.family == "encdec":
+            f += 2 * T * g["xattn"] + 2 * T * cfg.n_heads * S * 2 * \
+                cfg.resolved_head_dim * cfg.n_layers
+    f += 2 * T * cfg.d_model * cfg.vocab
+    return f, 2.0 * active_params(cfg) * T
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic + collective bytes (per chip, per step)
+# ---------------------------------------------------------------------------
+
+def cell_traffic(cfg, shape, mesh_devices, model_par, data_par, microbatches):
+    """Returns (hbm_bytes_per_chip, ici_bytes_per_chip)."""
+    B, S = shape.global_batch, shape.seq_len
+    Nall = all_params(cfg)
+    D = cfg.d_model
+    quant = cfg.quant is not None
+    idx_bytes = 1 if quant else 2                  # int8 assignments vs bf16
+    chips = mesh_devices
+
+    if shape.kind == "train":
+        T = B * S
+        # per chip shares
+        w_gathered = Nall * idx_bytes / model_par   # decoded per model-shard
+        master = Nall * 4 / chips
+        acts_layer = (T / (data_par * microbatches)) * D * 2  # bf16 boundary
+        L = cfg.n_layers
+        hbm = 0.0
+        # weights touched fwd+recompute+bwd per microbatch
+        hbm += 3 * microbatches * w_gathered
+        # activations: write+read at layer boundaries x (fwd, recompute, bwd)
+        hbm += 3 * 2 * acts_layer * L * microbatches
+        # optimizer: read+write masters + opt state (m[,v])
+        opt_mult = 3 if Nall < 5e10 else 2
+        hbm += (1 + opt_mult) * 2 * master
+        # kmeans: K masked passes over masters + assignment write
+        if quant:
+            hbm += (cfg.quant.K * 4 + 1) * Nall / chips
+        # collectives: FSDP all-gather (fwd+bwd) + grad reduce-scatter
+        shard = Nall * idx_bytes / chips
+        ici = 2 * microbatches * shard * (data_par - 1)
+        ici += Nall * 4 / chips * (data_par - 1) / data_par * 2  # grad RS+AG f32
+        # TP all-reduce on activations: 2/layer fwd + 2/layer bwd
+        act_chip = (T / (data_par * microbatches)) * D * 2 / model_par
+        ici += 4 * L * microbatches * act_chip * 2 * (model_par - 1) / model_par
+        return hbm, ici
+
+    if shape.kind == "prefill":
+        T = B * S
+        w = Nall * idx_bytes / model_par
+        acts = T * D * 2 / data_par
+        kv = 2 * cfg.n_layers * T * cfg.n_kv_heads * cfg.resolved_head_dim * 2 / chips
+        hbm = w + 2 * acts * cfg.n_layers + kv
+        act_chip = acts / model_par
+        ici = 2 * cfg.n_layers * act_chip * 2 * (model_par - 1) / model_par
+        return hbm, ici
+
+    # decode: weights + cache read once per token
+    if quant and cfg.pack_assignments:
+        idx_bytes = 0.5  # two 4-bit indices per byte
+    w = Nall * idx_bytes / chips  # weights fully sharded (FSDP+TP)
+    kv_bytes = 1.0 + 2.0 / cfg.resolved_head_dim if cfg.kv_cache_bits == 8 else 2.0
+    if cfg.family == "ssm":
+        H = cfg.d_model // cfg.ssm_head_dim
+        cache = cfg.n_layers * B * H * cfg.ssm_head_dim ** 2 * 4 / chips
+    elif cfg.family == "hybrid":
+        d_in = cfg.resolved_d_inner
+        H = d_in // cfg.ssm_head_dim
+        cache = cfg.n_layers * B * H * cfg.ssm_state * cfg.ssm_head_dim * 4 / chips
+        napp = cfg.n_layers // cfg.attn_every
+        cache += napp * B * S * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * kv_bytes / chips
+    elif cfg.use_mla:
+        cache = cfg.n_layers * B * S * (cfg.kv_lora + cfg.qk_rope) * 2 / chips
+    else:
+        Skv = min(cfg.window, S) if cfg.window else S
+        cache = cfg.n_layers * B * Skv * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * kv_bytes / chips
+    hbm = w + cache
+    # decode TP all-reduces: per layer, activations are (B, 1, D)
+    ici = 4 * cfg.n_layers * B * D * 2 / data_par / model_par * (model_par - 1) / model_par
+    return hbm, ici
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def analyze_cell(arch: str, shape_name: str, artifact: Optional[dict],
+                 *, chips=256, data_par=16, model_par=16) -> dict:
+    cfg = get_config(arch)
+    if artifact and artifact.get("overrides"):
+        ov = {k: v for k, v in artifact["overrides"].items()
+              if k != "microbatches"}
+        if ov:
+            cfg = cfg.replace(**ov)
+    shape = SHAPES[shape_name]
+    micro = artifact.get("microbatches", 8) if artifact else 8
+    flops, useful = cell_flops(cfg, shape)
+    hbm, ici = cell_traffic(cfg, shape, chips, model_par, data_par, micro)
+    t_c = flops / (chips * PEAK_FLOPS)
+    t_m = hbm / HBM_BW
+    t_i = ici / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_i, "collective"))[1]
+    bound = max(t_c, t_m, t_i)
+    t_useful = useful / (chips * PEAK_FLOPS)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "flops_total": flops, "model_flops": useful,
+        "useful_ratio": useful / flops if flops else 0.0,
+        "hbm_bytes_chip": hbm, "ici_bytes_chip": ici,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_i,
+        "bound_s": bound,
+        "dominant": dom,
+        # projected MFU: useful-compute time over the binding constraint
+        # (perfect-overlap assumption). For decode this is inherently low
+        # — there the relevant score is the memory-roofline fraction.
+        "mfu_proj": (t_useful / bound) if bound else 0.0,
+        "mem_roofline_frac": (t_m / bound) if bound else 0.0,
+        "roofline_fraction": (t_c / bound) if bound else 0.0,
+    }
+    if artifact and artifact.get("status") == "ok":
+        rec["hlo_flops_module"] = artifact["cost"]["flops"]
+        rec["temp_gib_dev"] = artifact["memory"]["temp_bytes"] / 2**30
+        rec["hlo_collectives"] = artifact.get("collectives_count")
+        rec["status"] = "ok"
+    elif artifact:
+        rec["status"] = artifact.get("status", "missing")
+        rec["reason"] = artifact.get("reason", artifact.get("error", ""))[:90]
+    else:
+        rec["status"] = "missing"
+    return rec
+
+
+_FIX_HINTS = {
+    "compute": "raise arithmetic efficiency: fuse decode into matmul "
+               "(lutq_matmul kernel), cut causal-mask waste with "
+               "block-skipped flash, drop remat recompute on cheap layers",
+    "memory": "cut HBM traffic: packed 2/4-bit assignments "
+              "(lutq_gemv_packed halves->quarters weight bytes), fuse "
+              "k-means passes (kmeans_stats single-pass kernel)",
+    "collective": "shrink/overlap collectives: int8 EF-compressed grad "
+                  "reduce (2-4x fewer DP bytes), latency-hide FSDP "
+                  "gathers under layer compute, 2D collective-matmul",
+}
+
+
+def main(argv=None):
+    root = Path(__file__).resolve().parent
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=str(root / "artifacts/dryrun/pod16x16"))
+    ap.add_argument("--json-out", default=str(root / "artifacts/roofline.json"))
+    args = ap.parse_args(argv)
+    art_dir = Path(args.artifacts)
+
+    from repro.configs import list_archs
+    rows = []
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            f = art_dir / f"{arch}__{shape_name}.json"
+            artifact = json.loads(f.read_text()) if f.exists() else None
+            if artifact and artifact.get("status") == "skipped":
+                rows.append({"arch": arch, "shape": shape_name,
+                             "status": "skipped",
+                             "reason": artifact["reason"][:70]})
+                continue
+            rows.append(analyze_cell(arch, shape_name, artifact))
+
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dominant':>10s} {'MFU%':>6s} {'useful%':>8s} "
+           f"{'temp GiB':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:24s} {r['shape']:12s} SKIP: {r['reason']}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['t_compute_s']*1e3:8.1f}m {r['t_memory_s']*1e3:8.1f}m "
+              f"{r['t_collective_s']*1e3:8.1f}m {r['dominant']:>10s} "
+              f"{r['mfu_proj']*100:5.1f}% "
+              f"{r['useful_ratio']*100:7.1f}% "
+              f"{r.get('temp_gib_dev', float('nan')):8.1f}")
+    Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.json_out).write_text(json.dumps(rows, indent=1, default=float))
+    print(f"\nfix hints by dominant term:")
+    for k, v in _FIX_HINTS.items():
+        print(f"  {k}: {v}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

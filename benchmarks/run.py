@@ -1,0 +1,57 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (kernel section) plus the
+analytic Table 2 reproduction and the trainable CIFAR-style tables.
+``--fast`` trims training steps (CI); default runs the full budget.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--skip-train]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args(argv)
+    steps = 120 if args.fast else 240
+
+    t0 = time.time()
+    print("== Table 2: memory & multiplication reproduction (analytic) ==")
+    import table2_memory
+    table2_memory.run()
+
+    print("\n== Kernel microbenchmarks (name,us_per_call,derived) ==")
+    import kernel_bench
+    kernel_bench.run()
+
+    if not args.skip_train:
+        print("\n== CIFAR-style quantization quality table (synthetic task) ==")
+        import cifar_table
+        cifar_table.run(steps=steps)
+
+        print("\n== Fig 2: prune x quantize sweep ==")
+        import fig2_prune
+        fig2_prune.run(steps=steps)
+
+    print("\n== Roofline (from dry-run artifacts, if present) ==")
+    art = Path(__file__).resolve().parent / "artifacts/dryrun/pod16x16"
+    if art.exists() and any(art.glob("*.json")):
+        import roofline
+        roofline.main(["--artifacts", str(art)])
+    else:
+        print("  (run `python -m repro.launch.dryrun` first)")
+
+    print(f"\n[benchmarks] total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param LUT-Q LM for a few hundred
+steps on the byte-level corpus, with checkpointing + auto-resume.
+
+    PYTHONPATH=src python examples/train_e2e.py            # ~100M, 300 steps
+    PYTHONPATH=src python examples/train_e2e.py --tiny     # CI-sized
+
+The model is the danube family (GQA + SWA) scaled to ~100M params;
+weights train under 4-bit pow2 LUT-Q with 8-bit activations — the
+paper's full recipe end to end, on the framework's own source tree as
+the corpus.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.spec import QuantSpec
+from repro.data.text import byte_batch, default_corpus
+from repro.models import api
+from repro.optim.optimizers import adamw, cosine_schedule
+from repro.optim.train_state import init_train_state, make_train_step, state_flat
+from repro.runtime.loop import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/lutq_e2e_ckpt")
+    args = ap.parse_args()
+
+    base = get_config("h2o-danube-1.8b")
+    if args.tiny:
+        cfg = base.replace(
+            n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+            d_ff=256, vocab=256, window=64, dtype=jnp.float32,
+            attn_q_block=64, attn_kv_block=64,
+            quant=QuantSpec(bits=4, constraint="pow2", min_size=1024),
+            act_bits=8)
+        steps, batch, seq = args.steps or 40, 4, 64
+    else:
+        # ~100M params: 12L x d640 (GQA 8/2, SWA 256) + byte vocab
+        cfg = base.replace(
+            n_layers=12, d_model=640, n_heads=8, n_kv_heads=2, head_dim=80,
+            d_ff=1920, vocab=256, window=256, dtype=jnp.float32,
+            attn_q_block=128, attn_kv_block=128,
+            quant=QuantSpec(bits=4, constraint="pow2", min_size=4096),
+            act_bits=8)
+        steps, batch, seq = args.steps or 300, 4, 256
+
+    params, axes = api.init(jax.random.PRNGKey(0), cfg)
+    params = api.quantize(params, cfg, axes)
+    n = sum(x.size for x in jax.tree.leaves(params) if hasattr(x, "size"))
+    print(f"[e2e] {n/1e6:.1f}M parameter slots (incl. LUT-Q state), "
+          f"{steps} steps, batch {batch}x{seq}")
+
+    opt = adamw(cosine_schedule(3e-3, 20, steps))
+    state = state_flat(init_train_state(params, opt))
+    step_fn = jax.jit(make_train_step(cfg, api.loss_fn, opt))
+
+    corpus = default_corpus(str(Path(__file__).resolve().parent.parent))
+    print(f"[e2e] corpus: {len(corpus)/1e6:.2f}M bytes of this repo")
+
+    def make_batch(s):
+        b = byte_batch(corpus, s, batch, seq, seed=1)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    loop = TrainLoop(step_fn, make_batch, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=100, log_every=10)
+    state, step = loop.run(state, steps)
+    losses = [h["loss"] for h in loop.history]
+    if losses:
+        print(f"[e2e] byte-level CE {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"({step} steps; resume-capable checkpoint in {args.ckpt_dir})")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

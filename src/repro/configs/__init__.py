@@ -1,0 +1,42 @@
+"""Assigned architecture registry: one module per architecture."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        h2o_danube_1_8b,
+        qwen1_5_110b,
+        mistral_nemo_12b,
+        mistral_large_123b,
+        paligemma_3b,
+        qwen3_moe_235b_a22b,
+        deepseek_v2_lite_16b,
+        seamless_m4t_medium,
+        zamba2_2_7b,
+        rwkv6_1_6b,
+    )

@@ -1,0 +1,23 @@
+"""h2o-danube-1.8b [dense]: llama+mistral mix with sliding-window attention.
+
+24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000 [arXiv:2401.16818; hf]
+"""
+from repro.configs import register
+from repro.core.spec import LUTQ_4BIT_POW2
+from repro.models.config import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6912,
+    vocab=32000,
+    window=4096,           # sliding-window attention (mistral heritage)
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    quant=LUTQ_4BIT_POW2,
+    act_bits=8,
+))

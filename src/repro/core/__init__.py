@@ -1,0 +1,37 @@
+"""Core LUT-Q library: the paper's contribution as composable JAX modules."""
+from repro.core.spec import (
+    QuantSpec,
+    LUTQ_4BIT,
+    LUTQ_2BIT,
+    LUTQ_4BIT_POW2,
+    LUTQ_2BIT_POW2,
+    BINARY,
+    TERNARY,
+    TERNARY_SCALED,
+)
+from repro.core.lutq import (
+    LutqState,
+    decode,
+    quantize_ste,
+    assign,
+    kmeans_update,
+    kmeans_update_segsum,
+    update_state,
+    init_state,
+    init_dictionary,
+    pow2_round,
+    apply_constraint,
+)
+from repro.core.mlbn import BNParams, BNStats, init_bn, batch_norm, inference_scale_offset
+from repro.core.actquant import fake_quant, relu_fake_quant
+from repro.core import memory
+
+__all__ = [
+    "QuantSpec", "LUTQ_4BIT", "LUTQ_2BIT", "LUTQ_4BIT_POW2", "LUTQ_2BIT_POW2",
+    "BINARY", "TERNARY", "TERNARY_SCALED",
+    "LutqState", "decode", "quantize_ste", "assign", "kmeans_update",
+    "kmeans_update_segsum", "update_state", "init_state", "init_dictionary",
+    "pow2_round", "apply_constraint",
+    "BNParams", "BNStats", "init_bn", "batch_norm", "inference_scale_offset",
+    "fake_quant", "relu_fake_quant", "memory",
+]

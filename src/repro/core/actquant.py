@@ -1,0 +1,60 @@
+"""Uniform activation fake-quantization (paper section 2 / 4: 8-bit).
+
+The paper runs all quantized-weight experiments with activations
+"quantized uniformly to 8-bit". We implement symmetric per-tensor
+uniform fake-quant with a straight-through gradient. The scale is
+dynamic (max-abs of the tensor) by default, which is what NNabla's
+uniform quantizer does absent calibration, and can be frozen for
+deployment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant(x: jax.Array, bits: int = 8, scale: jax.Array | None = None) -> jax.Array:
+    """Symmetric uniform fake-quant with STE.
+
+    q = clip(round(x / s), -2^{b-1}, 2^{b-1}-1) * s, gradient = identity.
+    """
+    if bits >= 32:
+        return x
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if scale is None:
+        amax = jax.lax.stop_gradient(jnp.max(jnp.abs(x)))
+        scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1.0, qmax) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def learned_clip_fake_quant(x: jax.Array, alpha: jax.Array,
+                            bits: int = 8) -> jax.Array:
+    """PACT-style non-uniform-friendly activation quantization with a
+    *learned* clipping range (paper §4's future direction: activation
+    quantization with learned parameters, lowering the bitwidth floor).
+
+    alpha (scalar, trained) sets the clip; gradient reaches alpha through
+    the clip boundary (STE inside the range).
+    """
+    if bits >= 32:
+        return x
+    qmax = 2.0 ** (bits - 1) - 1.0
+    a = jnp.abs(alpha) + 1e-6
+    xc = jnp.clip(x, -a, a)
+    scale = a / qmax
+    q = jnp.round(xc / scale) * scale
+    # value: quantized; gradient: d/dx = 1 inside clip (STE), d/dalpha via clip
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+def relu_fake_quant(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Unsigned variant for post-ReLU activations (full range on [0, max])."""
+    if bits >= 32:
+        return jax.nn.relu(x)
+    x = jax.nn.relu(x)
+    qmax = 2.0 ** bits - 1.0
+    amax = jax.lax.stop_gradient(jnp.max(jnp.abs(x)))
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), 0.0, qmax) * scale
+    return x + jax.lax.stop_gradient(q - x)

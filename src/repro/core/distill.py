@@ -1,0 +1,55 @@
+"""Distillation for LUT-Q training (paper §4: "Distillation is
+compatible with our training approach and we are planning to investigate
+LUT-Q training together with distillation").
+
+Implements the apprentice-style joint loss the paper cites ([15]):
+    L = (1-alpha) * CE(student, labels) + alpha * T^2 * KL(teacher || student)
+where the student is the LUT-Q-quantized network and the teacher a
+full-precision one. Plugs into make_train_step as a loss_fn wrapper.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss(student_logits, teacher_logits, *, temperature: float = 2.0):
+    """KL(teacher || student) with temperature, mean over positions."""
+    t = temperature
+    p_t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    p_s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    kl = jnp.sum(jnp.exp(p_t) * (p_t - p_s), axis=-1)
+    return (t * t) * jnp.mean(kl)
+
+
+def make_distill_loss(
+    forward: Callable,
+    teacher_params,
+    cfg_teacher,
+    *,
+    alpha: float = 0.7,
+    temperature: float = 2.0,
+):
+    """Wrap a (params, cfg, batch) -> (loss, metrics) LM objective.
+
+    `forward(params, cfg, tokens, ...)` must return (logits, aux).
+    Teacher params are closed over and never receive gradients.
+    """
+
+    def loss_fn(params, cfg, batch):
+        s_logits, _ = forward(params, cfg, batch["tokens"])
+        t_logits, _ = forward(jax.lax.stop_gradient(teacher_params),
+                              cfg_teacher, batch["tokens"])
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lg = s_logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+        ce = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        kd = kd_loss(s_logits, t_logits, temperature=temperature)
+        loss = (1 - alpha) * ce + alpha * kd
+        return loss, {"loss": ce, "kd": kd}
+
+    return loss_fn

@@ -1,0 +1,95 @@
+"""Multiplier-less batch normalization (paper Appendix A).
+
+At inference BN collapses to ``y = a*x + b`` with
+``a = gamma / sqrt(VAR + eps)``. ML-BN requires ``a`` to be powers of
+two so inference needs only bit-shifts and adds. During training the
+forward pass uses the pow2-quantized effective scale (gamma_hat) while
+the backward pass updates the full-precision gamma via STE — exactly the
+scheme in Appendix A (quantize at inference, not BinaryNet's
+shift-based-training scheme).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lutq import pow2_round
+
+
+class BNParams(NamedTuple):
+    gamma: jax.Array  # full-precision, trained
+    beta: jax.Array
+
+
+class BNStats(NamedTuple):
+    mean: jax.Array  # running mean of inputs
+    var: jax.Array   # running variance of inputs
+
+
+def init_bn(num_features: int, dtype=jnp.float32) -> Tuple[BNParams, BNStats]:
+    return (
+        BNParams(jnp.ones((num_features,), dtype), jnp.zeros((num_features,), dtype)),
+        BNStats(jnp.zeros((num_features,), dtype), jnp.ones((num_features,), dtype)),
+    )
+
+
+def _ml_scale(gamma: jax.Array, var: jax.Array, eps: float) -> jax.Array:
+    """Effective scale a = gamma/sqrt(var+eps), pow2-quantized with STE."""
+    a = gamma * jax.lax.rsqrt(var + eps)
+    return a + jax.lax.stop_gradient(pow2_round(a) - a)
+
+
+def batch_norm(
+    x: jax.Array,
+    params: BNParams,
+    stats: BNStats,
+    *,
+    training: bool,
+    multiplier_less: bool = False,
+    eps: float = 1e-5,
+    momentum: float = 0.9,
+    axis: int = -1,
+) -> Tuple[jax.Array, BNStats]:
+    """BN over all axes except `axis` (the feature axis).
+
+    Returns (y, new_stats). With ``multiplier_less=True`` the effective
+    scale is pow2-quantized (STE on gamma) so the *inference* form
+    ``y = pow2(a)*x + b`` is multiplier-less.
+    """
+    reduce_axes = tuple(i for i in range(x.ndim) if i != (axis % x.ndim))
+    if training:
+        mean = jnp.mean(x, axis=reduce_axes)
+        var = jnp.var(x, axis=reduce_axes)
+        new_stats = BNStats(
+            momentum * stats.mean + (1 - momentum) * jax.lax.stop_gradient(mean),
+            momentum * stats.var + (1 - momentum) * jax.lax.stop_gradient(var),
+        )
+    else:
+        mean, var = stats.mean, stats.var
+        new_stats = stats
+
+    shape = [1] * x.ndim
+    shape[axis % x.ndim] = x.shape[axis % x.ndim]
+
+    if multiplier_less:
+        a = _ml_scale(params.gamma, var, eps)
+        b = params.beta - a * mean
+        y = a.reshape(shape) * x + b.reshape(shape)
+    else:
+        a = params.gamma * jax.lax.rsqrt(var + eps)
+        b = params.beta - a * mean
+        y = a.reshape(shape) * x + b.reshape(shape)
+    return y, new_stats
+
+
+def inference_scale_offset(
+    params: BNParams, stats: BNStats, *, multiplier_less: bool = False, eps: float = 1e-5
+) -> Tuple[jax.Array, jax.Array]:
+    """The folded (a, b) used at inference; a is exact pow2 under ML-BN."""
+    a = params.gamma * jax.lax.rsqrt(stats.var + eps)
+    if multiplier_less:
+        a = pow2_round(a)
+    b = params.beta - a * stats.mean
+    return a, b

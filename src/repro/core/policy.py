@@ -1,0 +1,198 @@
+"""Quantization policy: which tensors get LUT-Q, with which spec.
+
+Walks a parameter pytree, converts eligible kernel leaves to
+:class:`LutqState` (per-tensor dictionary; stacked leading axes — e.g.
+scan-over-layers or MoE experts — get per-slice dictionaries via vmap),
+and provides the step-4 k-means refresh over a whole tree.
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lutq import LutqState, init_state, update_state
+from repro.core.spec import QuantSpec
+from repro.nn.tree import map_with_path, tree_paths
+
+# Parameters that never get quantized regardless of size (norm gains,
+# biases, routers, decay/bonus vectors, conv states...). The paper
+# quantizes affine/convolution *weights* only.
+_EXCLUDE = re.compile(
+    r"(bias|scale|ln|norm|router|A_log|dt_bias|^D$|w0|^u$|mix_|conv_b|gamma|beta)"
+)
+
+
+def default_predicate(path: Tuple[str, ...], leaf) -> bool:
+    name = path[-1] if path else ""
+    joined = "/".join(path)
+    if _EXCLUDE.search(name) or _EXCLUDE.search(joined.split("/")[-1]):
+        return False
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    return True
+
+
+# Logical axis names that index *independent tensors* (each gets its own
+# LUT-Q dictionary): scan-over-layers stacks and MoE experts.
+STACK_AXES = frozenset({"layer", "super", "inner", "expert"})
+
+
+def _stacked_dims(path: Tuple[str, ...], leaf, axes=None) -> int:
+    """Leading axes that index independent tensors (layer stack, experts).
+
+    When the logical-axes tuple for this leaf is available we count its
+    leading STACK_AXES names (exact); otherwise fall back to ndim-2 with
+    a conv (HWIO, path-unstacked) exception.
+    """
+    if axes is not None:
+        n = 0
+        for name in axes:
+            if name in STACK_AXES:
+                n += 1
+            else:
+                break
+        return n
+    if path and path[-1] == "kernel" and leaf.ndim == 4:
+        return 0  # conv HWIO
+    return max(0, leaf.ndim - 2)
+
+
+def _vmapped(fn, n: int):
+    for _ in range(n):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def quantize_tree(params, spec: QuantSpec, predicate: Callable = default_predicate,
+                  axes=None):
+    """Convert eligible leaves to LutqState (per-slice dictionaries).
+
+    ``axes``: optional logical-axes tree (as returned by model init) used
+    to identify stack axes exactly.
+    """
+
+    def lookup_axes(path):
+        node = axes
+        for k in path:
+            if not isinstance(node, dict) or k not in node:
+                return None
+            node = node[k]
+        return node if isinstance(node, (tuple, list)) else None
+
+    def convert(path, leaf):
+        if isinstance(leaf, LutqState) or not predicate(path, leaf):
+            return leaf
+        if leaf.size < spec.min_size:
+            return leaf
+        nstack = _stacked_dims(path, leaf, lookup_axes(path))
+        f = _vmapped(lambda w: init_state(w, spec), nstack)
+        return f(leaf)
+
+    return map_with_path(convert, params)
+
+
+def kmeans_tree(params, spec: QuantSpec):
+    """Paper step 4 over every quantized leaf in the tree."""
+
+    def refresh(path, leaf):
+        if not isinstance(leaf, LutqState):
+            return leaf
+        nstack = leaf.d.ndim - 1
+        f = _vmapped(lambda s: update_state(s, spec), nstack)
+        return f(leaf)
+
+    return map_with_path(refresh, params)
+
+
+def dequantize_tree(params):
+    """Replace each LutqState by its decoded weights (deployment export)."""
+    from repro.core.lutq import decode_any
+
+    def conv(path, leaf):
+        if isinstance(leaf, LutqState):
+            return decode_any(leaf.d, leaf.a)
+        return leaf
+
+    return map_with_path(conv, params)
+
+
+def split_trainable(params):
+    """Split a params tree into (trainable, static).
+
+    LutqState leaves contribute their full-precision master ``w`` to the
+    trainable tree; dictionary + assignments (and any integer/bool leaf)
+    go to the static tree. ``merge_trainable`` reassembles. This is how
+    train steps differentiate only the paper's W (step 3) while (d, A)
+    are refreshed by k-means (step 4).
+    """
+
+    def split(path, leaf):
+        if isinstance(leaf, LutqState):
+            return leaf.w, {"__lutq_d": leaf.d, "__lutq_a": leaf.a}
+        if leaf is not None and hasattr(leaf, "dtype") and not jnp.issubdtype(
+                leaf.dtype, jnp.inexact):
+            return None, {"__static": leaf}
+        return leaf, None
+
+    trainable = map_with_path(lambda p, l: split(p, l)[0], params)
+    static = map_with_path(lambda p, l: split(p, l)[1], params)
+    return trainable, static
+
+
+def merge_trainable(trainable, static):
+    def merge(t, s):
+        if isinstance(s, dict) and "__lutq_d" in s:
+            return LutqState(w=t, d=s["__lutq_d"], a=s["__lutq_a"])
+        if isinstance(s, dict) and "__static" in s:
+            return s["__static"]
+        if isinstance(t, dict):
+            return {k: merge(t[k], s[k] if s is not None else None) for k in t}
+        return t
+
+    return merge(trainable, static)
+
+
+def serve_view(params, *, pack4: bool = False):
+    """Deployment form: drop the full-precision masters, keep (d, A).
+
+    This is the paper's memory claim made literal — the served model's
+    weight storage is K floats + N indices per tensor. With
+    ``pack4=True`` (K <= 16 only) two 4-bit indices pack per byte along
+    the last axis (convention: uint8 dtype == packed; int8 == raw), so
+    HBM weight traffic at decode is N/2 bytes — the beyond-paper §Perf
+    lever matching the Pallas ``lutq_gemv_packed`` kernel layout.
+    """
+
+    def conv(path, leaf):
+        if isinstance(leaf, LutqState):
+            a = leaf.a
+            if pack4 and leaf.d.shape[-1] <= 16 and a.shape[-1] % 2 == 0:
+                lo = a[..., 0::2].astype(jnp.uint8) & 0xF
+                hi = a[..., 1::2].astype(jnp.uint8) & 0xF
+                a = (lo | (hi << 4)).astype(jnp.uint8)
+            return LutqState(w=None, d=leaf.d, a=a)
+        return leaf
+
+    return map_with_path(conv, params)
+
+
+def unpack4_last(a: jax.Array) -> jax.Array:
+    """Inverse of serve_view(pack4=True): uint8 pairs -> int8 indices."""
+    lo = (a & 0xF).astype(jnp.int8)
+    hi = ((a >> 4) & 0xF).astype(jnp.int8)
+    return jnp.stack([lo, hi], axis=-1).reshape(*a.shape[:-1], a.shape[-1] * 2)
+
+
+def quantized_fraction(params) -> float:
+    """Fraction of parameters covered by LUT-Q (for reporting)."""
+    q = t = 0
+    for _, leaf in tree_paths(params):
+        if isinstance(leaf, LutqState):
+            q += leaf.w.size
+            t += leaf.w.size
+        elif leaf is not None and hasattr(leaf, "size"):
+            t += leaf.size
+    return q / max(t, 1)

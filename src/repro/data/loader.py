@@ -1,0 +1,51 @@
+"""Prefetching loader: overlaps host-side batch assembly with device compute."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator
+
+import numpy as np
+
+
+class Prefetcher:
+    """Pulls batches from `make_batch(step)` on a background thread.
+
+    Deterministic: batch for step s is always make_batch(s), whatever the
+    prefetch depth — safe to resume after checkpoint restore by starting
+    at the restored step.
+    """
+
+    def __init__(self, make_batch: Callable[[int], Dict[str, np.ndarray]],
+                 start_step: int = 0, depth: int = 2):
+        self._make = make_batch
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        s = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((s, self._make(s)), timeout=0.2)
+                s += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

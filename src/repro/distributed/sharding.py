@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model init returns a tree of *logical* axis names per array dim; this
+module maps them onto mesh axes, with automatic divisibility fallback
+(an axis whose dim doesn't divide the mesh axis size is replicated
+rather than failing — e.g. 8 KV heads on a 16-way model axis shard via
+the flattened feature dim instead).
+
+Default physical mapping:
+    batch            -> ("pod", "data")   [data parallel]
+    embed            -> "data"            [FSDP / ZeRO-3 weight shard]
+    heads/kv_heads/mlp/moe_mlp/vocab/kv_lora -> "model"  [tensor parallel]
+    expert           -> "model"           [expert parallel]
+    layer/super/inner-> None              [scan axes]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.lutq import LutqState
+from repro.nn.tree import map_with_path
+
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    # per-expert FFN dim stays local: "expert" already takes the model
+    # axis for MoE kernels (expert parallelism)
+    "moe_mlp": (),
+    # vocab_in = embedding table's vocab dim: kept unsharded so the token
+    # gather needs no cross-device resharding (SPMD full-remat trap);
+    # vocab = lm_head output dim: model-sharded (matmul-friendly).
+    "vocab": ("model",),
+    "vocab_in": (),
+    # MLA latent dim stays local; its up-projections shard on heads
+    "kv_lora": (),
+    "expert": ("model",),
+    "layer": (),
+    "super": (),
+    "inner": (),
+}
+
+
+def _axes_for(name: Optional[str], mesh: Mesh):
+    if name is None:
+        return None
+    cands = [a for a in LOGICAL_RULES.get(name, ()) if a in mesh.axis_names]
+    if not cands:
+        return None
+    return tuple(cands) if len(cands) > 1 else cands[0]
+
+
+def pspec_for(logical: Tuple[Optional[str], ...], mesh: Mesh,
+              shape: Optional[Tuple[int, ...]] = None) -> P:
+    """PartitionSpec for one array. Drops axes that don't divide and
+    never maps one mesh axis twice in a single spec."""
+    parts = []
+    used: set = set()
+    for i, name in enumerate(logical):
+        ax = _axes_for(name, mesh)
+        if ax is not None:
+            ax_tuple = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in ax_tuple):
+                ax = None
+        if ax is not None and shape is not None:
+            ax_tuple = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+            if shape[i] % size != 0:
+                ax = None
+        if ax is not None:
+            used.update(ax if isinstance(ax, tuple) else (ax,))
+        parts.append(ax)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None):
+    """Build a PartitionSpec tree parallel to the params tree.
+
+    LutqState leaves: w and a use the weight's spec; the dictionary d is
+    sharded only along its stack axes (the K axis is tiny/replicated).
+    """
+
+    def lookup_shape(path):
+        node = shapes_tree
+        if node is None:
+            return None
+        for k in path:
+            if not isinstance(node, dict) or k not in node:
+                return None
+            node = node[k]
+        return node
+
+    def build(path, logical):
+        shp = lookup_shape(path)
+        if isinstance(shp, LutqState) or (shp is not None and hasattr(shp, "w")):
+            # serve_view drops w; assignments mirror the weight shape
+            wshape = (shp.w if shp.w is not None else shp.a).shape
+            wspec = pspec_for(tuple(logical), mesh, wshape)
+            # d: (stack..., K) — shard stack axes like w, replicate K
+            nstack = shp.d.ndim - 1
+            dspec = P(*([wspec[i] if i < len(wspec) else None
+                         for i in range(nstack)] + [None])) if nstack else P()
+            return LutqState(w=wspec, d=dspec, a=wspec)
+        shape = getattr(shp, "shape", None)
+        return pspec_for(tuple(logical), mesh, shape)
+
+    return map_with_path(build, axes_tree)
+
+
+def shard_tree(tree, pspecs, mesh: Mesh):
+    """device_put every leaf with its NamedSharding."""
+
+    def put(x, spec):
+        if x is None:
+            return None
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, pspecs,
+                        is_leaf=lambda x: x is None)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def _ambient_axes():
+    """Axis names of whatever mesh is in context (jit or Mesh ctx)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if not am.empty:
+            return set(am.axis_names)
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        from jax._src import mesh as _mesh_mod
+        pm = _mesh_mod.thread_resources.env.physical_mesh
+        if pm.axis_names:
+            return set(pm.axis_names)
+    except Exception:  # noqa: BLE001
+        pass
+    return set()
+
+
+def constrain(x, parts):
+    """Best-effort ``with_sharding_constraint``: drops axis names absent
+    from the ambient mesh and becomes a no-op when there is no mesh —
+    safe to call from model code that also runs un-meshed on CPU.
+
+    Used at resharding cliffs (embedding gather output, logits) where
+    SPMD otherwise falls back to replicate-then-repartition.
+    """
+    axes = _ambient_axes()
+    if not axes:
+        return x
+    def keep(p):
+        if p is None:
+            return None
+        t = p if isinstance(p, tuple) else (p,)
+        t = tuple(a for a in t if a in axes)
+        if not t:
+            return None
+        return t if len(t) > 1 else t[0]
+    spec = P(*[keep(p) for p in parts])
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:  # noqa: BLE001 — best effort
+        return x

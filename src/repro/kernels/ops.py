@@ -1,0 +1,47 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+so the same call sites work in tests and production.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_tpu import kmeans_stats as _kmeans_stats
+from repro.kernels.lutq_gemv_packed import lutq_gemv_packed as _gemv_packed
+from repro.kernels.lutq_matmul import lutq_matmul as _lutq_matmul
+from repro.kernels.ref import pack4, unpack4  # re-export for callers
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def lutq_matmul(x, a, d, *, bm=256, bn=256, bk=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _lutq_matmul(x, a, d, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def lutq_gemv_packed(x, packed, d, *, bn=256, bk=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gemv_packed(x, packed, d, bn=bn, bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def kmeans_stats(w, d, *, bn=4096, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _kmeans_stats(w, d, bn=bn, interpret=interpret)
+
+
+def kmeans_step_fused(w_flat, d, *, bn=4096, interpret=None):
+    """One full k-means iteration via the Pallas stats kernel: assign +
+    recenter (empty clusters keep their centroid). Drop-in for the inner
+    loop of repro.core.lutq.kmeans_update."""
+    a, sums, counts = kmeans_stats(w_flat, d, bn=bn, interpret=interpret)
+    new_d = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), d)
+    return a, jnp.sort(new_d)

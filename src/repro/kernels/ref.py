@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lutq_matmul_ref(x: jax.Array, a: jax.Array, d: jax.Array) -> jax.Array:
+    """y = x @ d[a]. x: (M, Kin) f32/bf16; a: (Kin, N) int8; d: (K,)."""
+    w = jnp.take(d, a.astype(jnp.int32), axis=0).astype(x.dtype)
+    return (x @ w).astype(jnp.float32)
+
+
+def pack4(a: jax.Array) -> jax.Array:
+    """Pack two 4-bit indices per int8 byte along axis 0 (row pairs)."""
+    assert a.shape[0] % 2 == 0
+    lo = a[0::2].astype(jnp.uint8)
+    hi = a[1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack4(p: jax.Array) -> jax.Array:
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=1)  # (Kin/2, 2, N)
+    return out.reshape(p.shape[0] * 2, *p.shape[1:])
+
+
+def lutq_gemv_packed_ref(x: jax.Array, packed: jax.Array, d: jax.Array) -> jax.Array:
+    """y = x @ d[unpack(packed)]. x: (B, Kin); packed: (Kin/2, N) uint8."""
+    a = unpack4(packed)
+    w = jnp.take(d, a.astype(jnp.int32), axis=0).astype(x.dtype)
+    return (x @ w).astype(jnp.float32)
+
+
+def kmeans_stats_ref(w: jax.Array, d: jax.Array):
+    """One assignment pass over flat w vs sorted d.
+
+    Returns (assignments int8 (N,), sums (K,) f32, counts (K,) f32).
+    """
+    mid = (d[:-1] + d[1:]) * 0.5
+    a = jnp.searchsorted(mid, w.astype(d.dtype), side="left")
+    K = d.shape[0]
+    onehot = jax.nn.one_hot(a, K, dtype=jnp.float32)
+    return (a.astype(jnp.int8), onehot.T @ w.astype(jnp.float32),
+            onehot.sum(axis=0))

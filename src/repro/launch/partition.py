@@ -1,0 +1,164 @@
+"""Sharding assembly for the full train/serve states.
+
+Maps the model's logical-axes tree + structural knowledge of the cache
+trees onto concrete NamedShardings for every jit boundary the launcher
+lowers: train_step(state, batch), prefill(params, batch),
+decode_step(params, token, cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.lutq import LutqState
+from repro.distributed.sharding import batch_pspec, pspec_for, tree_pspecs
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0 and dim >= size
+
+
+def params_shardings(axes_tree, params_struct, mesh: Mesh):
+    pspecs = tree_pspecs(axes_tree, mesh, params_struct)
+    return jax.tree.map(lambda s: _named(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mirror_split(pspecs, struct):
+    """Split a params pspec tree the way split_trainable splits params."""
+    import jax.numpy as jnp
+
+    def walk(ps, st):
+        if isinstance(st, LutqState):
+            return ps.w, {"__lutq_d": ps.d, "__lutq_a": ps.a}
+        if isinstance(st, dict):
+            pairs = {k: walk(ps[k], st[k]) for k in st}
+            return ({k: v[0] for k, v in pairs.items()},
+                    {k: v[1] for k, v in pairs.items()})
+        if st is None:
+            return None, None
+        if not jnp.issubdtype(st.dtype, jnp.inexact):
+            return None, {"__static": ps}
+        return ps, None
+
+    return walk(pspecs, struct)
+
+
+def train_state_shardings(axes_tree, params_struct, state_struct, mesh: Mesh):
+    """Shardings for {"trainable","static","opt_state","step"}."""
+    pspecs = tree_pspecs(axes_tree, mesh, params_struct)
+    t_spec, s_spec = _mirror_split(pspecs, params_struct)
+
+    def like_trainable(opt_struct):
+        # opt entries ("m", "v") mirror the trainable tree exactly
+        return {k: t_spec for k in opt_struct}
+
+    spec_tree = {
+        "trainable": t_spec,
+        "static": s_spec,
+        "opt_state": like_trainable(state_struct["opt_state"]),
+        "step": P(),
+    }
+
+    def to_sharding(spec, st):
+        if st is None:
+            return None
+        return _named(mesh, spec if spec is not None else P())
+
+    return jax.tree.map(to_sharding, spec_tree, state_struct,
+                        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def data_batch_shardings(batch_struct, mesh: Mesh):
+    dp = _dp_axes(mesh)
+    spec_dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(x):
+        parts = [None] * x.ndim
+        if x.ndim >= 1 and _fits(x.shape[0], mesh, spec_dp):
+            parts[0] = spec_dp
+        if x.ndim == 3 and _fits(x.shape[-1], mesh, "model"):
+            parts[-1] = "model"  # frames/prefix embeddings: shard feature dim
+        return _named(mesh, P(*parts))
+
+    return jax.tree.map(one, batch_struct)
+
+
+_SEQ_CACHE_KEYS = {"k", "v", "xk", "xv", "c_kv", "k_rope"}
+_SEQ_SCALE_KEYS = {"k_scale", "v_scale"}
+_STATE_CACHE_KEYS = {"ssm", "wkv"}
+
+
+def cache_shardings(cache_struct, mesh: Mesh):
+    """Decode-cache shardings.
+
+    Sequence-major caches (KV, MLA latents) shard batch on DP and the
+    sequence dim on "model" (context parallel: 8 kv-heads don't divide a
+    16-way model axis, the 32k/524k sequence always does). O(1) SSM/WKV
+    states shard batch on DP and heads/features on "model".
+    """
+    dp = _dp_axes(mesh)
+    spec_dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def walk(path, x):
+        if x is None:
+            return None
+        name = path[-1]
+        parts = [None] * x.ndim
+        if name in _SEQ_CACHE_KEYS or name in _SEQ_SCALE_KEYS:
+            # (..., B, S, ...) — B at ndim-3 or ndim-4 depending on rank
+            b_idx = x.ndim - (4 if name in ("k", "v", "xk", "xv") else 3)
+            s_idx = b_idx + 1
+            if _fits(x.shape[b_idx], mesh, spec_dp):
+                parts[b_idx] = spec_dp
+            if _fits(x.shape[s_idx], mesh, "model"):
+                parts[s_idx] = "model"
+        elif name in _STATE_CACHE_KEYS:
+            b_idx = x.ndim - 4
+            h_idx = b_idx + 1
+            if _fits(x.shape[b_idx], mesh, spec_dp):
+                parts[b_idx] = spec_dp
+            if _fits(x.shape[h_idx], mesh, "model"):
+                parts[h_idx] = "model"
+        elif name in ("shift_t", "shift_c"):
+            b_idx = x.ndim - 3
+            if _fits(x.shape[b_idx], mesh, spec_dp):
+                parts[b_idx] = spec_dp
+            if _fits(x.shape[-1], mesh, "model"):
+                parts[-1] = "model"
+        elif name == "conv":
+            b_idx = x.ndim - 3
+            if _fits(x.shape[b_idx], mesh, spec_dp):
+                parts[b_idx] = spec_dp
+            if _fits(x.shape[-1], mesh, "model"):
+                parts[-1] = "model"
+        elif name == "len":
+            pass
+        return _named(mesh, P(*parts))
+
+    from repro.nn.tree import map_with_path
+    return map_with_path(walk, cache_struct)
+
+
+def token_shardings(token_struct, mesh: Mesh):
+    dp = _dp_axes(mesh)
+    spec_dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    parts = [None] * token_struct.ndim
+    if _fits(token_struct.shape[0], mesh, spec_dp):
+        parts[0] = spec_dp
+    return _named(mesh, P(*parts))

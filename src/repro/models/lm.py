@@ -1,0 +1,423 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbones).
+
+Assembled from the nn layer library with scan-over-layers (stacked
+params) so HLO size and compile time are O(1) in depth. Every projection
+kernel and the embedding table are LUT-Q quantizable via the policy in
+``repro.core.policy``; activation fake-quant (paper: uniform 8-bit) is
+applied at the input of each quantized matmul.
+
+Three entry points per the launch shapes:
+  lm_loss         -> train_4k       (next-token CE, full seq)
+  lm_prefill      -> prefill_32k    (builds the KV cache)
+  lm_decode_step  -> decode_32k / long_500k (one token vs. cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.actquant import fake_quant
+from repro.models.config import ModelConfig
+from repro.nn.attention import decode_attention, flash_attention
+from repro.nn.linear import (
+    embedding_apply,
+    embedding_init,
+    embedding_logits,
+    linear_apply,
+    linear_init,
+)
+from repro.nn.mla import mla_decode, mla_forward, mla_init
+from repro.nn.moe import moe_apply, moe_init
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init
+from repro.nn.rotary import apply_rope
+from repro.nn.tree import rng_stream
+
+
+def _aq(x, cfg: ModelConfig):
+    return fake_quant(x, cfg.act_bits) if cfg.act_bits < 32 else x
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block (GQA / SWA / qk-norm / bias); MLA handled separately
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    rs = rng_stream(key)
+    dh = cfg.resolved_head_dim
+    p, ax = {}, {}
+    p["q"], ax["q"] = linear_init(next(rs), cfg.d_model, cfg.n_heads * dh,
+                                  bias=cfg.qkv_bias, axes=("embed", "heads"))
+    p["k"], ax["k"] = linear_init(next(rs), cfg.d_model, cfg.n_kv_heads * dh,
+                                  bias=cfg.qkv_bias, axes=("embed", "kv_heads"))
+    p["v"], ax["v"] = linear_init(next(rs), cfg.d_model, cfg.n_kv_heads * dh,
+                                  bias=cfg.qkv_bias, axes=("embed", "kv_heads"))
+    p["o"], ax["o"] = linear_init(next(rs), cfg.n_heads * dh, cfg.d_model,
+                                  axes=("heads", "embed"))
+    if cfg.use_qk_norm:
+        p["q_norm"], ax["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"], ax["k_norm"] = rmsnorm_init(dh)
+    return p, ax
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    x = _aq(x, cfg)
+    q = linear_apply(p["q"], x).reshape(B, S, cfg.n_heads, dh)
+    k = linear_apply(p["k"], x).reshape(B, S, cfg.n_kv_heads, dh)
+    v = linear_apply(p["v"], x).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.use_qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, cfg: ModelConfig, x, positions, *, prefix=None):
+    """Training/prefill attention. Returns (out, {"k","v"})."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = flash_attention(
+        q, k, v, causal=True, window=cfg.window, prefix=prefix,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    out = linear_apply(p["o"], _aq(o.reshape(B, S, -1), cfg))
+    return out, {"k": k, "v": v}
+
+
+def _kv_quant(t, bits):
+    """Per-(batch,pos,head) symmetric int8 quant of one new KV entry."""
+    amax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.bfloat16)
+
+
+def attn_decode(p, cfg: ModelConfig, x, cache, cache_len):
+    """One-token decode. With SWA the cache is a ring buffer of width
+    `window` (slot = position % window) — O(window) memory at any context
+    length, which is what makes danube's long_500k cell runnable.
+
+    With ``kv_cache_bits=8`` the cache holds int8 KV + per-entry bf16
+    scales: decode is HBM-bound on cache reads, so this halves the
+    dominant roofline term (§Perf cell C) — the paper's 8-bit-activation
+    policy applied to the KV cache."""
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,)).reshape(B, 1)
+    q, k, v = _qkv(p, cfg, x, pos)
+    idx = pos[:, 0]
+    eff = cache["k"].shape[1]
+    quant = cfg.kv_cache_bits == 8
+    if quant:
+        k, k_s = _kv_quant(k, 8)
+        v, v_s = _kv_quant(v, 8)
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))
+    ring = cfg.window is not None and eff <= cfg.window
+    slot = idx % eff if ring else idx
+    kc = upd(cache["k"], k, slot)
+    vc = upd(cache["v"], v, slot)
+    new_cache = {"k": kc, "v": vc}
+    if quant:
+        ks = upd(cache["k_scale"], k_s, slot)
+        vs = upd(cache["v_scale"], v_s, slot)
+        new_cache.update(k_scale=ks, v_scale=vs)
+        kc = kc.astype(jnp.bfloat16) * ks[..., None]
+        vc = vc.astype(jnp.bfloat16) * vs[..., None]
+    if ring:
+        filled = jnp.minimum(idx + 1, eff)
+        o = decode_attention(q, kc, vc, filled)  # all filled ring slots live
+    else:
+        o = decode_attention(q, kc, vc, idx + 1, window=cfg.window)
+    out = linear_apply(p["o"], _aq(o.reshape(B, 1, -1), cfg))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP / layer
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    rs = rng_stream(key)
+    d_ff = d_ff or cfg.d_ff
+    p, ax = {}, {}
+    p["wi"], ax["wi"] = linear_init(next(rs), cfg.d_model, d_ff, axes=("embed", "mlp"))
+    p["wg"], ax["wg"] = linear_init(next(rs), cfg.d_model, d_ff, axes=("embed", "mlp"))
+    p["wo"], ax["wo"] = linear_init(next(rs), d_ff, cfg.d_model, axes=("mlp", "embed"))
+    return p, ax
+
+
+def mlp_apply(p, cfg: ModelConfig, x):
+    x = _aq(x, cfg)
+    h = linear_apply(p["wi"], x) * jax.nn.silu(linear_apply(p["wg"], x))
+    return linear_apply(p["wo"], _aq(h, cfg))
+
+
+def layer_init(key, cfg: ModelConfig, *, moe: bool):
+    rs = rng_stream(key)
+    p, ax = {}, {}
+    p["ln1"], ax["ln1"] = rmsnorm_init(cfg.d_model)
+    p["ln2"], ax["ln2"] = rmsnorm_init(cfg.d_model)
+    if cfg.use_mla:
+        p["attn"], ax["attn"] = mla_init(
+            next(rs), cfg.d_model, cfg.n_heads, kv_lora=cfg.kv_lora,
+            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head)
+    else:
+        p["attn"], ax["attn"] = attn_init(next(rs), cfg)
+    if moe:
+        p["moe"], ax["moe"] = moe_init(
+            next(rs), cfg.d_model, cfg.d_ff, cfg.n_experts,
+            n_shared=cfg.n_shared_experts, d_ff_shared=cfg.d_ff_shared)
+    else:
+        p["mlp"], ax["mlp"] = mlp_init(key=next(rs), cfg=cfg,
+                                       d_ff=cfg.d_ff if cfg.n_experts == 0 else None)
+    return p, ax
+
+
+def layer_forward(p, cfg: ModelConfig, h, positions, *, prefix=None):
+    """Returns (h, cache, aux_loss)."""
+    a_in = rmsnorm_apply(p["ln1"], h)
+    if cfg.use_mla:
+        a_out, cache = mla_forward(
+            p["attn"], a_in, positions, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
+            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head)
+    else:
+        a_out, cache = attn_forward(p["attn"], cfg, a_in, positions, prefix=prefix)
+    h = h + a_out
+    m_in = rmsnorm_apply(p["ln2"], h)
+    if "moe" in p:
+        m_out, aux = moe_apply(p["moe"], m_in, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+    else:
+        m_out, aux = mlp_apply(p["mlp"], cfg, m_in), jnp.zeros((), jnp.float32)
+    return h + m_out, cache, aux
+
+
+def layer_decode(p, cfg: ModelConfig, h, cache, cache_len):
+    a_in = rmsnorm_apply(p["ln1"], h)
+    if cfg.use_mla:
+        a_out, new_cache = mla_decode(
+            p["attn"], a_in, cache, cache_len, n_heads=cfg.n_heads,
+            kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
+            v_head=cfg.v_head)
+    else:
+        a_out, new_cache = attn_decode(p["attn"], cfg, a_in, cache, cache_len)
+    h = h + a_out
+    m_in = rmsnorm_apply(p["ln2"], h)
+    if "moe" in p:
+        m_out, _ = moe_apply(p["moe"], m_in, top_k=cfg.top_k,
+                             capacity_factor=max(cfg.capacity_factor, 2.0))
+    else:
+        m_out = mlp_apply(p["mlp"], cfg, m_in)
+    return h + m_out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _prepend_layer_axis(ax):
+    if isinstance(ax, dict):
+        return {k: _prepend_layer_axis(v) for k, v in ax.items()}
+    return ("layer",) + tuple(ax)
+
+
+def init_lm(key, cfg: ModelConfig):
+    rs = rng_stream(key)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embedding_init(next(rs), cfg.vocab, cfg.d_model)
+    n_scan = cfg.n_layers - cfg.first_dense
+    moe = cfg.n_experts > 0
+
+    if cfg.first_dense:
+        sub_p, sub_a = {}, {}
+        for i in range(cfg.first_dense):
+            sub_p[str(i)], sub_a[str(i)] = layer_init(next(rs), cfg, moe=False)
+        params["prefix_layers"], axes["prefix_layers"] = sub_p, sub_a
+
+    keys = jax.random.split(next(rs), n_scan)
+    captured = {}
+
+    def only_params(k):
+        p, a = layer_init(k, cfg, moe=moe)
+        captured["axes"] = a  # metadata identical across layers
+        return p
+
+    params["layers"] = jax.vmap(only_params)(keys)
+    axes["layers"] = _prepend_layer_axis(captured["axes"])
+
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"], axes["lm_head"] = linear_init(
+            next(rs), cfg.d_model, cfg.vocab, axes=("embed", "vocab"))
+    return params, axes
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    from repro.distributed.sharding import constrain
+    h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype)
+    h = h * (cfg.d_model ** 0.5)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(cfg.dtype), h], axis=1)
+    # pin the gather output to batch-sharded before the layer stack —
+    # avoids SPMD's replicate-then-repartition fallback at the gather
+    return constrain(h, (("pod", "data"), None, None))
+
+
+def _readout(params, cfg: ModelConfig, h):
+    from repro.distributed.sharding import constrain
+    h = rmsnorm_apply(params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = embedding_logits(params["embed"], h)
+    else:
+        logits = linear_apply(params["lm_head"], h)
+    # vocab-shard the logits (softmax/CE partition fine over a sharded
+    # vocab); crucial for tied embeddings whose table keeps vocab
+    # unsharded for gather friendliness
+    return constrain(logits, (("pod", "data"), None, "model"))
+
+
+def remat_wrap(body, cfg: ModelConfig):
+    """Apply the config's remat policy to a scan body.
+
+    'full': recompute everything in backward (min memory, +1x fwd FLOPs);
+    'dots': save matmul outputs, recompute elementwise only (§Perf cell A
+    — cuts the 4x-fwd train FLOP factor to ~3x for matmul-dominated
+    layers at the cost of storing per-layer dot outputs);
+    'none': no remat (store everything)."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _scan_layers(params, cfg: ModelConfig, h, positions, prefix=None,
+                 want_cache: bool = False):
+    """Returns (h, stacked_cache | None, total_aux)."""
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, cache, a = layer_forward(layer_p, cfg, h, positions, prefix=prefix)
+        return (h, aux + a), (cache if want_cache else None)
+
+    body_fn = remat_wrap(body, cfg)
+    (h, aux), caches = jax.lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                                    params["layers"])
+    return h, caches, aux
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None):
+    """Full forward -> (logits, aux). tokens: (B, S_text)."""
+    prefix = cfg.n_prefix_tokens if prefix_embeds is not None else None
+    h = _embed_tokens(params, cfg, tokens, prefix_embeds)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.first_dense:
+        for i in range(cfg.first_dense):
+            h, _, a = layer_forward(params["prefix_layers"][str(i)], cfg, h,
+                                    positions, prefix=prefix)
+            aux_total += a
+    h, _, aux = _scan_layers(params, cfg, h, positions, prefix=prefix)
+    return _readout(params, cfg, h), aux_total + aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            *, aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE. batch: tokens (B,S), labels (B,S) with -100 = ignore,
+    optional prefix_embeds (B,P,D)."""
+    logits, aux = lm_forward(params, cfg, batch["tokens"],
+                             prefix_embeds=batch.get("prefix_embeds"))
+    labels = batch["labels"]
+    if cfg.n_prefix_tokens and "prefix_embeds" in batch:
+        logits = logits[:, cfg.n_prefix_tokens:]
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = ce.sum() / ntok
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "ntok": ntok}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked decode cache for the scanned layers (+ per-prefix-layer)."""
+    n_scan = cfg.n_layers - cfg.first_dense
+    dh = cfg.resolved_head_dim
+    if cfg.use_mla:
+        one = {
+            "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora), cfg.dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope), cfg.dtype),
+        }
+    else:
+        eff = min(max_len, cfg.window) if cfg.window else max_len
+        kv_dt = jnp.int8 if cfg.kv_cache_bits == 8 else cfg.dtype
+        one = {
+            "k": jnp.zeros((batch, eff, cfg.n_kv_heads, dh), kv_dt),
+            "v": jnp.zeros((batch, eff, cfg.n_kv_heads, dh), kv_dt),
+        }
+        if cfg.kv_cache_bits == 8:
+            one["k_scale"] = jnp.zeros((batch, eff, cfg.n_kv_heads), jnp.bfloat16)
+            one["v_scale"] = jnp.zeros((batch, eff, cfg.n_kv_heads), jnp.bfloat16)
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape), one)
+    out = {"layers": stacked, "len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.first_dense:
+        out["prefix_layers"] = {str(i): jax.tree.map(jnp.copy, one)
+                                for i in range(cfg.first_dense)}
+    return out
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, *, prefix_embeds=None):
+    """Run the full prompt, return (last_logits, cache)."""
+    prefix = cfg.n_prefix_tokens if prefix_embeds is not None else None
+    h = _embed_tokens(params, cfg, tokens, prefix_embeds)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+    cache: Dict[str, Any] = {"len": jnp.full((B,), S, jnp.int32)}
+    if cfg.first_dense:
+        pc = {}
+        for i in range(cfg.first_dense):
+            h, c, _ = layer_forward(params["prefix_layers"][str(i)], cfg, h,
+                                    positions, prefix=prefix)
+            pc[str(i)] = c
+        cache["prefix_layers"] = pc
+    h, caches, _ = _scan_layers(params, cfg, h, positions, prefix=prefix,
+                                want_cache=True)
+    cache["layers"] = caches
+    logits = _readout(params, cfg, h[:, -1:])
+    return logits, cache
+
+
+def lm_decode_step(params, cfg: ModelConfig, token, cache):
+    """token: (B,1) -> (logits (B,1,V), new cache)."""
+    h = _embed_tokens(params, cfg, token)
+    cache_len = cache["len"]
+    if cfg.first_dense:
+        new_pc = {}
+        for i in range(cfg.first_dense):
+            h, c = layer_decode(params["prefix_layers"][str(i)], cfg, h,
+                                cache["prefix_layers"][str(i)], cache_len)
+            new_pc[str(i)] = c
+    def body(h, xs):
+        layer_p, layer_c = xs
+        h, new_c = layer_decode(layer_p, cfg, h, layer_c, cache_len)
+        return h, new_c
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+    logits = _readout(params, cfg, h)
+    out = {"layers": new_caches, "len": cache_len + 1}
+    if cfg.first_dense:
+        out["prefix_layers"] = new_pc
+    return logits, out

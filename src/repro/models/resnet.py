@@ -1,0 +1,182 @@
+"""ResNets: the paper's reference networks.
+
+Two roles:
+  * analytic layer inventories for ResNet-18/34/50 (ImageNet) — drive the
+    Table 2 memory/multiplication reproduction (97.5 MB -> 7.4 MB claim);
+  * a trainable ResNet-20-style CIFAR CNN (LUT-Q aware convs, standard
+    or multiplier-less BN, optional 8-bit activations) for the CIFAR-10
+    quality-table and Fig. 2 pruning experiments at CPU scale.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.actquant import relu_fake_quant
+from repro.core.mlbn import BNParams, BNStats, batch_norm, init_bn
+from repro.models.config import ModelConfig  # noqa: F401  (API parity)
+from repro.nn.conv import conv_apply, conv_init
+from repro.nn.tree import rng_stream
+
+
+# ---------------------------------------------------------------------------
+# analytic ImageNet ResNet inventories
+# ---------------------------------------------------------------------------
+
+def _basic_block(cin, cout, stride):
+    layers = [("conv1", 3 * 3 * cin * cout), ("conv2", 3 * 3 * cout * cout)]
+    if stride != 1 or cin != cout:
+        layers.append(("down", 1 * 1 * cin * cout))
+    return layers
+
+
+def _bottleneck(cin, cmid, stride):
+    cout = cmid * 4
+    layers = [("conv1", 1 * 1 * cin * cmid), ("conv2", 3 * 3 * cmid * cmid),
+              ("conv3", 1 * 1 * cmid * cout)]
+    if stride != 1 or cin != cout:
+        layers.append(("down", 1 * 1 * cin * cout))
+    return layers
+
+
+def resnet_layer_sizes(depth: int) -> List[Tuple[str, int]]:
+    """(name, n_params) for every conv/fc weight tensor (ImageNet)."""
+    cfgs = {18: ([2, 2, 2, 2], _basic_block, 1),
+            34: ([3, 4, 6, 3], _basic_block, 1),
+            50: ([3, 4, 6, 3], _bottleneck, 4)}
+    blocks, mk, expansion = cfgs[depth]
+    sizes = [("stem", 7 * 7 * 3 * 64)]
+    cin = 64
+    for stage, (n, cbase) in enumerate(zip(blocks, [64, 128, 256, 512])):
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            ls = mk(cin, cbase, stride)
+            sizes += [(f"s{stage}b{b}_{n0}", p) for n0, p in ls]
+            cin = cbase * expansion
+    sizes.append(("fc", cin * 1000))
+    return sizes
+
+
+def resnet_activation_elems(depth: int, res: int = 224) -> int:
+    """Peak live activation elements at inference, batch 1.
+
+    Residual blocks need the block input + the working tensor alive
+    simultaneously -> 2x the largest feature map (post-stem 64 x 112^2).
+    """
+    return 2 * 64 * (res // 2) ** 2
+
+
+def _conv_inventory(depth: int, res: int = 224):
+    """Yield (cin, cout, k, hw_out) for every conv + the final fc."""
+    cfgs = {18: ([2, 2, 2, 2], "basic"), 34: ([3, 4, 6, 3], "basic"),
+            50: ([3, 4, 6, 3], "bottleneck")}
+    blocks, kind = cfgs[depth]
+    convs = [(3, 64, 7, res // 2)]
+    cin, hw = 64, res // 4
+    for stage, (n, cbase) in enumerate(zip(blocks, [64, 128, 256, 512])):
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            hw = hw // stride
+            if kind == "basic":
+                convs += [(cin, cbase, 3, hw), (cbase, cbase, 3, hw)]
+                cout = cbase
+            else:
+                cout = cbase * 4
+                convs += [(cin, cbase, 1, hw), (cbase, cbase, 3, hw),
+                          (cbase, cout, 1, hw)]
+            if stride != 1 or cin != cout:
+                convs.append((cin, cout, 1, hw))
+            cin = cout
+    return convs, cin
+
+
+def resnet_mults(depth: int, res: int = 224, K: Optional[int] = None) -> int:
+    """Multiplications for one inference (paper: K mults/output vs I)."""
+    from repro.core.memory import affine_mults, conv_mults
+    convs, cfinal = _conv_inventory(depth, res)
+    total = sum(conv_mults(co, ci, k, k, hw, hw, K) for ci, co, k, hw in convs)
+    total += affine_mults(1000, cfinal, K)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# trainable CIFAR-style ResNet-20 (reduced resolution for CPU)
+# ---------------------------------------------------------------------------
+
+def init_resnet20(key, *, widths=(16, 32, 64), blocks=2, n_classes=8,
+                  dtype=jnp.float32):
+    """ResNet-20-family: stem + 3 stages x `blocks` basic blocks + fc."""
+    rs = rng_stream(key)
+    params: Dict = {"stem": conv_init(next(rs), 3, 3, 3, widths[0], dtype=dtype)[0]}
+    bn_p, bn_s = init_bn(widths[0])
+    params["stem_bn"], stats = {"p": bn_p}, {"stem_bn": bn_s}
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {}
+            blk["conv1"] = conv_init(next(rs), 3, 3, cin, w, dtype=dtype)[0]
+            p1, s1 = init_bn(w)
+            blk["bn1"] = {"p": p1}
+            blk["conv2"] = conv_init(next(rs), 3, 3, w, w, dtype=dtype)[0]
+            p2, s2 = init_bn(w)
+            blk["bn2"] = {"p": p2}
+            name = f"s{si}b{bi}"
+            stats[f"{name}_bn1"], stats[f"{name}_bn2"] = s1, s2
+            if stride != 1 or cin != w:
+                blk["down"] = conv_init(next(rs), 1, 1, cin, w, dtype=dtype)[0]
+            params[name] = blk
+            cin = w
+    params["fc"] = {"kernel": (jax.random.normal(next(rs), (cin, n_classes))
+                               * (cin ** -0.5)).astype(dtype)}
+    return params, stats
+
+
+def resnet20_apply(params, stats, x, *, widths=(16, 32, 64), blocks=2,
+                   training=False, multiplier_less=False, act_bits=32):
+    """Returns (logits, new_stats)."""
+    new_stats = {}
+
+    def bn(p, s_key, h):
+        y, ns = batch_norm(h, p["p"], stats[s_key], training=training,
+                           multiplier_less=multiplier_less)
+        new_stats[s_key] = ns
+        return y
+
+    def act(h):
+        return relu_fake_quant(h, act_bits) if act_bits < 32 else jax.nn.relu(h)
+
+    h = conv_apply(params["stem"], x)
+    h = act(bn(params["stem_bn"], "stem_bn", h))
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            name = f"s{si}b{bi}"
+            blk = params[name]
+            idn = h
+            y = conv_apply(blk["conv1"], h, stride=stride)
+            y = act(bn(blk["bn1"], f"{name}_bn1", y))
+            y = conv_apply(blk["conv2"], y)
+            y = bn(blk["bn2"], f"{name}_bn2", y)
+            if "down" in blk:
+                idn = conv_apply(blk["down"], idn, stride=stride)
+            h = act(y + idn)
+            cin = w
+    h = jnp.mean(h, axis=(1, 2))
+    from repro.nn.linear import materialize
+    logits = h @ materialize(params["fc"]["kernel"], h.dtype)
+    return logits, new_stats
+
+
+def classify_loss(params, stats, batch, **kw):
+    logits, new_stats = resnet20_apply(params, stats, batch["x"],
+                                       training=True, **kw)
+    labels = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, (new_stats, acc)

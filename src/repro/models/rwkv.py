@@ -1,0 +1,122 @@
+"""RWKV6 language model (attention-free, O(1) decode state)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.linear import embedding_apply, embedding_init, embedding_logits
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init
+from repro.nn.rwkv6 import rwkv6_channel_mix, rwkv6_init, rwkv6_time_mix
+from repro.nn.tree import rng_stream
+
+
+def _prepend(ax):
+    if isinstance(ax, dict):
+        return {k: _prepend(v) for k, v in ax.items()}
+    return ("layer",) + tuple(ax)
+
+
+def init_rwkv(key, cfg: ModelConfig):
+    rs = rng_stream(key)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embedding_init(next(rs), cfg.vocab, cfg.d_model)
+    cap = {}
+
+    def one(k):
+        p, a = {}, {}
+        p["ln1"], a["ln1"] = rmsnorm_init(cfg.d_model)
+        p["ln2"], a["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mix"], a["mix"] = rwkv6_init(k, cfg.d_model, head_dim=cfg.ssm_head_dim,
+                                        d_ff=cfg.d_ff)
+        cap["ax"] = a
+        return p
+
+    params["layers"] = jax.vmap(one)(jax.random.split(next(rs), cfg.n_layers))
+    axes["layers"] = _prepend(cap["ax"])
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg.d_model)
+    return params, axes
+
+
+def _layer(lp, cfg, h, state):
+    t_out, t_state = rwkv6_time_mix(lp["mix"], rmsnorm_apply(lp["ln1"], h), state,
+                                    head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+    h = h + t_out
+    c_state = None if state is None else {"shift_c": state["shift_c"]}
+    c_out, c_state = rwkv6_channel_mix(lp["mix"], rmsnorm_apply(lp["ln2"], h), c_state)
+    h = h + c_out
+    return h, (t_state, c_state)
+
+
+def rwkv_forward(params, cfg: ModelConfig, tokens):
+    h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype)
+    h = h.astype(jnp.float32)  # wkv runs f32; cheap at CPU-test scale
+
+    def body(h, lp):
+        h, _ = _layer(lp, cfg, h, None)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["layers"])
+    h = rmsnorm_apply(params["final_norm"], h.astype(cfg.dtype))
+    from repro.distributed.sharding import constrain
+    return constrain(embedding_logits(params["embed"], h),
+                     (("pod", "data"), None, "model"))
+
+
+def rwkv_loss(params, cfg: ModelConfig, batch):
+    logits = rwkv_forward(params, cfg, batch["tokens"]).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    loss = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    H = cfg.d_model // cfg.ssm_head_dim
+    one = {
+        "shift_t": jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+        "shift_c": jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_head_dim), jnp.float32),
+    }
+    return {
+        "layers": jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def rwkv_prefill(params, cfg: ModelConfig, tokens):
+    """Consume prompt, return (last_logits, state)."""
+    h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype).astype(jnp.float32)
+    B = h.shape[0]
+
+    def body(h, lp):
+        hs = {"shift_t": jnp.zeros((B, 1, cfg.d_model), jnp.float32),
+              "shift_c": jnp.zeros((B, 1, cfg.d_model), jnp.float32),
+              "wkv": jnp.zeros((B, cfg.d_model // cfg.ssm_head_dim,
+                                cfg.ssm_head_dim, cfg.ssm_head_dim), jnp.float32)}
+        h, (ts, cs) = _layer(lp, cfg, h, hs)
+        return h, {**ts, **cs}
+
+    h, states = jax.lax.scan(body, h, params["layers"])
+    h = rmsnorm_apply(params["final_norm"], h[:, -1:].astype(cfg.dtype))
+    logits = embedding_logits(params["embed"], h)
+    return logits, {"layers": states, "len": jnp.full((B,), tokens.shape[1], jnp.int32)}
+
+
+def rwkv_decode_step(params, cfg: ModelConfig, token, state):
+    h = embedding_apply(params["embed"], token, dtype=cfg.dtype).astype(jnp.float32)
+
+    def body(h, xs):
+        lp, ls = xs
+        h, (ts, cs) = _layer(lp, cfg, h, ls)
+        return h, {**ts, **cs}
+
+    h, new_states = jax.lax.scan(body, h, (params["layers"], state["layers"]))
+    logits = embedding_logits(params["embed"],
+                              rmsnorm_apply(params["final_norm"], h.astype(cfg.dtype)))
+    return logits, {"layers": new_states, "len": state["len"] + 1}

@@ -1,0 +1,178 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+Structure (simplified from Zamba2, documented in DESIGN.md): the model is
+``n_super`` super-blocks, each = ``attn_every`` Mamba2 layers followed by
+one application of a single shared transformer block (attention + MLP,
+parameters reused across all applications — Zamba's parameter-sharing
+trick). Mamba params are stacked (n_super, attn_every, ...) so the whole
+model is a scan-of-scans; the attention KV caches are per application
+(n_super of them).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import attn_decode, attn_forward, attn_init, mlp_apply, mlp_init
+from repro.nn.linear import embedding_apply, embedding_init, embedding_logits
+from repro.nn.mamba2 import mamba2_decode, mamba2_forward, mamba2_init
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init
+from repro.nn.tree import rng_stream
+
+
+def _prepend(ax, names):
+    if isinstance(ax, dict):
+        return {k: _prepend(v, names) for k, v in ax.items()}
+    return tuple(names) + tuple(ax)
+
+
+def init_zamba(key, cfg: ModelConfig):
+    assert cfg.n_layers % cfg.attn_every == 0
+    n_super = cfg.n_layers // cfg.attn_every
+    rs = rng_stream(key)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embedding_init(next(rs), cfg.vocab, cfg.d_model)
+
+    cap = {}
+
+    def one_mamba(k):
+        p, a = {}, {}
+        p["ln"], a["ln"] = rmsnorm_init(cfg.d_model)
+        p["mamba"], a["mamba"] = mamba2_init(
+            k, cfg.d_model, d_inner=cfg.resolved_d_inner,
+            n_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+        cap["ax"] = a
+        return p
+
+    keys = jax.random.split(next(rs), cfg.n_layers).reshape(
+        n_super, cfg.attn_every, 2)
+    params["mamba_layers"] = jax.vmap(jax.vmap(one_mamba))(keys)
+    axes["mamba_layers"] = _prepend(cap["ax"], ("super", "inner"))
+
+    sp, sa = {}, {}
+    sp["ln1"], sa["ln1"] = rmsnorm_init(cfg.d_model)
+    sp["ln2"], sa["ln2"] = rmsnorm_init(cfg.d_model)
+    sp["attn"], sa["attn"] = attn_init(next(rs), cfg)
+    sp["mlp"], sa["mlp"] = mlp_init(next(rs), cfg)
+    params["shared"], axes["shared"] = sp, sa
+
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg.d_model)
+    return params, axes
+
+
+def _shared_block(params, cfg, h, positions):
+    sp = params["shared"]
+    a, cache = attn_forward(sp["attn"], cfg, rmsnorm_apply(sp["ln1"], h), positions)
+    h = h + a
+    h = h + mlp_apply(sp["mlp"], cfg, rmsnorm_apply(sp["ln2"], h))
+    return h, cache
+
+
+def zamba_forward(params, cfg: ModelConfig, tokens):
+    h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def inner(h, mp):
+        out, _ = mamba2_forward(mp["mamba"], rmsnorm_apply(mp["ln"], h),
+                                d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
+                                head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+        return h + out, None
+
+    def superblock(h, sp_params):
+        from repro.models.lm import remat_wrap
+        h, _ = jax.lax.scan(remat_wrap(inner, cfg), h, sp_params)
+        h, _ = _shared_block(params, cfg, h, positions)
+        return h, None
+
+    h, _ = jax.lax.scan(superblock, h, params["mamba_layers"])
+    h = rmsnorm_apply(params["final_norm"], h)
+    from repro.distributed.sharding import constrain
+    return constrain(embedding_logits(params["embed"], h),
+                     (("pod", "data"), None, "model"))
+
+
+def zamba_loss(params, cfg: ModelConfig, batch):
+    logits = zamba_forward(params, cfg, batch["tokens"]).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    loss = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss}
+
+
+def init_zamba_cache(cfg: ModelConfig, batch: int, max_len: int):
+    n_super = cfg.n_layers // cfg.attn_every
+    H = cfg.resolved_d_inner // cfg.ssm_head_dim
+    conv_dim = cfg.resolved_d_inner + 2 * cfg.ssm_state
+    dh = cfg.resolved_head_dim
+    mamba_state = {
+        "ssm": jnp.zeros((n_super, cfg.attn_every, batch, H, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((n_super, cfg.attn_every, batch, 3, conv_dim), cfg.dtype),
+    }
+    attn_cache = {
+        "k": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, dh), cfg.dtype),
+        "v": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, dh), cfg.dtype),
+    }
+    return {"mamba": mamba_state, "attn": attn_cache,
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def zamba_prefill(params, cfg: ModelConfig, tokens, max_len: int):
+    """Run the prompt, return (last_logits, decode cache)."""
+    h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+
+    def inner(h, mp):
+        out, st = mamba2_forward(mp["mamba"], rmsnorm_apply(mp["ln"], h),
+                                 d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
+                                 head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+        return h + out, st
+
+    def superblock(h, sp_params):
+        h, mstates = jax.lax.scan(inner, h, sp_params)
+        h, cache = _shared_block(params, cfg, h, positions)
+        pad = max_len - S
+        cache = jax.tree.map(
+            lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2)), cache)
+        return h, {"mamba": mstates, "attn": cache}
+
+    h, st = jax.lax.scan(superblock, h, params["mamba_layers"])
+    h = rmsnorm_apply(params["final_norm"], h[:, -1:])
+    logits = embedding_logits(params["embed"], h)
+    cache = {"mamba": st["mamba"], "attn": st["attn"],
+             "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def zamba_decode_step(params, cfg: ModelConfig, token, cache):
+    h = embedding_apply(params["embed"], token, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
+    cache_len = cache["len"]
+    sp = params["shared"]
+
+    def inner(h, xs):
+        mp, mstate = xs
+        out, st = mamba2_decode(mp["mamba"], rmsnorm_apply(mp["ln"], h), mstate,
+                                d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
+                                head_dim=cfg.ssm_head_dim)
+        return h + out, st
+
+    def superblock(h, xs):
+        mp, mstates, acache = xs
+        h, new_m = jax.lax.scan(inner, h, (mp, mstates))
+        a, new_a = attn_decode(sp["attn"], cfg, rmsnorm_apply(sp["ln1"], h),
+                               acache, cache_len)
+        h = h + a
+        h = h + mlp_apply(sp["mlp"], cfg, rmsnorm_apply(sp["ln2"], h))
+        return h, {"mamba": new_m, "attn": new_a}
+
+    h, st = jax.lax.scan(superblock, h,
+                         (params["mamba_layers"], cache["mamba"], cache["attn"]))
+    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h))
+    return logits, {"mamba": st["mamba"], "attn": st["attn"], "len": cache_len + 1}

@@ -1,0 +1,178 @@
+"""Attention: flash-style chunked (training/prefill) + decode paths.
+
+Pure-JAX online-softmax attention tiled over (q-block, kv-block) with
+``lax.scan`` — O(S * block) memory instead of O(S^2). Sliding-window
+attention slices a *static-width* KV slab per q-block with
+``dynamic_slice`` so SWA FLOPs scale with the window size, not S^2.
+
+GQA is handled by folding query heads into (kv_head, group) so no KV
+replication is materialized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    """q: (B,S,H,Dh); k,v: (B,Skv,Hkv,Dh[v]) -> (B,S,H,Dv)."""
+    B, S, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    if scale is None:
+        scale = Dh ** -0.5
+
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, Skv)
+    # pad to block multiples; padded keys are masked out, padded queries
+    # are sliced off the output.
+    S0, Skv0 = S, Skv
+    pad_q = (-S) % q_block
+    pad_kv = (-Skv) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        S += pad_q
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        Skv += pad_kv
+    nq = S // q_block
+
+    qr = q.reshape(B, nq, q_block, Hkv, G, Dh) * scale
+
+    if window is not None and causal:
+        # Static KV slab wide enough to cover [q_end - window, q_end).
+        slab = ((window + kv_block - 1) // kv_block + 1) * kv_block
+        slab = min(slab + (q_block // kv_block) * kv_block, Skv)
+        slab = max(slab, kv_block)
+        slab = (slab // kv_block) * kv_block
+    else:
+        slab = Skv
+    nkv = slab // kv_block
+
+    def per_qblock(qi):
+        qblk = qr[:, qi]  # (B, bq, Hkv, G, Dh)
+        q_start = qi * q_block
+        if slab < Skv:
+            start = jnp.clip(q_start + q_block - slab, 0, Skv - slab)
+        else:
+            start = jnp.array(0, jnp.int32)
+        kslab = jax.lax.dynamic_slice_in_dim(k, start, slab, axis=1)
+        vslab = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=1)
+        q_pos = q_start + jnp.arange(q_block)
+
+        def inner(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(kslab, j * kv_block, kv_block, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(vslab, j * kv_block, kv_block, axis=1)
+            k_pos = start + j * kv_block + jnp.arange(kv_block)
+            # scores: (B, Hkv, G, bq, bk) in f32
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kj).astype(jnp.float32)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            if prefix is not None:
+                # bidirectional attention inside the (image/audio) prefix
+                mask |= (q_pos[:, None] < prefix) & (k_pos[None, :] < prefix)
+            if pad_kv:
+                mask &= (k_pos[None, :] < Skv0)
+            s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            # vj: (B, bk, Hkv, Dv) -> (B, Hkv, bk, Dv)
+            vj_t = vj.transpose(0, 2, 1, 3).astype(jnp.float32)
+            acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vj_t)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, q_block, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_block, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(inner), (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)
+        # (B, Hkv, G, bq, Dv) -> (B, bq, H, Dv)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, q_block, H, Dv)
+
+    outs = jax.lax.map(per_qblock, jnp.arange(nq))  # (nq, B, bq, H, Dv)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dv)
+    if pad_q:
+        out = out[:, :S0]
+    return out.astype(q.dtype)
+
+
+def dense_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: Optional[int] = None, prefix: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference O(S^2) attention (oracle for tests, small shapes only)."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if scale is None:
+        scale = Dh ** -0.5
+    qr = q.reshape(B, S, Hkv, G, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr * scale, k).astype(jnp.float32)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    if prefix is not None:
+        mask |= (q_pos < prefix) & (k_pos < prefix)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(jnp.float32), v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, -1).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token decode. q: (B,1,H,Dh); caches: (B,Skv,Hkv,Dh[v]).
+
+    cache_len: (B,) or scalar — number of valid cache positions.
+    """
+    B, _, H, Dh = q.shape
+    Skv, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    if scale is None:
+        scale = Dh ** -0.5
+    qr = q.reshape(B, Hkv, G, Dh) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache).astype(jnp.float32)
+    pos = jnp.arange(Skv)[None, :]
+    cl = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,)).reshape(B, 1)
+    valid = pos < cl
+    if window is not None:
+        valid &= pos >= cl - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(jnp.float32), v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, -1).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Conv2D (NHWC) — LUT-Q aware, for the paper's CNN experiments."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import materialize
+
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int, *, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * (2.0 / fan_in) ** 0.5
+    return {"kernel": w.astype(dtype)}, {"kernel": (None, None, "embed", "mlp")}
+
+
+def conv_apply(params, x: jax.Array, *, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    k = materialize(params["kernel"], x.dtype)
+    return jax.lax.conv_general_dilated(
+        x, k, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,85 @@
+"""Quantization-aware dense / embedding layers.
+
+A kernel leaf is either a plain array (unquantized) or a
+:class:`LutqState` — in which case the forward pass uses the paper's
+tied weights ``Q = d[A]`` with the straight-through estimator.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lutq import LutqState, decode_any, quantize_ste_any
+
+
+def materialize(kernel, dtype=None) -> jax.Array:
+    """Decoded (quantized, STE) or raw kernel, cast for compute.
+
+    A LutqState with ``w=None`` is the *deployment* form (paper: store
+    only dictionary + assignments): decode without the STE master.
+    """
+    if isinstance(kernel, LutqState):
+        a = kernel.a
+        if a.dtype == jnp.uint8:  # packed 4-bit pairs (serve_view pack4)
+            from repro.core.policy import unpack4_last
+            a = unpack4_last(a)
+        if kernel.w is None:
+            k = decode_any(kernel.d, a)
+        else:
+            k = quantize_ste_any(kernel.w, kernel.d, a)
+    else:
+        k = kernel
+    return k.astype(dtype) if dtype is not None and k.dtype != dtype else k
+
+
+def linear_init(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    *,
+    bias: bool = False,
+    dtype=jnp.float32,
+    axes: Tuple[str, str] = ("embed", "mlp"),
+    scale: Optional[float] = None,
+):
+    if scale is None:
+        scale = in_dim ** -0.5
+    params = {"kernel": (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)}
+    ax = {"kernel": axes}
+    if bias:
+        params["bias"] = jnp.zeros((out_dim,), dtype)
+        ax["bias"] = (axes[1],)
+    return params, ax
+
+
+def linear_apply(params, x: jax.Array, *, dtype=None) -> jax.Array:
+    k = materialize(params["kernel"], dtype or x.dtype)
+    y = x @ k
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+def embedding_init(
+    key: jax.Array,
+    vocab: int,
+    dim: int,
+    *,
+    dtype=jnp.float32,
+    axes: Tuple[str, str] = ("vocab_in", "embed"),
+):
+    params = {"table": (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)}
+    return params, {"table": axes}
+
+
+def embedding_apply(params, ids: jax.Array, *, dtype=None) -> jax.Array:
+    t = materialize(params["table"], dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def embedding_logits(params, x: jax.Array) -> jax.Array:
+    """Tied-softmax readout: x @ table.T."""
+    t = materialize(params["table"], x.dtype)
+    return x @ t.T

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD) block — chunked scan, LUT-Q aware projections.
+
+State-space recurrence per head (scalar decay, Mamba2):
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t^T        h in R^{N x P}
+    y_t = C_t h_t + D * x_t
+with a_t = exp(-dt_t * exp(A_log)).
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+quadratic "attention-like" form via a segment-sum decay matrix, across
+chunks a lax.scan carries the state — O(S*L) memory, sub-quadratic
+compute. Decode is a single recurrence step (O(1) state), which is why
+the hybrid/SSM architectures run the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import linear_apply, linear_init, materialize
+from repro.nn.tree import rng_stream
+
+CONV_K = 4
+
+
+def mamba2_init(
+    key,
+    d_model: int,
+    *,
+    d_inner: int,
+    n_state: int = 64,
+    head_dim: int = 64,
+    dtype=jnp.float32,
+):
+    n_heads = d_inner // head_dim
+    rs = rng_stream(key)
+    d_in_proj = 2 * d_inner + 2 * n_state + n_heads  # z, x, B, C, dt
+    params, axes = {}, {}
+    params["in_proj"], axes["in_proj"] = linear_init(
+        next(rs), d_model, d_in_proj, axes=("embed", "heads"), dtype=dtype)
+    params["out_proj"], axes["out_proj"] = linear_init(
+        next(rs), d_inner, d_model, axes=("heads", "embed"), dtype=dtype)
+    conv_dim = d_inner + 2 * n_state
+    params["conv_w"] = (jax.random.normal(next(rs), (CONV_K, conv_dim)) * 0.2).astype(dtype)
+    params["conv_b"] = jnp.zeros((conv_dim,), dtype)
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32)
+    params["D"] = jnp.ones((n_heads,), jnp.float32)
+    params["dt_bias"] = jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01))).astype(jnp.float32)
+    axes.update({"conv_w": (None, "heads"), "conv_b": ("heads",),
+                 "A_log": (None,), "D": (None,), "dt_bias": (None,)})
+    return params, axes
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over seq. x: (B,S,C); w: (K,C). Returns (y, new_state)."""
+    w = materialize(w, x.dtype)
+    B, S, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, CONV_K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + S, :] * w[i][None, None, :] for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):, :]
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise decay exponents: out[t,s] = sum_{s<i<=t} logd_i.
+
+    logd: (..., L). out: (..., L, L) with -inf above the diagonal.
+    """
+    L = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # t,s -> cs_t - cs_s
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B,S,H,P)
+    dt: jax.Array,  # (B,S,H) after softplus
+    A: jax.Array,   # (H,) positive decay rates
+    Bm: jax.Array,  # (B,S,N)
+    Cm: jax.Array,  # (B,S,N)
+    *,
+    chunk: int = 128,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y: (B,S,H,P), h_final: (B,H,N,P))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    # pad to a chunk multiple with identity steps (dt=0 -> decay 1, no input)
+    S0 = S
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S += pad
+    c = S // chunk
+
+    # One scan over chunks: both the intra-chunk quadratic form and the
+    # inter-chunk state recurrence live inside the scan body, so only ONE
+    # chunk's (B,H,L,L) decay/score tensors are materialized at a time —
+    # 1/c of the all-chunks-vectorized formulation's working set (the
+    # §Perf cell-A memory fix; compute is identical).
+    xc = x.reshape(B, c, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, c, chunk, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, c, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(B, c, chunk, N).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        xk, dtk, Bk, Ck = inp                      # (B,L,H,P) (B,L,H) (B,L,N)
+        logd = (-dtk * A[None, None, :]).astype(jnp.float32)  # (B,L,H)
+        # intra-chunk: y[t] = sum_{s<=t} C_t.B_s exp(seg) dt_s x_s
+        seg = _segsum(logd.transpose(0, 2, 1))     # (B,H,L,L)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("bln,bsn->bls", Ck, Bk)    # (B,L,L)
+        scores = cb[:, None] * decay * dtk.transpose(0, 2, 1)[:, :, None, :]
+        y = jnp.einsum("bhls,bshp->blhp", scores, xk)
+        # inter-chunk: y[t] += C_t exp(cum_t) h_in
+        cum = jnp.cumsum(logd, axis=1)             # (B,L,H)
+        in_decay = jnp.exp(cum)
+        y = y + jnp.einsum("bln,blh,bhnp->blhp", Ck, in_decay, h)
+        # state update: h' = (chunk decay) h + sum_s exp(cum_L - cum_s) dt_s B_s x_s^T
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)
+        state = jnp.einsum("blh,blh,bln,blhp->bhnp", decay_to_end, dtk, Bk, xk)
+        h_new = h * jnp.exp(cum[:, -1, :])[..., None, None] + state
+        return h_new, y
+
+    hT, ys = jax.lax.scan(chunk_body, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    if pad:
+        y = y[:, :S0]
+    return y.astype(x.dtype), hT
+
+
+def mamba2_forward(
+    params,
+    u: jax.Array,  # (B,S,D)
+    *,
+    d_inner: int,
+    n_state: int = 64,
+    head_dim: int = 64,
+    chunk: int = 128,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, D = u.shape
+    H = d_inner // head_dim
+    zxbcdt = linear_apply(params["in_proj"], u)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n_state], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = jnp.exp(params["A_log"])
+    y, hT = ssd_chunked(x.reshape(B, S, H, head_dim), dt, A, Bm, Cm, chunk=chunk)
+    y = y + x.reshape(B, S, H, head_dim) * params["D"][None, None, :, None]
+    y = (y.reshape(B, S, d_inner) * jax.nn.silu(z)).astype(u.dtype)
+    out = linear_apply(params["out_proj"], y)
+    return out, {"ssm": hT, "conv": conv_state}
+
+
+def mamba2_decode(
+    params,
+    u: jax.Array,  # (B,1,D)
+    state: Dict[str, jax.Array],
+    *,
+    d_inner: int,
+    n_state: int = 64,
+    head_dim: int = 64,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, _, D = u.shape
+    H = d_inner // head_dim
+    zxbcdt = linear_apply(params["in_proj"], u)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n_state], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], state["conv"])
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,1,H)
+    A = jnp.exp(params["A_log"])
+    a = jnp.exp(-dt[:, 0] * A[None, :])  # (B,H)
+    xh = x.reshape(B, H, head_dim)
+    h = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt[:, 0], Bm[:, 0], xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], h) + xh * params["D"][None, :, None]
+    y = (y.reshape(B, 1, d_inner) * jax.nn.silu(z)).astype(u.dtype)
+    out = linear_apply(params["out_proj"], y)
+    return out, {"ssm": h, "conv": conv_state}

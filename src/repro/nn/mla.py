@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V2), LUT-Q aware.
+
+The KV cache stores only the compressed latent ``c_kv`` (rank r) plus the
+shared RoPE key — the MLA memory win. Decode uses the *absorbed* form:
+q_nope is projected through W_uk so scores are taken directly against the
+latent, and the attention output over latents is expanded through W_uv.
+This keeps per-token decode FLOPs at O(H * r) instead of re-expanding the
+whole cache every step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import NEG_INF, flash_attention
+from repro.nn.linear import linear_apply, linear_init, materialize
+from repro.nn.rotary import apply_rope
+from repro.nn.tree import rng_stream
+
+
+def mla_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    *,
+    kv_lora: int = 512,
+    qk_nope: int = 128,
+    qk_rope: int = 64,
+    v_head: int = 128,
+    dtype=jnp.float32,
+):
+    rs = rng_stream(key)
+    params, axes = {}, {}
+    for name, (i, o, ax) in {
+        "q": (d_model, n_heads * (qk_nope + qk_rope), ("embed", "heads")),
+        "dkv": (d_model, kv_lora + qk_rope, ("embed", "kv_lora")),
+        "uk": (kv_lora, n_heads * qk_nope, ("kv_lora", "heads")),
+        "uv": (kv_lora, n_heads * v_head, ("kv_lora", "heads")),
+        "o": (n_heads * v_head, d_model, ("heads", "embed")),
+    }.items():
+        params[name], axes[name] = linear_init(next(rs), i, o, axes=ax, dtype=dtype)
+    return params, axes
+
+
+def _split_q(params, x, n_heads, qk_nope, qk_rope):
+    B, S, _ = x.shape
+    q = linear_apply(params["q"], x).reshape(B, S, n_heads, qk_nope + qk_rope)
+    return q[..., :qk_nope], q[..., qk_nope:]
+
+
+def mla_forward(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    n_heads: int,
+    kv_lora: int = 512,
+    qk_nope: int = 128,
+    qk_rope: int = 64,
+    v_head: int = 128,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Training/prefill (expanded form). Returns (out, cache)."""
+    B, S, D = x.shape
+    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope)
+    qr = apply_rope(qr, positions)
+
+    dkv = linear_apply(params["dkv"], x)
+    c_kv, k_rope = dkv[..., :kv_lora], dkv[..., kv_lora:]
+    k_rope = apply_rope(k_rope[..., None, :], positions)  # (B,S,1,qk_rope)
+
+    kn = linear_apply(params["uk"], c_kv).reshape(B, S, n_heads, qk_nope)
+    v = linear_apply(params["uv"], c_kv).reshape(B, S, n_heads, v_head)
+
+    # combined key = [k_nope ; k_rope broadcast to all heads]
+    k = jnp.concatenate([kn, jnp.broadcast_to(k_rope, (B, S, n_heads, qk_rope))], -1)
+    q = jnp.concatenate([qn, qr], -1)
+    scale = (qk_nope + qk_rope) ** -0.5
+    o = flash_attention(q, k, v, causal=True, scale=scale)
+    out = linear_apply(params["o"], o.reshape(B, S, n_heads * v_head))
+    cache = {"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
+    return out, cache
+
+
+def mla_decode(
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    cache_len: jax.Array,
+    *,
+    n_heads: int,
+    kv_lora: int = 512,
+    qk_nope: int = 128,
+    qk_rope: int = 64,
+    v_head: int = 128,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against the latent cache (absorbed form).
+
+    x: (B,1,D); cache: {"c_kv": (B,Skv,r), "k_rope": (B,Skv,qk_rope)}.
+    """
+    B, _, D = x.shape
+    Skv = cache["c_kv"].shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,)).reshape(B, 1)
+
+    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope)
+    qr = apply_rope(qr, pos)  # new token at position cache_len
+
+    dkv = linear_apply(params["dkv"], x)
+    c_new, kr_new = dkv[..., :kv_lora], dkv[..., kv_lora:]
+    kr_new = apply_rope(kr_new[..., None, :], pos)[..., 0, :]
+
+    # write into the cache at position cache_len
+    idx = pos[:, 0]
+    c_kv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        cache["c_kv"], c_new, idx
+    )
+    k_rope = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        cache["k_rope"], kr_new, idx
+    )
+
+    # absorbed scores: q_nope W_uk^T -> latent space
+    wuk = materialize(params["uk"]["kernel"], x.dtype).reshape(kv_lora, n_heads, qk_nope)
+    q_lat = jnp.einsum("bhd,rhd->bhr", qn[:, 0], wuk)  # (B,H,r)
+    s = jnp.einsum("bhr,bkr->bhk", q_lat, c_kv)
+    s = s + jnp.einsum("bhd,bkd->bhk", qr[:, 0], k_rope)
+    s = (s * ((qk_nope + qk_rope) ** -0.5)).astype(jnp.float32)
+    valid = jnp.arange(Skv)[None, :] <= idx[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+
+    o_lat = jnp.einsum("bhk,bkr->bhr", p.astype(x.dtype), c_kv)  # (B,H,r)
+    wuv = materialize(params["uv"]["kernel"], x.dtype).reshape(kv_lora, n_heads, v_head)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, wuv).reshape(B, 1, n_heads * v_head)
+    out = linear_apply(params["o"], o)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,145 @@
+"""Top-k Mixture-of-Experts with capacity-based dispatch (GShard-style).
+
+Dispatch is sort-free: slot positions come from a cumulative sum over the
+(slots, experts) one-hot, tokens are scattered into a per-expert
+capacity-padded buffer, expert FFNs run as one batched matmul (sharded
+expert-parallel on the 'model' mesh axis), and outputs are combined with
+the gate weights. Overflowing tokens are dropped (capacity factor
+configurable), underflow is zero-padded — standard dropping MoE.
+
+Expert weights are LUT-Q quantized with *per-expert dictionaries*
+(the dictionary axis stacks over E), which is where LUT-Q's memory win
+is largest: expert weights dominate MoE parameter counts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import materialize
+from repro.nn.tree import rng_stream
+
+
+def moe_init(
+    key,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    *,
+    n_shared: int = 0,
+    d_ff_shared: Optional[int] = None,
+    dtype=jnp.float32,
+):
+    rs = rng_stream(key)
+    s = d_model ** -0.5
+    params = {
+        "router": (jax.random.normal(next(rs), (d_model, n_experts)) * s).astype(jnp.float32),
+        "wi": (jax.random.normal(next(rs), (n_experts, d_model, d_ff)) * s).astype(dtype),
+        "wg": (jax.random.normal(next(rs), (n_experts, d_model, d_ff)) * s).astype(dtype),
+        "wo": (jax.random.normal(next(rs), (n_experts, d_ff, d_model)) * (d_ff ** -0.5)).astype(dtype),
+    }
+    axes = {
+        "router": ("embed", None),
+        "wi": ("expert", "embed", "moe_mlp"),
+        "wg": ("expert", "embed", "moe_mlp"),
+        "wo": ("expert", "moe_mlp", "embed"),
+    }
+    if n_shared > 0:
+        dsh = d_ff_shared or d_ff * n_shared
+        params["shared_wi"] = (jax.random.normal(next(rs), (d_model, dsh)) * s).astype(dtype)
+        params["shared_wg"] = (jax.random.normal(next(rs), (d_model, dsh)) * s).astype(dtype)
+        params["shared_wo"] = (jax.random.normal(next(rs), (dsh, d_model)) * (dsh ** -0.5)).astype(dtype)
+        axes["shared_wi"] = ("embed", "mlp")
+        axes["shared_wg"] = ("embed", "mlp")
+        axes["shared_wo"] = ("mlp", "embed")
+    return params, axes
+
+
+def moe_apply(
+    params,
+    x: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dtype=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    cdt = dtype or x.dtype
+    T = B * S
+    xt = x.reshape(T, D)
+
+    router = params["router"]
+    E = router.shape[-1]
+    logits = (xt.astype(jnp.float32) @ router.astype(jnp.float32))  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (T,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (T * top_k)
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, int(math.ceil(T * top_k / E * capacity_factor)))
+
+    # slot-major flattening: (T, k) -> (T*k,)
+    e_flat = expert_ids.reshape(-1)          # (T*k,)
+    g_flat = gate_vals.reshape(-1).astype(jnp.float32)
+
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)       # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                 # position before me
+    pos_of = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = (pos_of < C) & (g_flat > 0)
+
+    # scatter tokens into (E*C, D)
+    slot = jnp.where(keep, e_flat * C + pos_of, E * C)  # overflow -> dump row
+    x_rep = jnp.repeat(xt[:, None, :], top_k, axis=1).reshape(T * top_k, D)
+    buf = jnp.zeros((E * C + 1, D), cdt).at[slot].add(x_rep.astype(cdt))
+    buf = buf[: E * C].reshape(E, C, D)
+
+    wi = materialize(params["wi"], cdt)
+    wg = materialize(params["wg"], cdt)
+    wo = materialize(params["wo"], cdt)
+    h = jnp.einsum("ecd,edf->ecf", buf, wi) * jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo).reshape(E * C, D)
+
+    # combine
+    gathered = jnp.take(out_buf, jnp.minimum(slot, E * C - 1), axis=0)
+    gathered = gathered * (keep & (slot < E * C))[:, None].astype(cdt)
+    combined = (gathered.astype(jnp.float32) * g_flat[:, None]).reshape(T, top_k, D).sum(1)
+    out = combined.reshape(B, S, D).astype(x.dtype)
+
+    if "shared_wi" in params:
+        swi = materialize(params["shared_wi"], cdt)
+        swg = materialize(params["shared_wg"], cdt)
+        swo = materialize(params["shared_wo"], cdt)
+        sh = (x.astype(cdt) @ swi) * jax.nn.silu(x.astype(cdt) @ swg)
+        out = out + (sh @ swo).astype(x.dtype)
+    return out, aux
+
+
+def moe_apply_dense(params, x: jax.Array, *, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: every expert on every token, masked combine. O(T*E) compute."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    logits = xt.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gv, ei = jax.lax.top_k(probs, top_k)
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+    E = probs.shape[-1]
+    gates = jnp.zeros_like(probs).at[jnp.arange(xt.shape[0])[:, None], ei].set(gv)
+    wi, wg, wo = (materialize(params[k], xt.dtype) for k in ("wi", "wg", "wo"))
+    h = jnp.einsum("td,edf->tef", xt, wi) * jax.nn.silu(jnp.einsum("td,edf->tef", xt, wg))
+    per_e = jnp.einsum("tef,efd->ted", h, wo)
+    out = jnp.einsum("ted,te->td", per_e, gates.astype(xt.dtype))
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[ei.reshape(-1)].add(1.0) / ei.size
+    if "shared_wi" in params:
+        sh = (xt @ materialize(params["shared_wi"], xt.dtype)) * jax.nn.silu(
+            xt @ materialize(params["shared_wg"], xt.dtype))
+        out = out + sh @ materialize(params["shared_wo"], xt.dtype)
+    return out.reshape(B, S, D), E * jnp.sum(me * ce)

@@ -1,0 +1,23 @@
+"""Rotary position embeddings (GPT-NeoX convention, half-split)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, dh/2)
+    if x.ndim == ang.ndim + 1:  # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

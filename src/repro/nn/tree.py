@@ -1,0 +1,68 @@
+"""Small pytree utilities shared by the functional layer library.
+
+Params are nested dicts of jax arrays (or LutqState leaves once
+quantized). Every ``*_init`` function returns ``(params, axes)`` where
+``axes`` mirrors ``params`` with tuples of *logical* axis names per
+array dimension — the distribution layer maps logical names to mesh axes
+(MaxText-style logical axis rules).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lutq import LutqState
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+def rng_stream(key: jax.Array) -> Iterator[jax.Array]:
+    """Infinite deterministic stream of rng keys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, (jax.Array, LutqState)) or (
+        hasattr(x, "shape") and hasattr(x, "dtype")
+    )
+
+
+def tree_paths(tree, prefix=()) -> Iterator[Tuple[Tuple[str, ...], Any]]:
+    """Yield (path, leaf) pairs; LutqState counts as a single leaf."""
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from tree_paths(tree[k], prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def map_with_path(fn: Callable, tree, prefix=()):
+    if isinstance(tree, dict):
+        return {k: map_with_path(fn, v, prefix + (k,)) for k, v in tree.items()}
+    return fn(prefix, tree)
+
+
+def zip_map(fn: Callable, a, b):
+    """Map fn over two parallel trees (dict structure must match)."""
+    if isinstance(a, dict):
+        return {k: zip_map(fn, a[k], b[k]) for k in a}
+    return fn(a, b)
+
+
+def param_count(tree) -> int:
+    total = 0
+    for _, leaf in tree_paths(tree):
+        if isinstance(leaf, LutqState):
+            total += leaf.w.size
+        elif leaf is not None:
+            total += leaf.size
+    return total
+
+
+def cast_compute(x: jax.Array, dtype) -> jax.Array:
+    return x.astype(dtype) if x.dtype != dtype else x

@@ -1,0 +1,109 @@
+"""Functional optimizers (no optax dependency).
+
+The paper's Table 1 uses SGD for step 3 ("here: SGD"); AdamW is provided
+for the smaller archs. Optimizers operate on the *trainable* tree (LUT-Q
+master weights + unquantized floats) produced by
+``repro.core.policy.split_trainable``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees, is_leaf=lambda x: x is None)
+
+
+def sgd(lr: Schedule, momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": _tmap(lambda p: None if p is None else jnp.zeros_like(p), params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+
+        def eff_grad(g, p):
+            return g + weight_decay * p if weight_decay else g
+
+        if momentum == 0.0:
+            new_p = _tmap(lambda g, p: p if p is None else p - lr_t * eff_grad(g, p),
+                          grads, params)
+            return new_p, state
+
+        def new_m(g, m, p):
+            return None if p is None else momentum * m + eff_grad(g, p)
+
+        m2 = _tmap(new_m, grads, state["m"], params)
+
+        def new_p(g, m, p):
+            if p is None:
+                return None
+            d = eff_grad(g, p) + momentum * m if nesterov else m
+            return p - lr_t * d
+
+        p2 = _tmap(new_p, grads, m2, params)
+        return p2, {"m": m2}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: None if p is None else jnp.zeros_like(p)
+        return {"m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        m2 = _tmap(lambda g, m: None if m is None else b1 * m + (1 - b1) * g,
+                   grads, state["m"])
+        v2 = _tmap(lambda g, v: None if v is None else b2 * v + (1 - b2) * g * g,
+                   grads, state["v"])
+
+        def new_p(p, m, v):
+            if p is None:
+                return None
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p
+            return p - lr_t * upd
+
+        p2 = _tmap(new_p, params, m2, v2)
+        return p2, {"m": m2, "v": v2}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [g for g in jax.tree.leaves(grads) if g is not None]
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return _tmap(lambda g: None if g is None else g * scale, grads), gn
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,130 @@
+"""Train state + the full LUT-Q train step (paper Table 1, steps 1-4).
+
+The step composes:
+  1/2. forward with tied weights Q = d[A] (STE) + backward -> dC/dQ
+  3.   optimizer update of the full-precision masters W
+  4.   M k-means iterations refreshing every (d, A) pair
+plus framework features: microbatch gradient accumulation (lax.scan),
+global-norm clipping, and optional error-feedback gradient compression
+state (installed by the distributed layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import kmeans_tree, merge_trainable, split_trainable
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+
+@dataclasses.dataclass
+class TrainState:
+    trainable: Any          # float master weights (paper's W) + fp params
+    static: Any             # LUT-Q (d, A) + integer buffers
+    opt_state: Any
+    step: jax.Array
+
+    def params(self):
+        return merge_trainable(self.trainable, self.static)
+
+
+def state_flat(state: TrainState):
+    return {"trainable": state.trainable, "static": state.static,
+            "opt_state": state.opt_state, "step": state.step}
+
+
+def state_unflat(d) -> TrainState:
+    return TrainState(d["trainable"], d["static"], d["opt_state"], d["step"])
+
+
+def init_train_state(params, optimizer: Optimizer) -> TrainState:
+    trainable, static = split_trainable(params)
+    return TrainState(
+        trainable=trainable,
+        static=static,
+        opt_state=optimizer.init(trainable),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    loss_fn: Callable,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+    clip_norm: Optional[float] = 1.0,
+    grad_transform: Optional[Callable] = None,
+):
+    """Build the jit-able train step.
+
+    loss_fn(params, cfg, batch) -> (loss, metrics).
+    grad_transform: optional hook (grads -> grads), e.g. compressed
+    all-reduce installed by the distributed layer.
+    """
+
+    def split_micro(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def train_step(state: Dict[str, Any], batch) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+        trainable, static = state["trainable"], state["static"]
+
+        def loss_of(t, mb):
+            params = merge_trainable(t, static)
+            loss, metrics = loss_fn(params, cfg, mb)
+            return loss, metrics
+
+        if microbatches > 1:
+            micro = split_micro(batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(trainable, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g,
+                                     is_leaf=lambda x: x is None)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: None if p is None else jnp.zeros_like(p),
+                                 trainable, is_leaf=lambda x: x is None)
+            (grads, loss_sum), _ = jax.lax.scan(accum, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: None if g is None else g / microbatches,
+                                 grads, is_leaf=lambda x: x is None)
+            loss = loss_sum / microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                trainable, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        gn = jnp.zeros((), jnp.float32)
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+
+        # step 3: optimizer update of the masters
+        new_trainable, new_opt = optimizer.update(grads, state["opt_state"],
+                                                  trainable, state["step"])
+
+        # step 4: k-means refresh of every (d, A)
+        new_static = static
+        if cfg.quant is not None:
+            merged = merge_trainable(new_trainable, static)
+            merged = kmeans_tree(merged, cfg.quant)
+            _, new_static = split_trainable(merged)
+
+        new_state = {"trainable": new_trainable, "static": new_static,
+                     "opt_state": new_opt, "step": state["step"] + 1}
+        out_metrics = {"loss": loss, "grad_norm": gn, **{k: v for k, v in
+                       (metrics.items() if isinstance(metrics, dict) else [])}}
+        return new_state, out_metrics
+
+    return train_step

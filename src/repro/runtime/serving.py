@@ -1,0 +1,105 @@
+"""Serving utilities: prefill-cache adaptation + batched generation.
+
+Bridges ``prefill`` (which returns caches sized to the prompt) and
+``decode_step`` (which expects max_len caches, ring-layout for SWA):
+  * ``grow_cache``: right-pad linear caches to max_len;
+  * ``ring_from_linear``: re-lay a linear KV cache into the SWA ring
+    (slot = position % window) so decode can continue a long prompt;
+  * ``generate``: batched greedy/temperature generation loop.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+def ring_from_linear(lin: jax.Array, prompt_len: int, window: int) -> jax.Array:
+    """lin: (B, S_prompt, ...) linear cache -> (B, window, ...) ring.
+
+    Position p lands in slot p % window; only the last `window`
+    positions survive (they are the only live ones under SWA).
+    """
+    B, S = lin.shape[:2]
+    keep = lin[:, max(0, prompt_len - window):prompt_len]
+    k = keep.shape[1]
+    positions = jnp.arange(prompt_len - k, prompt_len) % window
+    out = jnp.zeros((B, window) + lin.shape[2:], lin.dtype)
+    return out.at[:, positions].set(keep)
+
+
+def grow_cache(cache_small, cache_big):
+    """Right-pad every linear-seq leaf of `cache_small` into the
+    max_len-sized `cache_big` (leaves with matching shape pass through)."""
+
+    def merge(big, small):
+        if big.shape == small.shape:
+            return small.astype(big.dtype)
+        pad = [(0, b - s) for b, s in zip(big.shape, small.shape)]
+        return jnp.pad(small.astype(big.dtype), pad)
+
+    return jax.tree.map(merge, cache_big, cache_small)
+
+
+def adapt_prefill_cache(cfg: ModelConfig, cache, batch: int, max_len: int,
+                        *, src_len: int = 0):
+    """Convert a prefill cache into a decode-ready cache of max_len."""
+    target = api.init_cache(cfg, batch, max_len, src_len=src_len)
+    prompt_len = int(cache["len"][0]) if hasattr(cache["len"], "shape") else cache["len"]
+
+    if cfg.family in ("dense", "moe", "vlm") and cfg.window is not None \
+            and not cfg.use_mla:
+        # SWA ring: re-lay k/v at the decode cache's ring width
+        layers = dict(cache["layers"])
+        for key in ("k", "v"):
+            lin = cache["layers"][key]  # (L, B, S, H, dh)
+            eff = target["layers"][key].shape[2]
+            ring = jax.vmap(lambda x: ring_from_linear(x, prompt_len, eff))(lin)
+            layers[key] = ring.astype(target["layers"][key].dtype)
+        out = dict(cache)
+        out["layers"] = layers
+        return out
+    return grow_cache(cache, target)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    steps: int,
+    max_len: Optional[int] = None,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+):
+    """Prefill the prompt then decode `steps` tokens. Returns (B, steps)."""
+    toks = batch["tokens"]
+    B, P = toks.shape
+    max_len = max_len or (P + steps)
+    logits, cache = api.prefill(params, cfg, batch, max_len=max_len)
+    cache = adapt_prefill_cache(
+        cfg, cache, B, max_len,
+        src_len=batch["frames"].shape[1] if cfg.family == "encdec" else 0)
+
+    decode = jax.jit(lambda p, t, c: api.decode_step(p, cfg, t, c))
+
+    def sample(lg, key):
+        lg = lg[:, -1].astype(jnp.float32)
+        if temperature <= 0:
+            return jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(key, lg / temperature)[:, None].astype(jnp.int32)
+
+    key = rng if rng is not None else jax.random.PRNGKey(0)
+    key, sub = jax.random.split(key)
+    tok = sample(logits, sub)
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, tok, cache)
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

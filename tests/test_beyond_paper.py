@@ -1,0 +1,85 @@
+"""Tests for the paper's stated future directions, implemented here:
+distillation-compatible LUT-Q training and learned-clip activation
+quantization (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.actquant import learned_clip_fake_quant
+from repro.core.distill import kd_loss, make_distill_loss
+from repro.core.policy import merge_trainable, split_trainable
+from repro.core.spec import QuantSpec
+from repro.configs import get_config
+from repro.data.synthetic import MarkovLM
+from repro.models import api
+from repro.models.lm import lm_forward
+from repro.models.reduce import reduced
+from repro.optim.optimizers import adamw
+from repro.optim.train_state import init_train_state, make_train_step, state_flat
+
+
+class TestDistill:
+    def test_kd_loss_zero_for_identical(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+        assert abs(float(kd_loss(logits, logits))) < 1e-5
+
+    def test_kd_loss_positive_and_orders(self):
+        l1 = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+        near = l1 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), l1.shape)
+        far = l1 + 2.0 * jax.random.normal(jax.random.PRNGKey(2), l1.shape)
+        assert 0 < float(kd_loss(near, l1)) < float(kd_loss(far, l1))
+
+    def test_distilled_lutq_student_trains(self):
+        """2-bit student distilling from an fp32 teacher: loss decreases
+        and teacher receives no gradient."""
+        cfg = reduced(get_config("h2o-danube-1.8b")).replace(
+            vocab=32, quant=None, act_bits=32)
+        teacher, _ = api.init(jax.random.PRNGKey(0), cfg)
+        s_cfg = cfg.replace(quant=QuantSpec(bits=2, min_size=512), act_bits=8)
+        student, axes = api.init(jax.random.PRNGKey(1), s_cfg)
+        student = api.quantize(student, s_cfg, axes)
+
+        loss_fn = make_distill_loss(lm_forward, teacher, cfg, alpha=0.5)
+        opt = adamw(2e-3)
+        state = state_flat(init_train_state(student, opt))
+        step = jax.jit(make_train_step(s_cfg, loss_fn, opt))
+        lm = MarkovLM(32, seed=3)
+        losses = []
+        for n in range(30):
+            batch = {k: jnp.asarray(v) for k, v in lm.batch(0, n, 4, 16).items()}
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+        assert np.isfinite(losses[-1])
+
+
+class TestLearnedClip:
+    def test_values_within_clip(self):
+        x = jnp.linspace(-10, 10, 101)
+        q = learned_clip_fake_quant(x, jnp.asarray(2.0), bits=8)
+        assert float(jnp.max(jnp.abs(q))) <= 2.0 + 1e-6
+
+    def test_levels(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4096,)) * 3
+        q = learned_clip_fake_quant(x, jnp.asarray(1.5), bits=4)
+        assert len(np.unique(np.asarray(q))) <= 16
+
+    def test_alpha_learns_to_cover_range(self):
+        """Training alpha on reconstruction error should widen a
+        too-small clip toward the data range."""
+        x = jax.random.normal(jax.random.PRNGKey(1), (4096,)) * 2.0
+        alpha = jnp.asarray(0.25)
+
+        def loss(a):
+            return jnp.mean((learned_clip_fake_quant(x, a, bits=8) - x) ** 2)
+
+        l0 = float(loss(alpha))
+        for _ in range(200):
+            alpha = alpha - 0.05 * jax.grad(loss)(alpha)
+        assert float(alpha) > 0.25 and float(loss(alpha)) < l0 * 0.2
+
+    def test_bits32_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (64,))
+        np.testing.assert_array_equal(
+            np.asarray(learned_clip_fake_quant(x, jnp.asarray(1.0), 32)),
+            np.asarray(x))

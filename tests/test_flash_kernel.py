@@ -1,0 +1,76 @@
+"""Pallas flash-attention kernel vs dense oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention_tpu
+from repro.nn.attention import dense_attention
+
+
+def _mk(BH, S, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (BH, S, D)),
+            jax.random.normal(ks[1], (BH, S, D)),
+            jax.random.normal(ks[2], (BH, S, D)))
+
+
+def _oracle(q, k, v, causal):
+    # dense_attention expects (B, S, H, D); use H=1 per flattened head
+    o = dense_attention(q[:, :, None, :], k[:, :, None, :], v[:, :, None, :],
+                        causal=causal)
+    return o[:, :, 0, :]
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("S,D,bq,bk", [(256, 64, 128, 128),
+                                           (512, 128, 128, 128),
+                                           (256, 64, 64, 128),
+                                           (384, 32, 128, 128)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_oracle(self, S, D, bq, bk, causal):
+        q, k, v = _mk(3, S, D)
+        got = flash_attention_tpu(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=True)
+        want = _oracle(q, k, v, causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        q, k, v = (t.astype(jnp.bfloat16) for t in _mk(2, 256, 64, 1))
+        got = flash_attention_tpu(q, k, v, interpret=True)
+        want = _oracle(q.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32), True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), rtol=3e-2, atol=3e-2)
+
+    def test_causal_blocks_skipped(self):
+        """Poison strictly-upper kv blocks with NaN: a skipped block never
+        touches them, a masked-but-computed one would propagate NaN."""
+        S, D, b = 256, 32, 128
+        q, k, v = _mk(1, S, D, seed=7)
+        # last kv block is strictly above the diagonal for q block 0 only;
+        # poison kv rows in [128, 256) and ask only for q rows [0, 128).
+        k_poison = k.at[:, b:, :].set(jnp.nan)
+        v_poison = v.at[:, b:, :].set(jnp.nan)
+        out = flash_attention_tpu(q, k_poison, v_poison, causal=True,
+                                  bq=b, bk=b, interpret=True)
+        first = np.asarray(out[:, :b])
+        assert np.isfinite(first).all(), "skipped block was executed"
+
+    def test_gqa_grouped_layout(self):
+        """Feeding G query-head blocks against shared KV == GQA."""
+        B, S, Hkv, G, D = 2, 256, 2, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (B, S, Hkv * G, D))
+        k = jax.random.normal(ks[1], (B, S, Hkv, D))
+        v = jax.random.normal(ks[2], (B, S, Hkv, D))
+        want = dense_attention(q, k, v, causal=True)
+        # flatten: (B, S, Hkv, G, D) -> (B*Hkv*G, S, D) with kv repeated
+        qf = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4).reshape(-1, S, D)
+        kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(-1, S, D)
+        vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(-1, S, D)
+        got = flash_attention_tpu(qf, kf, vf, causal=True, interpret=True)
+        got = got.reshape(B, Hkv, G, S, D).transpose(0, 3, 1, 2, 4).reshape(B, S, -1, D)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

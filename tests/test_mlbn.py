@@ -1,0 +1,86 @@
+"""Tests for multiplier-less batch normalization (paper Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_norm, fake_quant, inference_scale_offset, init_bn, relu_fake_quant
+
+
+def _is_pow2(a, tol=1e-6):
+    a = np.abs(np.asarray(a))
+    a = a[a > 0]
+    e = np.log2(a)
+    return np.allclose(e, np.round(e), atol=tol)
+
+
+class TestMLBN:
+    def test_training_normalizes(self):
+        p, s = init_bn(16)
+        x = jax.random.normal(jax.random.PRNGKey(0), (128, 16)) * 5 + 3
+        y, _ = batch_norm(x, p, s, training=True, multiplier_less=False)
+        np.testing.assert_allclose(np.asarray(jnp.mean(y, 0)), 0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(jnp.std(y, 0)), 1, atol=1e-2)
+
+    def test_inference_scale_is_pow2(self):
+        p, s = init_bn(16)
+        x = jax.random.normal(jax.random.PRNGKey(0), (256, 16)) * 2 + 1
+        _, s2 = batch_norm(x, p, s, training=True, multiplier_less=True, momentum=0.0)
+        a, b = inference_scale_offset(p, s2, multiplier_less=True)
+        assert _is_pow2(a)
+
+    def test_mlbn_close_to_bn(self):
+        """Pow2-quantized scale stays within 2x of true scale => output
+        error bounded; on normalized stats they should be close."""
+        p, s = init_bn(8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (512, 8)) * 1.7 - 0.4
+        y_bn, _ = batch_norm(x, p, s, training=True, multiplier_less=False)
+        y_ml, _ = batch_norm(x, p, s, training=True, multiplier_less=True)
+        # scale rounding error <= sqrt(2) factor
+        ratio = np.asarray(jnp.std(y_ml, 0) / jnp.std(y_bn, 0))
+        assert np.all(ratio <= np.sqrt(2) + 1e-3) and np.all(ratio >= 1 / np.sqrt(2) - 1e-3)
+
+    def test_gamma_receives_gradient_through_ste(self):
+        p, s = init_bn(4)
+        x = jax.random.normal(jax.random.PRNGKey(2), (64, 4))
+
+        def loss(gamma):
+            y, _ = batch_norm(x, p._replace(gamma=gamma), s, training=True, multiplier_less=True)
+            return jnp.sum(y ** 2)
+
+        g = jax.grad(loss)(p.gamma)
+        assert np.all(np.isfinite(np.asarray(g))) and np.any(np.asarray(g) != 0)
+
+    def test_inference_matches_folded_form(self):
+        p, s = init_bn(8)
+        x = jax.random.normal(jax.random.PRNGKey(3), (32, 8)) * 2
+        _, s2 = batch_norm(x, p, s, training=True, momentum=0.0)
+        y_inf, _ = batch_norm(x, p, s2, training=False, multiplier_less=True)
+        a, b = inference_scale_offset(p, s2, multiplier_less=True)
+        np.testing.assert_allclose(np.asarray(y_inf), np.asarray(a * x + b), rtol=1e-4, atol=1e-5)
+
+
+class TestActQuant:
+    def test_fake_quant_levels(self):
+        x = jnp.linspace(-1, 1, 1001)
+        q = fake_quant(x, bits=8)
+        assert len(np.unique(np.asarray(q))) <= 256
+
+    def test_fake_quant_identity_gradient(self):
+        x = jnp.linspace(-1, 1, 101)
+        g = jax.grad(lambda x: jnp.sum(fake_quant(x, 8) ** 2))(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(2 * fake_quant(x, 8)), atol=1e-6)
+
+    def test_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+        q = fake_quant(x, bits=8)
+        scale = float(jnp.max(jnp.abs(x))) / 127.0
+        assert float(jnp.max(jnp.abs(q - x))) <= scale * 0.5 + 1e-7
+
+    def test_relu_variant_nonnegative(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1000,))
+        q = relu_fake_quant(x, bits=8)
+        assert float(jnp.min(q)) >= 0.0
+
+    def test_bits32_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (100,))
+        np.testing.assert_array_equal(np.asarray(fake_quant(x, 32)), np.asarray(x))

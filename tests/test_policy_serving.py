@@ -1,0 +1,192 @@
+"""Tests for quantization policy, deployment views, and serving paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lutq import LutqState, decode_any
+from repro.core.policy import (
+    default_predicate,
+    dequantize_tree,
+    kmeans_tree,
+    merge_trainable,
+    quantize_tree,
+    quantized_fraction,
+    serve_view,
+    split_trainable,
+    unpack4_last,
+)
+from repro.core.spec import QuantSpec
+
+
+def _params():
+    k = jax.random.PRNGKey(0)
+    return {
+        "layer": {
+            "kernel": jax.random.normal(k, (64, 128)),
+            "bias": jnp.zeros((128,)),
+        },
+        "norm": {"scale": jnp.ones((64,))},
+        "step": jnp.zeros((), jnp.int32),
+        "stacked": {"kernel": jax.random.normal(k, (3, 64, 64))},
+        "moe": {"wi": jax.random.normal(k, (4, 32, 256))},
+    }
+
+
+class TestPolicy:
+    def test_predicate_excludes_norms_and_biases(self):
+        assert not default_predicate(("norm", "scale"), jnp.ones((64,)))
+        assert not default_predicate(("layer", "bias"), jnp.ones((64, 64)))
+        assert not default_predicate(("moe", "router"), jnp.ones((64, 8)))
+        assert default_predicate(("layer", "kernel"), jnp.ones((64, 64)))
+
+    def test_quantize_respects_min_size(self):
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=10_000))
+        assert not isinstance(q["layer"]["kernel"], LutqState)
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        assert isinstance(q["layer"]["kernel"], LutqState)
+
+    def test_stack_axes_from_logical_axes(self):
+        axes = {
+            "layer": {"kernel": ("embed", "mlp"), "bias": ("mlp",)},
+            "norm": {"scale": ("embed",)},
+            "step": (),
+            "stacked": {"kernel": ("layer", "embed", "mlp")},
+            "moe": {"wi": ("expert", "embed", "moe_mlp")},
+        }
+        q = quantize_tree(_params(), QuantSpec(bits=2, min_size=1024), axes=axes)
+        # per-layer and per-expert dictionaries
+        assert q["stacked"]["kernel"].d.shape == (3, 4)
+        assert q["moe"]["wi"].d.shape == (4, 4)
+        assert q["layer"]["kernel"].d.shape == (4,)
+
+    def test_split_merge_roundtrip(self):
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        t, s = split_trainable(q)
+        back = merge_trainable(t, s)
+        for a, b in zip(jax.tree.leaves(q), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # int leaves are static
+        assert t["step"] is None
+
+    def test_kmeans_tree_improves_fit(self):
+        params = _params()
+        q = quantize_tree(params, QuantSpec(bits=2, min_size=1024))
+        st0 = q["layer"]["kernel"]
+        # perturb masters, refresh, fit must track the new masters
+        w2 = st0.w + 0.5
+        q["layer"]["kernel"] = LutqState(w=w2, d=st0.d, a=st0.a)
+        q2 = kmeans_tree(q, QuantSpec(bits=2, min_size=1024, kmeans_iters=3))
+        e_before = float(jnp.mean((decode_any(st0.d, st0.a) - w2) ** 2))
+        st2 = q2["layer"]["kernel"]
+        e_after = float(jnp.mean((decode_any(st2.d, st2.a) - w2) ** 2))
+        assert e_after < e_before
+
+    def test_dequantize_tree(self):
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        d = dequantize_tree(q)
+        assert not any(isinstance(l, LutqState)
+                       for l in jax.tree.leaves(
+                           d, is_leaf=lambda x: isinstance(x, LutqState)))
+
+    def test_quantized_fraction(self):
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        assert 0.5 < quantized_fraction(q) <= 1.0
+
+
+class TestServeView:
+    def test_drops_masters(self):
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        s = serve_view(q)
+        assert s["layer"]["kernel"].w is None
+        # decoded values identical
+        np.testing.assert_array_equal(
+            np.asarray(decode_any(s["layer"]["kernel"].d, s["layer"]["kernel"].a)),
+            np.asarray(decode_any(q["layer"]["kernel"].d, q["layer"]["kernel"].a)))
+
+    def test_pack4_roundtrip(self):
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        s = serve_view(q, pack4=True)
+        a_packed = s["layer"]["kernel"].a
+        assert a_packed.dtype == jnp.uint8
+        assert a_packed.shape[-1] == q["layer"]["kernel"].a.shape[-1] // 2
+        np.testing.assert_array_equal(
+            np.asarray(unpack4_last(a_packed)),
+            np.asarray(q["layer"]["kernel"].a))
+
+    def test_pack4_skipped_for_large_K(self):
+        q = quantize_tree(_params(), QuantSpec(bits=8, min_size=1024))
+        s = serve_view(q, pack4=True)
+        assert s["layer"]["kernel"].a.dtype == jnp.int8  # K=256 can't pack
+
+    def test_materialize_unpacks(self):
+        from repro.nn.linear import materialize
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        s = serve_view(q, pack4=True)
+        np.testing.assert_allclose(
+            np.asarray(materialize(s["layer"]["kernel"])),
+            np.asarray(materialize(serve_view(q)["layer"]["kernel"])))
+
+    def test_serve_bytes_match_paper_formula(self):
+        from repro.core.memory import lutq_layer_bits
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        s = serve_view(q, pack4=True)
+        st = s["layer"]["kernel"]
+        n = st.a.size * 2  # packed
+        got_bits = st.a.nbytes * 8 + st.d.nbytes * 8
+        want_bits = lutq_layer_bits(n, K=16, b_float=32)
+        assert got_bits == want_bits
+
+
+class TestKV8:
+    def test_decode_parity_within_tolerance(self):
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.models.reduce import reduced
+        cfg = reduced(get_config("mistral-nemo-12b")).replace(
+            quant=None, act_bits=32, remat=False)
+        cfg8 = cfg.replace(kv_cache_bits=8)
+        params, _ = api.init(jax.random.PRNGKey(1), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
+        c16 = api.init_cache(cfg, 2, 16)
+        c8 = api.init_cache(cfg8, 2, 16)
+        assert c8["layers"]["k"].dtype == jnp.int8
+        assert "k_scale" in c8["layers"]
+        o16, o8 = [], []
+        for t in range(12):
+            l16, c16 = api.decode_step(params, cfg, toks[:, t:t+1], c16)
+            l8, c8 = api.decode_step(params, cfg8, toks[:, t:t+1], c8)
+            o16.append(l16)
+            o8.append(l8)
+        a, b = jnp.concatenate(o16, 1), jnp.concatenate(o8, 1)
+        rel = float(jnp.max(jnp.abs(a - b)) / jnp.max(jnp.abs(a)))
+        assert rel < 0.05, rel
+
+    def test_kv8_cache_is_half_the_bytes(self):
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.models.reduce import reduced
+        cfg = reduced(get_config("mistral-nemo-12b"))
+        nb = lambda c: sum(x.nbytes for x in jax.tree.leaves(c))
+        b16 = nb(api.init_cache(cfg.replace(dtype=jnp.bfloat16), 2, 1024))
+        b8 = nb(api.init_cache(cfg.replace(dtype=jnp.bfloat16,
+                                           kv_cache_bits=8), 2, 1024))
+        assert b8 < b16 * 0.6  # int8 + scales ~= 0.53x
+
+
+class TestMemoryFormulas:
+    @given(st.integers(1, 8), st.integers(1000, 10_000_000))
+    @settings(max_examples=20, deadline=None)
+    def test_property_lutq_bits_formula(self, bits, n):
+        from repro.core.memory import dense_layer_bits, lutq_layer_bits
+        K = 2 ** bits
+        got = lutq_layer_bits(n, K)
+        assert got == K * 32 + n * bits
+        if bits <= 8 and n > K * 32:
+            assert got < dense_layer_bits(n)
+
+    def test_affine_mults(self):
+        from repro.core.memory import affine_mults
+        assert affine_mults(10, 1000) == 10_000
+        assert affine_mults(10, 1000, K=16) == 160

@@ -1,0 +1,79 @@
+"""System-level LUT-Q invariants, property-tested across training.
+
+The paper's central structural claim: at every point during training the
+*effective* network weights take at most K distinct values per tensor
+(d[A]), and under the pow2 constraint every value is +-2^b (or 0) — the
+multiplier-less property. These must hold after real train steps, not
+just at init.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.lutq import LutqState, decode_any
+from repro.core.spec import QuantSpec
+from repro.data.synthetic import MarkovLM
+from repro.models import api
+from repro.models.reduce import reduced
+from repro.nn.tree import tree_paths
+from repro.optim.optimizers import adamw
+from repro.optim.train_state import init_train_state, make_train_step, state_flat
+from repro.core.policy import merge_trainable
+
+
+def _train_some(arch, spec, steps=5, seed=0):
+    cfg = reduced(get_config(arch)).replace(vocab=32, quant=spec, act_bits=8)
+    params, axes = api.init(jax.random.PRNGKey(seed), cfg)
+    params = api.quantize(params, cfg, axes)
+    opt = adamw(1e-3)
+    state = state_flat(init_train_state(params, opt))
+    step = jax.jit(make_train_step(cfg, api.loss_fn, opt))
+    lm = MarkovLM(32, seed=seed)
+    for n in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in lm.batch(0, n, 2, 16).items()}
+        state, _ = step(state, batch)
+    return merge_trainable(state["trainable"], state["static"])
+
+
+class TestMultiplierLessInvariant:
+    def test_at_most_K_distinct_values_after_training(self):
+        spec = QuantSpec(bits=2, min_size=512)
+        params = _train_some("h2o-danube-1.8b", spec)
+        checked = 0
+        for path, leaf in tree_paths(params):
+            if isinstance(leaf, LutqState):
+                q = np.asarray(decode_any(leaf.d, leaf.a))
+                per_slice = q.reshape(-1, q.shape[-2] * q.shape[-1]) \
+                    if leaf.d.ndim > 1 else q.reshape(1, -1)
+                for row in per_slice:
+                    assert len(np.unique(row)) <= spec.K
+                checked += 1
+        assert checked >= 3
+
+    def test_pow2_weights_after_training(self):
+        spec = QuantSpec(bits=4, constraint="pow2", min_size=512)
+        params = _train_some("rwkv6-1.6b", spec, steps=4)
+        checked = 0
+        for path, leaf in tree_paths(params):
+            if isinstance(leaf, LutqState):
+                q = np.abs(np.asarray(decode_any(leaf.d, leaf.a), np.float64))
+                nz = q[q > 0]
+                e = np.log2(nz)
+                assert np.allclose(e, np.round(e), atol=1e-6), path
+                checked += 1
+        assert checked >= 3
+
+    @given(st.sampled_from(["paligemma-3b", "deepseek-v2-lite-16b",
+                            "zamba2-2.7b"]))
+    @settings(max_examples=3, deadline=None)
+    def test_property_assignments_stay_int8_in_range(self, arch):
+        spec = QuantSpec(bits=2, min_size=512)
+        params = _train_some(arch, spec, steps=2)
+        for path, leaf in tree_paths(params):
+            if isinstance(leaf, LutqState):
+                a = np.asarray(leaf.a)
+                assert a.dtype == np.int8
+                assert a.min() >= 0 and a.max() < spec.K
+                assert bool(np.all(np.diff(np.asarray(leaf.d), axis=-1) >= 0))
