@@ -167,10 +167,97 @@ def forward_flops(cfg, B, S, *, useful=False):
     return f
 
 
-def kmeans_flops(cfg, n_q_params):
-    """Step 4: K compares + K masked-sum passes per quantized weight."""
-    K = cfg.quant.K if cfg.quant else 0
-    return 2.0 * K * n_q_params
+# ---------------------------------------------------------------------------
+# per-group quantization resolution (QuantPolicy-aware)
+# ---------------------------------------------------------------------------
+
+# Representative pytree path probed per param group: the policy's rules
+# match real tree paths, so the analytic model resolves each accounting
+# group through the same first-match-wins logic the tree walk uses.
+GROUP_PROBE_PATH = {
+    "attn": ("layers", "attn", "q", "kernel"),
+    "mlp_total": ("layers", "mlp", "wi", "kernel"),
+    "mlp_active": ("layers", "mlp", "wi", "kernel"),
+    "embed": ("embed", "table"),
+    "layer": ("layers", "mix", "r", "kernel"),
+    "shared_attn": ("shared", "attn", "q", "kernel"),
+    "encoder": ("encoder", "layers", "attn", "q", "kernel"),
+    "xattn": ("layers", "xattn", "q", "kernel"),
+}
+
+# groups that alias storage already counted by another group
+_NON_STORAGE_GROUPS = ("mlp_active",)
+
+
+def group_spec(cfg, group: str):
+    """QuantSpec governing a param group under cfg's policy (or None)."""
+    from repro.models.api import resolved_policy
+    policy = resolved_policy(cfg)
+    if policy is None:
+        return None
+    if group in ("mlp_total", "mlp_active") and cfg.n_experts:
+        # MoE archs: the bulk of this group lives under layers/moe/*
+        path = ("layers", "moe", "wi")
+    else:
+        path = GROUP_PROBE_PATH.get(group, ("layers", "x", "kernel"))
+    _, spec = policy.resolve(path, size=1 << 40)
+    return spec
+
+
+def group_bits(cfg) -> Dict[str, Optional[int]]:
+    """Per-group index bitwidth (None = full precision) for reporting."""
+    out = {}
+    for g in param_groups(cfg):
+        if g in _NON_STORAGE_GROUPS:
+            continue
+        spec = group_spec(cfg, g)
+        out[g] = None if spec is None else spec.index_bits
+    return out
+
+
+def weight_store_bytes(cfg, *, pack: bool = False) -> float:
+    """Served weight bytes, policy-resolved per group: bf16 when a group
+    is fp/excluded, int8 indices when quantized, packed 4-bit when
+    ``pack`` and the group's spec fits in 4 index bits."""
+    total = 0.0
+    for g, n in param_groups(cfg).items():
+        if g in _NON_STORAGE_GROUPS:
+            continue
+        spec = group_spec(cfg, g)
+        if spec is None:
+            b = 2.0
+        elif pack and spec.index_bits <= 4:
+            b = 0.5
+        else:
+            b = 1.0
+        total += n * b
+    return total
+
+
+def kmeans_flops(cfg):
+    """Step 4: K compares + K masked-sum passes per quantized weight,
+    per-group K via the policy."""
+    total = 0.0
+    for g, n in param_groups(cfg).items():
+        if g in _NON_STORAGE_GROUPS:
+            continue
+        spec = group_spec(cfg, g)
+        if spec is not None:
+            total += 2.0 * spec.K * n
+    return total
+
+
+def kmeans_hbm_bytes(cfg) -> float:
+    """K masked f32 passes over the masters + assignment write, summed
+    over quantized groups only."""
+    total = 0.0
+    for g, n in param_groups(cfg).items():
+        if g in _NON_STORAGE_GROUPS:
+            continue
+        spec = group_spec(cfg, g)
+        if spec is not None:
+            total += (spec.K * 4 + 1) * n
+    return total
 
 
 def cell_flops(cfg, shape):
@@ -181,8 +268,7 @@ def cell_flops(cfg, shape):
         # saves matmul outputs so the recompute pass is ~free -> 3x
         remat_factor = 3.0 if cfg.remat_policy == "dots" else 4.0
         total = remat_factor * fwd
-        nq = all_params(cfg)  # all matmul weights are LUT-Q (embed incl.)
-        total += kmeans_flops(cfg, nq)
+        total += kmeans_flops(cfg)  # per-group K via the quant policy
         # optimizer elementwise ~ 10 flops/param (negligible, counted)
         total += 10.0 * all_params(cfg)
         useful = 6.0 * active_params(cfg) * B * S
@@ -228,13 +314,15 @@ def cell_traffic(cfg, shape, mesh_devices, model_par, data_par, microbatches):
     Nall = all_params(cfg)
     D = cfg.d_model
     quant = cfg.quant is not None
-    idx_bytes = 1 if quant else 2                  # int8 assignments vs bf16
+    # stored weight bytes, resolved per param group through the policy
+    # (fp groups at bf16, quantized at int8 indices)
+    w_bytes = weight_store_bytes(cfg)
     chips = mesh_devices
 
     if shape.kind == "train":
         T = B * S
         # per chip shares
-        w_gathered = Nall * idx_bytes / model_par   # decoded per model-shard
+        w_gathered = w_bytes / model_par            # decoded per model-shard
         master = Nall * 4 / chips
         acts_layer = (T / (data_par * microbatches)) * D * 2  # bf16 boundary
         L = cfg.n_layers
@@ -248,9 +336,9 @@ def cell_traffic(cfg, shape, mesh_devices, model_par, data_par, microbatches):
         hbm += (1 + opt_mult) * 2 * master
         # kmeans: K masked passes over masters + assignment write
         if quant:
-            hbm += (cfg.quant.K * 4 + 1) * Nall / chips
+            hbm += kmeans_hbm_bytes(cfg) / chips
         # collectives: FSDP all-gather (fwd+bwd) + grad reduce-scatter
-        shard = Nall * idx_bytes / chips
+        shard = w_bytes / chips
         ici = 2 * microbatches * shard * (data_par - 1)
         ici += Nall * 4 / chips * (data_par - 1) / data_par * 2  # grad RS+AG f32
         # TP all-reduce on activations: 2/layer fwd + 2/layer bwd
@@ -260,7 +348,7 @@ def cell_traffic(cfg, shape, mesh_devices, model_par, data_par, microbatches):
 
     if shape.kind == "prefill":
         T = B * S
-        w = Nall * idx_bytes / model_par
+        w = w_bytes / model_par
         acts = T * D * 2 / data_par
         kv = 2 * cfg.n_layers * T * cfg.n_kv_heads * cfg.resolved_head_dim * 2 / chips
         hbm = w + 2 * acts * cfg.n_layers + kv
@@ -268,10 +356,9 @@ def cell_traffic(cfg, shape, mesh_devices, model_par, data_par, microbatches):
         ici = 2 * cfg.n_layers * act_chip * 2 * (model_par - 1) / model_par
         return hbm, ici
 
-    # decode: weights + cache read once per token
-    if quant and cfg.pack_assignments:
-        idx_bytes = 0.5  # two 4-bit indices per byte
-    w = Nall * idx_bytes / chips  # weights fully sharded (FSDP+TP)
+    # decode: weights + cache read once per token; pack_assignments
+    # quarters the bytes of any group whose spec fits 4 index bits
+    w = weight_store_bytes(cfg, pack=cfg.pack_assignments) / chips
     kv_bytes = 1.0 + 2.0 / cfg.resolved_head_dim if cfg.kv_cache_bits == 8 else 2.0
     if cfg.family == "ssm":
         H = cfg.d_model // cfg.ssm_head_dim
@@ -317,6 +404,10 @@ def analyze_cell(arch: str, shape_name: str, artifact: Optional[dict],
     t_useful = useful / (chips * PEAK_FLOPS)
     rec = {
         "arch": arch, "shape": shape_name,
+        # per-group index bitwidth under the config's QuantPolicy
+        # (None = group stays full precision)
+        "quant_bits_by_group": group_bits(cfg),
+        "weight_store_gib": weight_store_bytes(cfg) / 2**30,
         "flops_total": flops, "model_flops": useful,
         "useful_ratio": useful / flops if flops else 0.0,
         "hbm_bytes_chip": hbm, "ici_bytes_chip": ici,
@@ -392,6 +483,16 @@ def main(argv=None):
               f"{r['mfu_proj']*100:5.1f}% "
               f"{r['useful_ratio']*100:7.1f}% "
               f"{r.get('temp_gib_dev', float('nan')):8.1f}")
+    print("\nquantization layout (index bits per param group; fp = full precision):")
+    seen = set()
+    for r in rows:
+        if r["arch"] in seen or "quant_bits_by_group" not in r:
+            continue
+        seen.add(r["arch"])
+        bits = ", ".join(f"{g}={'fp' if b is None else b}"
+                         for g, b in r["quant_bits_by_group"].items())
+        print(f"  {r['arch']:24s} {bits} "
+              f"({r['weight_store_gib']:.1f} GiB served)")
     Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.json_out).write_text(json.dumps(rows, indent=1, default=float))
     print(f"\nfix hints by dominant term:")

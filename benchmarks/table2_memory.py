@@ -15,12 +15,29 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core.memory import footprint_mb, lutq_layer_bits  # noqa: E402
+from repro.core.memory import (  # noqa: E402
+    footprint_mb,
+    lutq_layer_bits,
+    policy_footprint,
+)
+from repro.core.rules import QuantPolicy, QuantRule  # noqa: E402
+from repro.core.spec import LUTQ_2BIT_POW2, LUTQ_4BIT_POW2  # noqa: E402
 from repro.models.resnet import (  # noqa: E402
     resnet_activation_elems,
     resnet_layer_sizes,
     resnet_mults,
 )
+
+# Mixed-precision policy for the per-rule breakdown: the paper's actual
+# experimental protocol — first (stem) and last (fc) layers stay fp,
+# early stages 4-bit pow2, late stages 2-bit pow2.
+RESNET_MIXED = QuantPolicy(
+    rules=(QuantRule("stem", None, name="first-layer-fp"),
+           QuantRule("fc", None, name="last-layer-fp"),
+           QuantRule("s[01]*", LUTQ_4BIT_POW2, min_size=0,
+                     name="early-4bit-pow2"),
+           QuantRule("*", LUTQ_2BIT_POW2, min_size=0, name="late-2bit-pow2")),
+    name="resnet_mixed")
 
 ROWS = [
     # (label, weight K, act bits)
@@ -61,6 +78,17 @@ def run(emit=print):
     assert abs(fp50 - 97.5) < 6.0
     assert abs(q50 - 7.4) < 0.6
     assert ratio > 50
+
+    # per-rule bitwidth/memory breakdown under a mixed QuantPolicy
+    emit(f"\n# ResNet-50 per-rule breakdown (policy {RESNET_MIXED.name!r})")
+    rows = policy_footprint(resnet_layer_sizes(50), RESNET_MIXED)
+    emit(f"  {'rule':20s} {'tensors':>7s} {'params':>12s} "
+         f"{'bits/w':>6s} {'MiB':>8s}")
+    for name, r in rows.items():
+        bpw = "-" if r["bits_per_weight"] is None else str(r["bits_per_weight"])
+        emit(f"  {name:20s} {r['n_tensors']:7d} {r['n_params']:12d} "
+             f"{bpw:>6s} {r['mib']:8.3f}")
+    assert rows["(total)"]["mib"] < fp50 / 4  # mixed policy still ~10x smaller
     return results
 
 

@@ -69,3 +69,26 @@ n_fp = sum(x.w.nbytes if isinstance(x, LutqState) else x.nbytes
            for _, x in tree_paths(params) if x is not None)
 print(f"deployment size {n_bytes/2**20:.2f} MiB vs fp32 {n_fp/2**20:.2f} MiB "
       f"({n_fp/n_bytes:.1f}x smaller)")
+
+# 6. mixed precision: a QuantPolicy maps path patterns to specs with
+#    first-match-wins semantics — here fp embeddings + excluded head,
+#    4-bit pow2 attention, 2-bit ternary MLPs (the paper's actual
+#    protocol; see docs/quant_policy.md for the rule syntax)
+from repro.core.policy import format_breakdown, rule_breakdown
+from repro.core.rules import QuantPolicy, QuantRule
+from repro.core.spec import LUTQ_4BIT_POW2, TERNARY_SCALED
+
+policy = QuantPolicy(rules=(
+    QuantRule("re:(^|/)table$", None, name="embed-fp"),
+    QuantRule("lm_head/*", None, name="head-fp"),
+    QuantRule("*/attn/*", LUTQ_4BIT_POW2, min_size=512, name="attn-4bit"),
+    QuantRule("*/mlp/*", TERNARY_SCALED, min_size=512, name="mlp-ternary"),
+    QuantRule("*", LUTQ_4BIT_POW2, min_size=512, name="rest-4bit"),
+), name="quickstart_mixed")
+
+mixed_cfg = cfg.replace(quant=policy)  # ModelConfig.quant takes either form
+mparams, maxes = api.init(jax.random.PRNGKey(0), mixed_cfg)
+mparams = api.quantize(mparams, mixed_cfg, maxes)
+mdeploy = serve_view(mparams, pack4=True, policy=policy)
+print("\nmixed-precision breakdown (per rule):")
+print(format_breakdown(rule_breakdown(mdeploy, policy)))

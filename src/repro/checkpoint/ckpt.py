@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.core.lutq import LutqState
+from repro.core.rules import QuantPolicy
 
 _TAG = {"LutqState": LutqState}
 
@@ -40,8 +41,10 @@ def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
         for k in sorted(tree):
             out += _flatten(tree[k], f"{prefix}{k}/")
     elif isinstance(tree, LutqState):
-        out += _flatten({"__lutq__w": tree.w, "__lutq__d": tree.d,
-                         "__lutq__a": tree.a}, prefix)
+        node = {"__lutq__w": tree.w, "__lutq__d": tree.d, "__lutq__a": tree.a}
+        if tree.sid is not None:
+            node["__lutq__sid"] = tree.sid
+        out += _flatten(node, prefix)
     elif tree is None:
         out.append((prefix.rstrip("/") + "@none", None))
     else:
@@ -64,15 +67,22 @@ def _unflatten(items: Dict[str, Any]):
         if isinstance(node, dict):
             if "__lutq__w" in node:
                 return LutqState(w=node["__lutq__w"], d=node["__lutq__d"],
-                                 a=node["__lutq__a"])
+                                 a=node["__lutq__a"],
+                                 sid=node.get("__lutq__sid"))
             return {k: rebuild(v) for k, v in node.items()}
         return node
 
     return rebuild(tree)
 
 
-def save(tree, directory: str, step: int, *, keep_n: int = 3) -> str:
-    """Synchronous checkpoint write. Returns the final path."""
+def save(tree, directory: str, step: int, *, keep_n: int = 3,
+         policy: Optional[QuantPolicy] = None) -> str:
+    """Synchronous checkpoint write. Returns the final path.
+
+    ``policy``: the QuantPolicy governing any LutqState leaves; stored
+    in the manifest so a restore can rebuild the exact per-leaf spec
+    mapping (see :func:`load_policy`).
+    """
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     tmp = d / f"step_{step:08d}.tmp"
@@ -82,6 +92,8 @@ def save(tree, directory: str, step: int, *, keep_n: int = 3) -> str:
     tmp.mkdir()
     items = _flatten(tree)
     manifest = {"step": step, "leaves": []}
+    if policy is not None:
+        manifest["quant_policy"] = policy.to_json_dict()
     for i, (key, val) in enumerate(items):
         entry = {"key": key, "file": None}
         if val is not None:
@@ -107,9 +119,11 @@ def _gc(d: Path, keep_n: int):
 class AsyncCheckpointer:
     """Snapshot-to-host synchronously, write on a background thread."""
 
-    def __init__(self, directory: str, keep_n: int = 3):
+    def __init__(self, directory: str, keep_n: int = 3,
+                 policy: Optional[QuantPolicy] = None):
         self.directory = directory
         self.keep_n = keep_n
+        self.policy = policy
         self._thread: Optional[threading.Thread] = None
         self.last_path: Optional[str] = None
 
@@ -121,7 +135,7 @@ class AsyncCheckpointer:
 
         def _write():
             self.last_path = save(host_tree, self.directory, step,
-                                  keep_n=self.keep_n)
+                                  keep_n=self.keep_n, policy=self.policy)
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -139,6 +153,19 @@ def latest_step(directory: str) -> Optional[int]:
     steps = sorted(p.name for p in d.glob("step_????????") if p.is_dir()
                    and (p / "manifest.json").exists())
     return int(steps[-1].split("_")[1]) if steps else None
+
+
+def load_policy(directory: str, step: Optional[int] = None
+                ) -> Optional[QuantPolicy]:
+    """QuantPolicy stored with a checkpoint, or None (fp / legacy)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    pol = manifest.get("quant_policy")
+    return None if pol is None else QuantPolicy.from_json_dict(pol)
 
 
 def restore(directory: str, step: Optional[int] = None, *, shardings=None):

@@ -30,11 +30,18 @@ class LutqState(NamedTuple):
     w: full-precision master weights (paper's W), any shape.
     d: dictionary, shape (K,), sorted ascending.
     a: assignments, int8, same shape as w (values in [0, K)).
+    sid: resolved QuantPolicy rule id (int32) recording which rule
+      produced this state, or None (legacy trees). Shaped like d's
+      stack dims — d.shape[:-1] — so scan-over-layers slicing and vmap
+      see a consistent leading axis; scalar for unstacked tensors. None
+      flattens away as an empty pytree, so 3-field construction and old
+      checkpoints keep working unchanged.
     """
 
     w: jax.Array
     d: jax.Array
     a: jax.Array
+    sid: Optional[jax.Array] = None
 
 
 # ---------------------------------------------------------------------------
@@ -189,8 +196,9 @@ def _prune_mask(w: jax.Array, prune_frac: float) -> jax.Array:
     k = int(round(prune_frac * flat.size))
     if k <= 0:
         return jnp.zeros(w.shape, dtype=bool)
-    # threshold = k-th smallest magnitude
-    thresh = jnp.sort(flat)[k - 1]
+    # threshold = k-th smallest magnitude, via top_k on negated values:
+    # O(N log k) selection instead of a full O(N log N) sort per step.
+    thresh = -jax.lax.top_k(-flat, k)[0][k - 1]
     return jnp.abs(w) <= thresh
 
 
@@ -289,7 +297,7 @@ def update_state(state: LutqState, spec: QuantSpec) -> LutqState:
     """Paper step 4 applied to a LutqState (after the optimizer touched w)."""
     fn = kmeans_update_segsum if state.w.size >= _SEGSUM_THRESHOLD else kmeans_update
     d, a = fn(state.w, state.d, spec)
-    return LutqState(w=state.w, d=d, a=a)
+    return LutqState(w=state.w, d=d, a=a, sid=state.sid)
 
 
 # ---------------------------------------------------------------------------

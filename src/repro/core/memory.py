@@ -71,3 +71,58 @@ def footprint_mb(
             bits += lutq_layer_bits(n, K, b_float)
     bits += act_elems * act_bits
     return bits / 8 / 2**20
+
+
+def policy_footprint(
+    layer_sizes: Iterable[Tuple[str, int]],
+    policy,
+    *,
+    b_float: int = 32,
+) -> Dict[str, Dict]:
+    """Per-rule storage breakdown under a QuantPolicy (analytic).
+
+    layer_sizes: (name, n_params) pairs; names are treated as
+    pytree-style paths (split on '/') for rule matching. Returns
+    {rule_name: {n_params, n_tensors, bits_per_weight, mib}} plus an
+    '(unmatched)' row for tensors no rule claims (stored full-precision)
+    and a '(total)' row.
+    """
+    from repro.core.rules import as_policy
+
+    pol = as_policy(policy)
+    rows: Dict[str, Dict] = {}
+
+    def row(name, bits_per_weight):
+        return rows.setdefault(name, {"n_params": 0, "n_tensors": 0,
+                                      "bits_per_weight": bits_per_weight,
+                                      "bits": 0})
+
+    for name, n in layer_sizes:
+        path = tuple(name.split("/"))
+        i, spec = pol.resolve(path, size=n)
+        if spec is None:
+            if i is None:
+                label = "(unmatched)"
+            elif pol.rules[i].spec is not None:
+                # claimed by a spec rule but under its size floor: keep
+                # these fp leaves in their own row so each row's
+                # bits_per_weight stays homogeneous
+                label = f"{pol.rules[i].rule_name} (fp<floor)"
+            else:
+                label = pol.rules[i].rule_name
+            r = row(label, b_float)
+            r["bits"] += dense_layer_bits(n, b_float)
+        else:
+            r = row(pol.rules[i].rule_name, spec.index_bits)
+            r["bits"] += lutq_layer_bits(n, spec.K, b_float)
+        r["n_params"] += n
+        r["n_tensors"] += 1
+
+    total = {"n_params": sum(r["n_params"] for r in rows.values()),
+             "n_tensors": sum(r["n_tensors"] for r in rows.values()),
+             "bits_per_weight": None,
+             "bits": sum(r["bits"] for r in rows.values())}
+    rows["(total)"] = total
+    for r in rows.values():
+        r["mib"] = r["bits"] / 8 / 2**20
+    return rows

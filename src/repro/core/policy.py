@@ -1,25 +1,37 @@
-"""Quantization policy: which tensors get LUT-Q, with which spec.
+"""Quantization policy application: which tensors get LUT-Q, with which spec.
 
 Walks a parameter pytree, converts eligible kernel leaves to
 :class:`LutqState` (per-tensor dictionary; stacked leading axes — e.g.
 scan-over-layers or MoE experts — get per-slice dictionaries via vmap),
 and provides the step-4 k-means refresh over a whole tree.
+
+Which leaves are converted, and with which :class:`QuantSpec`, is driven
+by a :class:`repro.core.rules.QuantPolicy` — an ordered first-match-wins
+rule list over pytree paths. Every entry point accepts either a policy
+or a bare ``QuantSpec`` (auto-wrapped as ``uniform(spec)``, reproducing
+the historical global-knob behavior bit-identically). Each converted
+leaf records the id of the rule that claimed it in ``LutqState.sid``;
+per-leaf dispatch (k-means refresh, serve packing, reporting) re-resolves
+by path, which is deterministic and jit-static.
 """
 from __future__ import annotations
 
+import math
 import re
-from typing import Callable, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.lutq import LutqState, init_state, update_state
+from repro.core.rules import QuantLike, QuantPolicy, as_policy
 from repro.core.spec import QuantSpec
 from repro.nn.tree import map_with_path, tree_paths
 
 # Parameters that never get quantized regardless of size (norm gains,
 # biases, routers, decay/bonus vectors, conv states...). The paper
-# quantizes affine/convolution *weights* only.
+# quantizes affine/convolution *weights* only. This base eligibility
+# gate applies before any policy rule is consulted.
 _EXCLUDE = re.compile(
     r"(bias|scale|ln|norm|router|A_log|dt_bias|^D$|w0|^u$|mix_|conv_b|gamma|beta)"
 )
@@ -66,13 +78,19 @@ def _vmapped(fn, n: int):
     return fn
 
 
-def quantize_tree(params, spec: QuantSpec, predicate: Callable = default_predicate,
+def quantize_tree(params, quant: QuantLike, predicate: Callable = default_predicate,
                   axes=None):
     """Convert eligible leaves to LutqState (per-slice dictionaries).
 
+    ``quant``: a QuantPolicy, or a bare QuantSpec (== uniform policy).
+    ``predicate``: base eligibility gate (norms/biases/1-D leaves never
+    quantize); rules then pick the per-leaf spec among eligible leaves.
     ``axes``: optional logical-axes tree (as returned by model init) used
     to identify stack axes exactly.
     """
+    policy = as_policy(quant)
+    if policy is None:
+        return params
 
     def lookup_axes(path):
         node = axes
@@ -85,24 +103,48 @@ def quantize_tree(params, spec: QuantSpec, predicate: Callable = default_predica
     def convert(path, leaf):
         if isinstance(leaf, LutqState) or not predicate(path, leaf):
             return leaf
-        if leaf.size < spec.min_size:
+        rid, spec = policy.resolve(path, size=leaf.size)
+        if spec is None:
             return leaf
         nstack = _stacked_dims(path, leaf, lookup_axes(path))
         f = _vmapped(lambda w: init_state(w, spec), nstack)
-        return f(leaf)
+        st = f(leaf)
+        # sid mirrors the stack dims so lax.scan over a layer stack
+        # slices it consistently with w/d/a.
+        return st._replace(sid=jnp.full(st.d.shape[:-1], rid, jnp.int32))
 
     return map_with_path(convert, params)
 
 
-def kmeans_tree(params, spec: QuantSpec):
-    """Paper step 4 over every quantized leaf in the tree."""
+def _resolve_for_state(policy: QuantPolicy, path, leaf: LutqState
+                       ) -> Optional[QuantSpec]:
+    """Spec governing an existing LutqState leaf (path re-resolution).
+
+    Size floors are ignored: the leaf is already quantized, so the rule's
+    spec applies regardless of how the floor would gate fresh conversion.
+    """
+    i = policy.match(path)
+    if i is None:
+        return None
+    return policy.rules[i].spec
+
+
+def kmeans_tree(params, quant: QuantLike):
+    """Paper step 4 over every quantized leaf, honoring each leaf's rule."""
+    policy = as_policy(quant)
 
     def refresh(path, leaf):
         if not isinstance(leaf, LutqState):
             return leaf
+        spec = None if policy is None else _resolve_for_state(policy, path, leaf)
+        if spec is None:
+            # policy no longer covers this leaf (or exclusion rule):
+            # leave the existing (d, A) frozen rather than guess a spec.
+            return leaf
         nstack = leaf.d.ndim - 1
+        core = LutqState(w=leaf.w, d=leaf.d, a=leaf.a)
         f = _vmapped(lambda s: update_state(s, spec), nstack)
-        return f(leaf)
+        return f(core)._replace(sid=leaf.sid)
 
     return map_with_path(refresh, params)
 
@@ -123,15 +165,18 @@ def split_trainable(params):
     """Split a params tree into (trainable, static).
 
     LutqState leaves contribute their full-precision master ``w`` to the
-    trainable tree; dictionary + assignments (and any integer/bool leaf)
-    go to the static tree. ``merge_trainable`` reassembles. This is how
-    train steps differentiate only the paper's W (step 3) while (d, A)
-    are refreshed by k-means (step 4).
+    trainable tree; dictionary + assignments + rule id (and any
+    integer/bool leaf) go to the static tree. ``merge_trainable``
+    reassembles. This is how train steps differentiate only the paper's
+    W (step 3) while (d, A) are refreshed by k-means (step 4).
     """
 
     def split(path, leaf):
         if isinstance(leaf, LutqState):
-            return leaf.w, {"__lutq_d": leaf.d, "__lutq_a": leaf.a}
+            s = {"__lutq_d": leaf.d, "__lutq_a": leaf.a}
+            if leaf.sid is not None:
+                s["__lutq_sid"] = leaf.sid
+            return leaf.w, s
         if leaf is not None and hasattr(leaf, "dtype") and not jnp.issubdtype(
                 leaf.dtype, jnp.inexact):
             return None, {"__static": leaf}
@@ -145,7 +190,8 @@ def split_trainable(params):
 def merge_trainable(trainable, static):
     def merge(t, s):
         if isinstance(s, dict) and "__lutq_d" in s:
-            return LutqState(w=t, d=s["__lutq_d"], a=s["__lutq_a"])
+            return LutqState(w=t, d=s["__lutq_d"], a=s["__lutq_a"],
+                             sid=s.get("__lutq_sid"))
         if isinstance(s, dict) and "__static" in s:
             return s["__static"]
         if isinstance(t, dict):
@@ -155,7 +201,7 @@ def merge_trainable(trainable, static):
     return merge(trainable, static)
 
 
-def serve_view(params, *, pack4: bool = False):
+def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = None):
     """Deployment form: drop the full-precision masters, keep (d, A).
 
     This is the paper's memory claim made literal — the served model's
@@ -164,16 +210,26 @@ def serve_view(params, *, pack4: bool = False):
     the last axis (convention: uint8 dtype == packed; int8 == raw), so
     HBM weight traffic at decode is N/2 bytes — the beyond-paper §Perf
     lever matching the Pallas ``lutq_gemv_packed`` kernel layout.
+
+    ``policy``: optional per-leaf gate — when given, a leaf is packed
+    only if its resolved rule's spec has index_bits <= 4 (so a mixed
+    policy can keep 8-bit attention assignments raw while packing the
+    2-bit MLPs).
     """
+    pol = as_policy(policy)
 
     def conv(path, leaf):
         if isinstance(leaf, LutqState):
             a = leaf.a
-            if pack4 and leaf.d.shape[-1] <= 16 and a.shape[-1] % 2 == 0:
+            pack = pack4 and leaf.d.shape[-1] <= 16 and a.shape[-1] % 2 == 0
+            if pack and pol is not None:
+                spec = _resolve_for_state(pol, path, leaf)
+                pack = spec is not None and spec.index_bits <= 4
+            if pack:
                 lo = a[..., 0::2].astype(jnp.uint8) & 0xF
                 hi = a[..., 1::2].astype(jnp.uint8) & 0xF
                 a = (lo | (hi << 4)).astype(jnp.uint8)
-            return LutqState(w=None, d=leaf.d, a=a)
+            return LutqState(w=None, d=leaf.d, a=a, sid=leaf.sid)
         return leaf
 
     return map_with_path(conv, params)
@@ -186,13 +242,95 @@ def unpack4_last(a: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=-1).reshape(*a.shape[:-1], a.shape[-1] * 2)
 
 
+def lutq_weight_count(leaf: LutqState) -> int:
+    """Number of logical weights a LutqState covers.
+
+    Works on train trees (w present) and serve_view trees (w=None):
+    assignments mirror the weight shape, with uint8 meaning two packed
+    4-bit indices per stored byte.
+    """
+    if leaf.w is not None:
+        return leaf.w.size
+    n = leaf.a.size
+    if leaf.a.dtype == jnp.uint8:
+        n *= 2
+    return n
+
+
 def quantized_fraction(params) -> float:
     """Fraction of parameters covered by LUT-Q (for reporting)."""
     q = t = 0
     for _, leaf in tree_paths(params):
         if isinstance(leaf, LutqState):
-            q += leaf.w.size
-            t += leaf.w.size
+            n = lutq_weight_count(leaf)
+            q += n
+            t += n
         elif leaf is not None and hasattr(leaf, "size"):
             t += leaf.size
     return q / max(t, 1)
+
+
+def effective_bits(params) -> float:
+    """Average index bits per quantized weight (4 for K<=16, etc.).
+
+    Reported alongside quantized_fraction: a mixed policy's memory story
+    is "X% of params at an average of Y bits".
+    """
+    bits = n = 0
+    for _, leaf in tree_paths(params):
+        if isinstance(leaf, LutqState):
+            cnt = lutq_weight_count(leaf)
+            K = leaf.d.shape[-1]
+            bits += cnt * max(1, math.ceil(math.log2(K)))
+            n += cnt
+    return bits / n if n else 0.0
+
+
+def rule_breakdown(params, quant: QuantLike) -> List[Dict]:
+    """Per-rule coverage/memory report over an actual (quantized) tree.
+
+    Returns one row per policy rule plus a trailing "unmatched" row:
+    {rule, pattern, n_params, n_quantized, index_bits, serve_bytes}.
+    serve_bytes is the actual resident storage of each leaf as it exists
+    in the given tree (dictionary + assignment bytes for quantized
+    leaves — packed or not; native nbytes for fp leaves), so the rows
+    sum to the tree's real (d, A)+fp footprint.
+    """
+    policy = as_policy(quant)
+    rows = [{"rule": r.rule_name, "pattern": r.pattern,
+             "index_bits": (0 if r.spec is None else r.spec.index_bits),
+             "n_params": 0, "n_quantized": 0, "serve_bytes": 0}
+            for r in policy.rules]
+    rows.append({"rule": "(unmatched)", "pattern": "-", "index_bits": 0,
+                 "n_params": 0, "n_quantized": 0, "serve_bytes": 0})
+
+    for path, leaf in tree_paths(params):
+        if leaf is None or not (isinstance(leaf, LutqState)
+                                or hasattr(leaf, "size")):
+            continue
+        i = policy.match(path)
+        row = rows[i if i is not None else -1]
+        if isinstance(leaf, LutqState):
+            n = lutq_weight_count(leaf)
+            row["n_params"] += n
+            row["n_quantized"] += n
+            row["serve_bytes"] += leaf.d.nbytes + leaf.a.nbytes
+            if leaf.sid is not None:
+                row["serve_bytes"] += leaf.sid.nbytes
+        else:
+            row["n_params"] += leaf.size
+            row["serve_bytes"] += leaf.nbytes
+    return rows
+
+
+def format_breakdown(rows: List[Dict]) -> str:
+    lines = [f"{'rule':24s} {'params':>12s} {'quantized':>12s} "
+             f"{'bits':>5s} {'serve MiB':>10s}"]
+    for r in rows:
+        if r["n_params"] == 0:
+            continue
+        bits = str(r["index_bits"]) if r["n_quantized"] else "fp"
+        lines.append(f"{r['rule']:24s} {r['n_params']:12d} "
+                     f"{r['n_quantized']:12d} {bits:>5s} "
+                     f"{r['serve_bytes']/2**20:10.3f}")
+    return "\n".join(lines)

@@ -66,6 +66,19 @@ class QuantSpec:
         return max(1, math.ceil(math.log2(self.K)))
 
 
+def spec_to_dict(spec: QuantSpec) -> dict:
+    """JSON-serializable form (QuantPolicy / checkpoint manifests)."""
+    return dataclasses.asdict(spec)
+
+
+def spec_from_dict(d: dict) -> QuantSpec:
+    known = {f.name for f in dataclasses.fields(QuantSpec)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"unknown QuantSpec fields {sorted(unknown)}")
+    return QuantSpec(**d)
+
+
 # Common presets used throughout the experiments / configs.
 LUTQ_4BIT = QuantSpec(bits=4)
 LUTQ_2BIT = QuantSpec(bits=2)

@@ -74,7 +74,12 @@ def ring_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
     x: the *local* shard, chunked along dim 0 into `n` pieces. Total
     bytes on the wire per device: 2 * (n-1)/n * |x| — the textbook ring.
     """
-    n = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size is missing on older jax; psum of a literal 1
+    # resolves to a concrete int under shard_map there.
+    if hasattr(jax.lax, "axis_size"):
+        n = jax.lax.axis_size(axis_name)
+    else:
+        n = jax.lax.psum(1, axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)

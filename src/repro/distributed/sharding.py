@@ -108,7 +108,8 @@ def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None):
             nstack = shp.d.ndim - 1
             dspec = P(*([wspec[i] if i < len(wspec) else None
                          for i in range(nstack)] + [None])) if nstack else P()
-            return LutqState(w=wspec, d=dspec, a=wspec)
+            sidspec = P() if getattr(shp, "sid", None) is not None else None
+            return LutqState(w=wspec, d=dspec, a=wspec, sid=sidspec)
         shape = getattr(shp, "shape", None)
         return pspec_for(tuple(logical), mesh, shape)
 

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, list_archs
-from repro.core.policy import serve_view
+from repro.core.policy import (effective_bits, format_breakdown,
+                               quantized_fraction, rule_breakdown, serve_view)
+from repro.core.rules import get_policy
 from repro.core.spec import QuantSpec
 from repro.models import api
 from repro.models.reduce import reduced
@@ -40,23 +42,36 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--quant-policy", default=None,
+                    help="mixed-precision policy: preset name, "
+                         "'uniform:<bits>[:<constraint>]', inline JSON, or "
+                         "@policy.json; supersedes --quant-bits")
     ap.add_argument("--quant-bits", type=int, default=4)
+    ap.add_argument("--pack4", action="store_true",
+                    help="pack two 4-bit assignments per byte (K<=16 leaves)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    cfg = cfg.replace(quant=QuantSpec(bits=args.quant_bits, min_size=1024),
-                      act_bits=8)
+    if args.quant_policy:
+        cfg = cfg.replace(quant=get_policy(args.quant_policy), act_bits=8)
+    else:
+        cfg = cfg.replace(quant=QuantSpec(bits=args.quant_bits, min_size=1024),
+                          act_bits=8)
 
     params, axes = api.init(jax.random.PRNGKey(args.seed), cfg)
     fp_bytes = footprint_bytes(params)
     qparams = api.quantize(params, cfg, axes)
-    sparams = serve_view(qparams)
+    policy = api.resolved_policy(cfg)
+    sparams = serve_view(qparams, pack4=args.pack4, policy=policy)
     q_bytes = footprint_bytes(sparams)
     print(f"[serve] {cfg.name}: weights fp32 {fp_bytes/2**20:.2f} MiB -> "
-          f"LUT-Q {q_bytes/2**20:.2f} MiB ({fp_bytes/max(q_bytes,1):.2f}x)")
+          f"LUT-Q {q_bytes/2**20:.2f} MiB ({fp_bytes/max(q_bytes,1):.2f}x) | "
+          f"quantized {quantized_fraction(sparams)*100:.1f}% of params "
+          f"@ {effective_bits(sparams):.2f} effective bits")
+    print(format_breakdown(rule_breakdown(sparams, policy)))
 
     B, P = args.batch, args.prompt_len
     max_len = P + args.gen

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, list_archs
+from repro.core.rules import get_policy
 from repro.core.spec import QuantSpec
 from repro.data.synthetic import MarkovLM
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -33,7 +34,11 @@ def build(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    if args.quant_bits > 0:
+    if getattr(args, "quant_policy", None):
+        policy = get_policy(args.quant_policy)
+        cfg = cfg.replace(quant=policy, act_bits=args.act_bits)
+        print(policy.describe())
+    elif args.quant_bits > 0:
         cfg = cfg.replace(quant=QuantSpec(bits=args.quant_bits,
                                           constraint=args.quant_constraint,
                                           kmeans_iters=1,
@@ -65,7 +70,14 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--quant-bits", type=int, default=4)
+    ap.add_argument("--quant-policy", default=None,
+                    help="mixed-precision policy: preset name "
+                         "(paper_default | serving_aggressive | mixed_paper), "
+                         "'uniform:<bits>[:<constraint>]', inline JSON, or "
+                         "@policy.json; supersedes --quant-bits")
+    ap.add_argument("--quant-bits", type=int, default=4,
+                    help="legacy uniform knob (ignored when --quant-policy "
+                         "is given)")
     ap.add_argument("--quant-constraint", default="pow2",
                     choices=["none", "pow2", "binary", "ternary"])
     ap.add_argument("--quant-min-size", type=int, default=4096)
@@ -94,8 +106,10 @@ def main(argv=None):
                 key, (args.batch, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
         return batch
 
+    from repro.models.api import resolved_policy
     loop = TrainLoop(step_fn, make_batch, ckpt_dir=args.ckpt_dir,
-                     ckpt_every=args.ckpt_every, log_every=10)
+                     ckpt_every=args.ckpt_every, log_every=10,
+                     quant_policy=resolved_policy(cfg))
     state, step = loop.run(state, args.steps)
     losses = [h["loss"] for h in loop.history]
     if losses:

@@ -54,19 +54,29 @@ def init(key, cfg: ModelConfig):
     raise ValueError(cfg.family)
 
 
+def resolved_policy(cfg: ModelConfig):
+    """The effective QuantPolicy for a config (None = fp baseline).
+
+    ``cfg.quant`` may be a bare QuantSpec (wrapped as a uniform policy)
+    or a QuantPolicy; ``quantize_embed=False`` folds into a leading
+    exclusion rule for embedding tables.
+    """
+    from repro.core.rules import EMBED_PATTERN, QuantRule, as_policy
+
+    policy = as_policy(cfg.quant)
+    if policy is None:
+        return None
+    if not cfg.quantize_embed:
+        policy = policy.prepend(QuantRule(EMBED_PATTERN, None, name="embed-fp"))
+    return policy
+
+
 def quantize(params, cfg: ModelConfig, axes=None):
     """Install LUT-Q state on every eligible kernel (paper step 0)."""
-    if cfg.quant is None:
+    policy = resolved_policy(cfg)
+    if policy is None:
         return params
-    spec = cfg.quant
-    from repro.core.policy import default_predicate
-
-    def pred(path, leaf):
-        if not cfg.quantize_embed and path and path[-1] == "table":
-            return False
-        return default_predicate(path, leaf)
-
-    return quantize_tree(params, spec, pred, axes=axes)
+    return quantize_tree(params, policy, axes=axes)
 
 
 def loss_fn(params, cfg: ModelConfig, batch):

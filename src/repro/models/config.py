@@ -2,10 +2,11 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro.core.rules import QuantPolicy
 from repro.core.spec import QuantSpec
 
 
@@ -67,8 +68,10 @@ class ModelConfig:
     kv_cache_bits: int = 16     # 8 = int8 KV cache with per-step scales
     pack_assignments: bool = False  # two 4-bit LUT indices per byte (K<=16)
 
-    # quantization (the paper's technique; None = fp baseline)
-    quant: Optional[QuantSpec] = None
+    # quantization (the paper's technique; None = fp baseline).
+    # A bare QuantSpec means "uniform policy" (auto-wrapped); a
+    # QuantPolicy gives rule-based mixed precision (see core/rules.py).
+    quant: Optional[Union[QuantSpec, QuantPolicy]] = None
     act_bits: int = 32
     quantize_embed: bool = True
 

@@ -114,11 +114,14 @@ def make_train_step(
         new_trainable, new_opt = optimizer.update(grads, state["opt_state"],
                                                   trainable, state["step"])
 
-        # step 4: k-means refresh of every (d, A)
+        # step 4: k-means refresh of every (d, A), per-leaf spec via the
+        # config's resolved policy (rule ids must line up with the ones
+        # stamped at quantize time, hence resolved_policy not cfg.quant)
         new_static = static
         if cfg.quant is not None:
+            from repro.models.api import resolved_policy
             merged = merge_trainable(new_trainable, static)
-            merged = kmeans_tree(merged, cfg.quant)
+            merged = kmeans_tree(merged, resolved_policy(cfg))
             _, new_static = split_trainable(merged)
 
         new_state = {"trainable": new_trainable, "static": new_static,

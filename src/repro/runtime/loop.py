@@ -54,6 +54,7 @@ class TrainLoop:
         keep_n: int = 3,
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
+        quant_policy=None,
     ):
         self.train_step = train_step
         self.make_batch = make_batch
@@ -62,7 +63,8 @@ class TrainLoop:
         self.log_every = log_every
         self.log = log_fn
         self.watchdog = StragglerWatchdog()
-        self.ckpt = AsyncCheckpointer(ckpt_dir, keep_n) if ckpt_dir else None
+        self.ckpt = (AsyncCheckpointer(ckpt_dir, keep_n, policy=quant_policy)
+                     if ckpt_dir else None)
         self._preempted = threading.Event()
         self.history: List[Dict[str, float]] = []
 

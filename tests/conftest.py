@@ -1,0 +1,14 @@
+"""Shared test configuration.
+
+Ensures ``src`` is importable when pytest is run without PYTHONPATH, and
+makes the sibling ``hypothesis_compat`` shim importable from any rootdir
+(property-based tests degrade to skips when hypothesis is absent instead
+of dying at collection).
+"""
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT / "src"), str(Path(__file__).resolve().parent)):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,43 @@
+"""Degrade hypothesis-based tests to skips when hypothesis is absent.
+
+The container may not ship hypothesis (it is a dev-only dependency, see
+requirements-dev.txt). Importing ``given``/``settings``/``st`` from here
+instead of from hypothesis keeps collection working either way: with
+hypothesis installed the real objects are re-exported; without it,
+``@given(...)`` marks the test skipped and everything else no-ops, so
+the rest of each module's tests still run.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Stand-in for strategy objects; absorbs any chained call."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

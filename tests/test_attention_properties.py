@@ -3,7 +3,7 @@ across random shapes, windows, prefixes, and GQA ratios."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.nn.attention import dense_attention, decode_attention, flash_attention
 

@@ -1,0 +1,371 @@
+"""QuantPolicy: rule resolution, uniform equivalence with the legacy
+global-QuantSpec behavior, mixed-policy train/checkpoint/serve roundtrip,
+and JSON serialization."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lutq import LutqState, decode_any, init_state
+from repro.core.policy import (
+    _vmapped,
+    default_predicate,
+    effective_bits,
+    kmeans_tree,
+    merge_trainable,
+    quantize_tree,
+    quantized_fraction,
+    rule_breakdown,
+    serve_view,
+    split_trainable,
+)
+from repro.core.rules import (
+    QuantPolicy,
+    QuantRule,
+    as_policy,
+    get_policy,
+    mixed_paper,
+    paper_default,
+    serving_aggressive,
+    uniform,
+)
+from repro.core.spec import (
+    LUTQ_2BIT,
+    LUTQ_4BIT,
+    LUTQ_4BIT_POW2,
+    TERNARY_SCALED,
+    QuantSpec,
+)
+from repro.nn.tree import tree_paths
+
+
+def _params():
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 6)
+    return {
+        "embed": {"table": jax.random.normal(ks[0], (64, 64))},
+        "layers": {
+            "attn": {"q": {"kernel": jax.random.normal(ks[1], (2, 64, 64))}},
+            "mlp": {"wi": {"kernel": jax.random.normal(ks[2], (2, 64, 96))}},
+            "ln1": {"scale": jnp.ones((2, 64))},
+        },
+        "lm_head": {"kernel": jax.random.normal(ks[3], (64, 64))},
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+class TestRuleResolution:
+    def test_first_match_wins(self):
+        pol = QuantPolicy(rules=(
+            QuantRule("*/attn/*", LUTQ_2BIT, name="narrow"),
+            QuantRule("*", LUTQ_4BIT, name="wide"),
+        ))
+        rid, spec = pol.resolve(("layers", "attn", "q", "kernel"), size=10**6)
+        assert rid == 0 and spec is LUTQ_2BIT
+        rid, spec = pol.resolve(("layers", "mlp", "wi", "kernel"), size=10**6)
+        assert rid == 1 and spec is LUTQ_4BIT
+        # order flipped: the catch-all claims everything
+        pol2 = QuantPolicy(rules=tuple(reversed(pol.rules)))
+        rid, spec = pol2.resolve(("layers", "attn", "q", "kernel"), size=10**6)
+        assert rid == 0 and spec is LUTQ_4BIT
+
+    def test_exclusion_rule_stops_matching(self):
+        pol = QuantPolicy(rules=(
+            QuantRule("re:(^|/)table$", None, name="embed-fp"),
+            QuantRule("*", LUTQ_4BIT, name="all"),
+        ))
+        rid, spec = pol.resolve(("embed", "table"), size=10**6)
+        assert rid == 0 and spec is None  # claimed, excluded — not rule 1
+
+    def test_per_rule_min_size_floor(self):
+        pol = QuantPolicy(rules=(
+            QuantRule("*/attn/*", LUTQ_4BIT, min_size=10**9, name="floored"),
+            QuantRule("*", LUTQ_4BIT, name="all"),
+        ))
+        # under the floor: rule 0 still claims the leaf (no fallthrough)
+        rid, spec = pol.resolve(("layers", "attn", "q", "kernel"), size=128)
+        assert rid == 0 and spec is None
+        q = quantize_tree(_params(), pol)
+        assert not isinstance(q["layers"]["attn"]["q"]["kernel"], LutqState)
+        assert isinstance(q["layers"]["mlp"]["wi"]["kernel"], LutqState)
+
+    def test_regex_pattern(self):
+        r = QuantRule("re:(^|/)table$", None)
+        assert r.matches(("embed", "table"))
+        assert r.matches(("table",))
+        assert not r.matches(("embed", "table2"))
+        assert not r.matches(("ctable",))
+
+    def test_unmatched_leaf_stays_fp(self):
+        pol = QuantPolicy(rules=(QuantRule("*/attn/*", LUTQ_4BIT),))
+        q = quantize_tree(_params(), pol)
+        assert isinstance(q["layers"]["attn"]["q"]["kernel"], LutqState)
+        assert not isinstance(q["layers"]["mlp"]["wi"]["kernel"], LutqState)
+        assert not isinstance(q["embed"]["table"], LutqState)
+
+
+class TestUniformEquivalence:
+    """A bare QuantSpec must reproduce the legacy behavior bit-identically."""
+
+    def test_bare_spec_equals_uniform_policy(self):
+        spec = QuantSpec(bits=4, constraint="pow2", min_size=1024)
+        qa = quantize_tree(_params(), spec)
+        qb = quantize_tree(_params(), uniform(spec))
+        for (pa, la), (_, lb) in zip(tree_paths(qa), tree_paths(qb)):
+            assert isinstance(la, LutqState) == isinstance(lb, LutqState), pa
+            if isinstance(la, LutqState):
+                np.testing.assert_array_equal(np.asarray(la.d), np.asarray(lb.d))
+                np.testing.assert_array_equal(np.asarray(la.a), np.asarray(lb.a))
+
+    def test_bit_identical_with_seed_semantics(self):
+        """Replicates the pre-policy inline logic (predicate + min_size +
+        vmapped init_state) and checks d/a match exactly."""
+        spec = QuantSpec(bits=2, min_size=1024)
+        params = _params()
+        q = quantize_tree(params, spec)
+        for path, leaf in tree_paths(params):
+            got = q
+            for kk in path:
+                got = got[kk]
+            eligible = (default_predicate(path, leaf)
+                        and hasattr(leaf, "size") and leaf.size >= spec.min_size)
+            assert isinstance(got, LutqState) == eligible, path
+            if eligible:
+                nstack = max(0, leaf.ndim - 2)
+                want = _vmapped(lambda w: init_state(w, spec), nstack)(leaf)
+                np.testing.assert_array_equal(np.asarray(got.d), np.asarray(want.d))
+                np.testing.assert_array_equal(np.asarray(got.a), np.asarray(want.a))
+
+    def test_kmeans_tree_accepts_bare_spec(self):
+        spec = QuantSpec(bits=2, min_size=1024, kmeans_iters=2)
+        q = quantize_tree(_params(), spec)
+        q2 = kmeans_tree(q, spec)
+        st = q2["layers"]["mlp"]["wi"]["kernel"]
+        assert st.d.shape == (2, 4)
+
+
+class TestMixedPolicyEndToEnd:
+    def _mixed(self, min_size=512):
+        return QuantPolicy(rules=(
+            QuantRule("re:(^|/)table$", None, name="first-layer-fp"),
+            QuantRule("lm_head/*", None, name="last-layer-fp"),
+            QuantRule("*/attn/*", LUTQ_4BIT_POW2, min_size=min_size,
+                      name="attn-4bit-pow2"),
+            QuantRule("*/mlp/*", TERNARY_SCALED, min_size=min_size,
+                      name="mlp-ternary"),
+        ), name="test_mixed")
+
+    def test_per_leaf_specs_applied(self):
+        pol = self._mixed()
+        q = quantize_tree(_params(), pol)
+        attn = q["layers"]["attn"]["q"]["kernel"]
+        mlp = q["layers"]["mlp"]["wi"]["kernel"]
+        assert attn.d.shape == (2, 16) and attn.sid.shape == (2,)
+        assert set(np.asarray(attn.sid).tolist()) == {2}
+        assert mlp.d.shape == (2, 3)
+        assert set(np.asarray(mlp.sid).tolist()) == {3}
+        assert not isinstance(q["embed"]["table"], LutqState)
+        assert not isinstance(q["lm_head"]["kernel"], LutqState)
+        # pow2 constraint honored per-leaf: nonzero entries are 2^k
+        d = np.asarray(attn.d).ravel()
+        nz = d[d != 0]
+        np.testing.assert_allclose(np.log2(np.abs(nz)),
+                                   np.round(np.log2(np.abs(nz))), atol=1e-6)
+        # ternary: per-slice {-a, 0, a}
+        dm = np.asarray(mlp.d)
+        np.testing.assert_allclose(dm[:, 1], 0.0, atol=1e-7)
+        np.testing.assert_allclose(dm[:, 0], -dm[:, 2], rtol=1e-5)
+
+    def test_kmeans_refresh_honors_each_rule(self):
+        pol = self._mixed()
+        q = quantize_tree(_params(), pol)
+        # perturb masters and refresh
+        q["layers"]["mlp"]["wi"]["kernel"] = q["layers"]["mlp"]["wi"]["kernel"]._replace(
+            w=q["layers"]["mlp"]["wi"]["kernel"].w * 2.0)
+        q2 = kmeans_tree(q, pol)
+        attn2 = q2["layers"]["attn"]["q"]["kernel"]
+        mlp2 = q2["layers"]["mlp"]["wi"]["kernel"]
+        assert attn2.d.shape == (2, 16)  # still 4-bit
+        dm = np.asarray(mlp2.d)
+        np.testing.assert_allclose(dm[:, 1], 0.0, atol=1e-7)  # still ternary
+        assert set(np.asarray(mlp2.sid).tolist()) == {3}  # rule id survives
+        # ternary scale tracked the doubled masters
+        d0 = np.asarray(q["layers"]["mlp"]["wi"]["kernel"].d)
+        assert float(np.abs(dm[:, 2]).mean()) > float(np.abs(d0[:, 2]).mean())
+
+    def test_split_merge_preserves_sid(self):
+        q = quantize_tree(_params(), self._mixed())
+        t, s = split_trainable(q)
+        assert "__lutq_sid" in s["layers"]["attn"]["q"]["kernel"]
+        back = merge_trainable(t, s)
+        assert set(np.asarray(back["layers"]["attn"]["q"]["kernel"].sid).tolist()) == {2}
+
+    def test_train_ckpt_restore_serve_roundtrip(self, tmp_path):
+        """The acceptance-criteria path: mixed quantize -> train step
+        (per-leaf refresh) -> checkpoint save/restore (policy included)
+        -> serve_view."""
+        from repro.checkpoint import ckpt
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.models.reduce import reduced
+        from repro.optim.optimizers import adamw
+        from repro.optim.train_state import (init_train_state, make_train_step,
+                                             state_flat)
+
+        pol = self._mixed(min_size=256)
+        cfg = reduced(get_config("h2o-danube-1.8b")).replace(
+            vocab=64, quant=pol, act_bits=8)
+        params, axes = api.init(jax.random.PRNGKey(0), cfg)
+        qparams = api.quantize(params, cfg, axes)
+        attn = qparams["layers"]["attn"]["q"]["kernel"]
+        mlp = qparams["layers"]["mlp"]["wi"]["kernel"]
+        assert attn.d.shape[-1] == 16 and mlp.d.shape[-1] == 3
+
+        opt = adamw(1e-3)
+        state = state_flat(init_train_state(qparams, opt))
+        step = jax.jit(make_train_step(cfg, api.loss_fn, opt))
+        batch = {"tokens": jnp.zeros((2, 16), jnp.int32) + 3,
+                 "labels": jnp.ones((2, 16), jnp.int32)}
+        state, metrics = step(state, batch)
+        state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+        # refreshed static still honors per-rule specs
+        merged = merge_trainable(state["trainable"], state["static"])
+        mlp2 = merged["layers"]["mlp"]["wi"]["kernel"]
+        assert mlp2.d.shape[-1] == 3
+        np.testing.assert_allclose(np.asarray(mlp2.d)[..., 1], 0.0, atol=1e-7)
+
+        # checkpoint roundtrip with the policy in the manifest
+        ckpt.save(state, str(tmp_path), 2, policy=pol)
+        restored, rstep = ckpt.restore(str(tmp_path))
+        assert rstep == 2
+        rpol = ckpt.load_policy(str(tmp_path))
+        assert rpol == pol
+        rmerged = merge_trainable(restored["trainable"], restored["static"])
+        for (pa, la), (_, lb) in zip(tree_paths(merged), tree_paths(rmerged)):
+            if isinstance(la, LutqState):
+                assert isinstance(lb, LutqState), pa
+                np.testing.assert_array_equal(np.asarray(la.d), np.asarray(lb.d))
+                np.testing.assert_array_equal(np.asarray(la.a), np.asarray(lb.a))
+                assert (la.sid is None) == (lb.sid is None)
+
+        # serve view from the restored tree, policy-gated packing
+        from repro.core.policy import unpack4_last
+        sv = serve_view(rmerged, pack4=True, policy=rpol)
+        smlp = sv["layers"]["mlp"]["wi"]["kernel"]
+        assert sv["layers"]["attn"]["q"]["kernel"].w is None
+        sa = unpack4_last(smlp.a) if smlp.a.dtype == jnp.uint8 else smlp.a
+        np.testing.assert_array_equal(np.asarray(decode_any(smlp.d, sa)),
+                                      np.asarray(decode_any(mlp2.d, mlp2.a)))
+        # a decode forward runs on the serve tree
+        logits, _ = api.prefill(sv, cfg, {"tokens": batch["tokens"]})
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_legacy_checkpoint_without_sid_restores(self, tmp_path):
+        """Checkpoints written before sid existed (3-field LutqState)
+        still load; sid comes back None."""
+        from repro.checkpoint import ckpt
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        stripped = jax.tree.map(
+            lambda x: x, q,
+            is_leaf=lambda x: isinstance(x, LutqState))
+
+        def strip(x):
+            if isinstance(x, LutqState):
+                return LutqState(w=x.w, d=x.d, a=x.a)
+            return x
+        from repro.nn.tree import map_with_path
+        stripped = map_with_path(lambda p, l: strip(l), q)
+        ckpt.save(stripped, str(tmp_path), 0)
+        assert ckpt.load_policy(str(tmp_path)) is None
+        restored, _ = ckpt.restore(str(tmp_path))
+        leaf = restored["layers"]["attn"]["q"]["kernel"]
+        assert isinstance(leaf, LutqState) and leaf.sid is None
+
+
+class TestSerialization:
+    def test_json_roundtrip(self):
+        for pol in (paper_default(), serving_aggressive(), mixed_paper(),
+                    uniform(QuantSpec(bits=3, prune_frac=0.25))):
+            s = pol.to_json()
+            back = QuantPolicy.from_json(s)
+            assert back == pol
+            # and it is real JSON
+            assert json.loads(s)["name"] == pol.name
+
+    def test_get_policy_presets_and_json(self):
+        assert get_policy("serving_aggressive").name == "serving_aggressive"
+        assert get_policy("paper_default").name == "paper_default"
+        u = get_policy("uniform:2:pow2")
+        assert u.is_uniform and u.rules[0].spec.bits == 2
+        assert u.rules[0].spec.constraint == "pow2"
+        inline = get_policy(mixed_paper().to_json())
+        assert inline == mixed_paper()
+        with pytest.raises(ValueError):
+            get_policy("nonsense")
+
+    def test_as_policy_normalization(self):
+        assert as_policy(None) is None
+        p = as_policy(LUTQ_4BIT)
+        assert isinstance(p, QuantPolicy) and p.is_uniform
+        assert as_policy(p) is p
+
+    def test_spec_from_dict_rejects_unknown_fields(self):
+        from repro.core.spec import spec_from_dict
+        with pytest.raises(ValueError):
+            spec_from_dict({"bits": 4, "bogus": 1})
+
+
+class TestReporting:
+    def test_quantized_fraction_on_serve_view(self):
+        """Regression: serve_view sets w=None; fraction must count via
+        assignments (with pack4 uint8 halving)."""
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        want = quantized_fraction(q)
+        got_raw = quantized_fraction(serve_view(q))
+        got_packed = quantized_fraction(serve_view(q, pack4=True))
+        assert got_raw == pytest.approx(want)
+        assert got_packed == pytest.approx(want)
+
+    def test_effective_bits(self):
+        q = quantize_tree(_params(), QuantSpec(bits=4, min_size=1024))
+        assert effective_bits(q) == pytest.approx(4.0)
+        pol = QuantPolicy(rules=(
+            QuantRule("*/attn/*", LUTQ_4BIT, min_size=512),
+            QuantRule("*/mlp/*", LUTQ_2BIT, min_size=512),
+        ))
+        q2 = quantize_tree(_params(), pol)
+        eb = effective_bits(q2)
+        assert 2.0 < eb < 4.0
+
+    def test_rule_breakdown_counts_everything(self):
+        pol = mixed_paper()
+        q = quantize_tree(_params(), pol)
+        rows = rule_breakdown(serve_view(q, pack4=True, policy=pol), pol)
+        total = sum(r["n_params"] for r in rows)
+        want = sum((l.w.size if isinstance(l, LutqState) else l.size)
+                   for _, l in tree_paths(q) if l is not None)
+        assert total == want
+        by_name = {r["rule"]: r for r in rows}
+        assert by_name["attn-4bit-pow2"]["n_quantized"] > 0
+        assert by_name["mlp-ternary"]["index_bits"] == 2
+        assert by_name["first-layer-fp"]["n_quantized"] == 0
+
+
+class TestPruneMaskSelection:
+    def test_topk_matches_full_sort(self):
+        from repro.core.lutq import _prune_mask
+        w = jax.random.normal(jax.random.PRNGKey(3), (1000,))
+        for frac in (0.0, 0.1, 0.5, 0.9):
+            got = np.asarray(_prune_mask(w, frac))
+            flat = np.abs(np.asarray(w).ravel())
+            k = int(round(frac * flat.size))
+            if k <= 0:
+                want = np.zeros_like(got)
+            else:
+                thresh = np.sort(flat)[k - 1]
+                want = np.abs(np.asarray(w)) <= thresh
+            np.testing.assert_array_equal(got, want)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore, save
 from repro.core.lutq import LutqState

@@ -9,7 +9,7 @@ just at init.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.lutq import LutqState, decode_any
