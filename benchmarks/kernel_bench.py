@@ -3,24 +3,37 @@ mode on CPU — structural validation; real-TPU timing is a deploy step)
 and their pure-jnp oracles (XLA:CPU compiled — the actual CPU perf
 reference). Derived column: modeled TPU-v5e HBM-bound time from the
 bytes each variant moves (the paper's memory-traffic claim).
+
+The backend section times ``kernels.ops.lutq_dot`` end-to-end per
+execution backend (decode vs fused vs packed4) on one serve-form
+LutqState and emits ``BENCH_kernels.json`` at the repo root —
+weight-GB/s + ms per backend, next to the analytic v5e roofline each
+would be bound by — so the perf trajectory is recorded per commit and
+``benchmarks/roofline.py`` can cross-check measured vs modeled.
 """
 from __future__ import annotations
 
+import argparse
+import functools
+import json
 import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.core.lutq import LutqState  # noqa: E402
 from repro.kernels import ops  # noqa: E402
 from repro.kernels.ref import (  # noqa: E402
     kmeans_stats_ref,
     lutq_gemv_packed_ref,
     lutq_matmul_ref,
     pack4,
+    pack4_kin,
 )
 
 HBM_BW = 819e9
@@ -35,10 +48,54 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(emit=print):
+def bench_backends(quick: bool = False, reps: int = 5):
+    """Time lutq_dot per backend on one serve-form leaf.
+
+    Returns {backend: {us, ms, weight_bytes, gbps, v5e_model_us}}:
+    ``weight_bytes`` is the weight traffic each backend moves per call
+    (f32 dense for decode after materialization, int8 indices for
+    fused, packed nibbles for packed4) — the quantity the paper's
+    memory-roofline argument is about; ``gbps`` the implied bandwidth at
+    the measured time; ``v5e_model_us`` the analytic HBM-bound time at
+    v5e bandwidth for those bytes.
+    """
+    B = 8
+    Kin, N = (512, 512) if quick else (2048, 2048)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (B, Kin), jnp.float32)
+    a = jax.random.randint(key, (Kin, N), 0, 16, jnp.int8)
+    d = jnp.sort(jax.random.normal(key, (16,)))
+    serve = LutqState(w=None, d=d, a=a)
+    packed = LutqState(w=None, d=d, a=pack4_kin(a))
+
+    cases = {
+        "decode": (serve, Kin * N * 4),   # materialized f32 dense weights
+        "fused": (serve, Kin * N),        # int8 assignments, decoded in VMEM
+        "packed4": (packed, Kin * N // 2),  # 4-bit pairs stay packed in HBM
+    }
+    out = {}
+    for name, (state, wbytes) in cases.items():
+        # state is a jit *argument* (not a closure capture): a captured
+        # constant lets XLA fold the d[A] decode at compile time, which
+        # would erase exactly the per-call decode cost being measured.
+        fn = jax.jit(functools.partial(ops.lutq_dot, backend=name))
+        us = _time(fn, x, state, reps=reps)
+        out[name] = {
+            "us": us,
+            "ms": us / 1e3,
+            "weight_bytes": wbytes,
+            "gbps": wbytes / (us * 1e-6) / 1e9,
+            "v5e_model_us": wbytes / HBM_BW * 1e6,
+        }
+    return {"shape": {"B": B, "Kin": Kin, "N": N, "K": 16},
+            "interpret": jax.default_backend() != "tpu",
+            "backends": out}
+
+
+def run(emit=print, quick: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
-    B, Kin, N = 8, 2048, 2048
+    B, Kin, N = (8, 512, 512) if quick else (8, 2048, 2048)
     x = jax.random.normal(key, (B, Kin), jnp.float32)
     a = jax.random.randint(key, (Kin, N), 0, 16, jnp.int8)
     packed = pack4(a)
@@ -64,17 +121,17 @@ def run(emit=print):
     rows.append(("bf16_weight_traffic_model", t_bf16,
                  f"pack4_speedup={t_bf16/t_pack4:.1f}x"))
 
-    w = jax.random.normal(key, (1 << 18,))
+    w = jax.random.normal(key, (1 << (15 if quick else 18),))
     d8 = jnp.sort(jax.random.normal(key, (16,)))
     us = _time(lambda: kmeans_stats_ref(w, d8))
-    rows.append(("kmeans_stats_ref_jnp", us, "K=16,N=262144"))
+    rows.append(("kmeans_stats_ref_jnp", us, f"K=16,N={w.size}"))
     us = _time(lambda: ops.kmeans_stats(w, d8, bn=8192, interpret=True))
-    rows.append(("kmeans_stats_pallas_interp", us, "K=16,N=262144"))
+    rows.append(("kmeans_stats_pallas_interp", us, f"K=16,N={w.size}"))
 
     # causal flash attention: block-skipped kernel vs dense oracle
     from repro.kernels.flash_attn import flash_attention_tpu
     from repro.nn.attention import dense_attention
-    BH, S, D = 4, 512, 64
+    BH, S, D = 4, (128 if quick else 512), 64
     ks = jax.random.split(key, 3)
     q, kk, vv = (jax.random.normal(ks[i], (BH, S, D)) for i in range(3))
     us = _time(lambda: dense_attention(q[:, :, None], kk[:, :, None],
@@ -90,5 +147,33 @@ def run(emit=print):
     return rows
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / CI smoke (interpret mode)")
+    ap.add_argument("--json-out", default=str(ROOT / "BENCH_kernels.json"),
+                    help="where to write the backend comparison record")
+    args = ap.parse_args(argv)
+
+    rows = run(quick=args.quick)
+    rec = bench_backends(quick=args.quick, reps=3 if args.quick else 5)
+    rec["kernels"] = [
+        {"name": n, "us": round(us, 1), "derived": d} for n, us, d in rows]
+    dec, fus, pk = (rec["backends"][k] for k in ("decode", "fused", "packed4"))
+    print(f"lutq_dot decode vs fused vs packed4 "
+          f"(B={rec['shape']['B']}, {rec['shape']['Kin']}x{rec['shape']['N']}, "
+          f"interpret={rec['interpret']}):")
+    for name in ("decode", "fused", "packed4"):
+        b = rec["backends"][name]
+        print(f"  {name:8s} {b['ms']:10.3f} ms   "
+              f"{b['gbps']:8.3f} GB/s weight traffic   "
+              f"(v5e HBM-bound model {b['v5e_model_us']:.2f} us)")
+    print(f"  weight-byte reduction: fused {dec['weight_bytes']/fus['weight_bytes']:.0f}x, "
+          f"packed4 {dec['weight_bytes']/pk['weight_bytes']:.0f}x vs f32 decode")
+    Path(args.json_out).write_text(json.dumps(rec, indent=1))
+    print(f"wrote {args.json_out}")
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -447,11 +447,37 @@ _FIX_HINTS = {
 }
 
 
+def kernel_bench_comparison(bench_path: Path):
+    """Measured lutq_dot backend times (BENCH_kernels.json, written by
+    kernel_bench.py) against the analytic HBM roofline for the weight
+    bytes each backend moves. In interpret mode the absolute times are
+    emulation artifacts — the byte ratios (decode : fused : packed4 =
+    4 : 1 : 0.5 for K=16) are the roofline claim being tracked; on real
+    TPU the measured/model ratio becomes the roofline fraction.
+    """
+    if not bench_path.exists():
+        return None
+    rec = json.loads(bench_path.read_text())
+    lines = [f"kernel backends measured vs modeled "
+             f"({bench_path.name}, interpret={rec.get('interpret')}):"]
+    base = rec["backends"].get("decode", {}).get("weight_bytes")
+    for name, b in rec["backends"].items():
+        ratio = base / b["weight_bytes"] if base else float("nan")
+        lines.append(
+            f"  {name:8s} measured {b['ms']:9.3f} ms | weight bytes "
+            f"{b['weight_bytes']/2**20:7.2f} MiB ({ratio:.1f}x less than f32) "
+            f"| v5e HBM-bound {b['v5e_model_us']:.2f} us")
+    return "\n".join(lines)
+
+
 def main(argv=None):
     root = Path(__file__).resolve().parent
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifacts", default=str(root / "artifacts/dryrun/pod16x16"))
     ap.add_argument("--json-out", default=str(root / "artifacts/roofline.json"))
+    ap.add_argument("--kernel-bench", default=str(root.parent / "BENCH_kernels.json"),
+                    help="BENCH_kernels.json from kernel_bench.py (measured "
+                         "fused-vs-decode times to compare with the model)")
     args = ap.parse_args(argv)
     art_dir = Path(args.artifacts)
 
@@ -495,6 +521,9 @@ def main(argv=None):
               f"({r['weight_store_gib']:.1f} GiB served)")
     Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.json_out).write_text(json.dumps(rows, indent=1, default=float))
+    cmp = kernel_bench_comparison(Path(args.kernel_bench))
+    if cmp:
+        print("\n" + cmp)
     print(f"\nfix hints by dominant term:")
     for k, v in _FIX_HINTS.items():
         print(f"  {k}: {v}")

@@ -201,45 +201,122 @@ def merge_trainable(trainable, static):
     return merge(trainable, static)
 
 
-def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = None):
+def _leaf_rule(pol: Optional[QuantPolicy], path):
+    """(spec, requested_backend) for a leaf under the policy."""
+    if pol is None:
+        return None, "auto"
+    i = pol.match(path)
+    if i is None:
+        return None, "auto"
+    return pol.rules[i].spec, pol.rules[i].resolved_backend
+
+
+def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = None,
+               with_manifest: bool = False):
     """Deployment form: drop the full-precision masters, keep (d, A).
 
     This is the paper's memory claim made literal — the served model's
     weight storage is K floats + N indices per tensor. With
     ``pack4=True`` (K <= 16 only) two 4-bit indices pack per byte along
-    the last axis (convention: uint8 dtype == packed; int8 == raw), so
-    HBM weight traffic at decode is N/2 bytes — the beyond-paper §Perf
-    lever matching the Pallas ``lutq_gemv_packed`` kernel layout.
+    axis -2 — the matmul reduction (Kin) axis, i.e. exactly the
+    ``(Kin/2, N)`` row-pair layout the Pallas ``lutq_gemv_packed``
+    kernel streams from HBM (convention: uint8 dtype == packed; int8 ==
+    raw) — so decode-time HBM weight traffic is N/2 bytes.
 
-    ``policy``: optional per-leaf gate — when given, a leaf is packed
-    only if its resolved rule's spec has index_bits <= 4 (so a mixed
-    policy can keep 8-bit attention assignments raw while packing the
-    2-bit MLPs).
+    ``policy``: optional per-leaf gate — with the blanket ``pack4``
+    flag a leaf is packed only if its resolved rule's spec has
+    index_bits <= 4 and the rule's kernel backend is not an explicit
+    ``fused``/``decode`` (the fused int8 kernel cannot read packed
+    pairs); a rule with ``backend="packed4"`` packs its leaves even
+    without the flag.
+
+    ``with_manifest=True`` additionally returns a JSON-serializable
+    ``{path: {backend, requested, packed, K, bits, stack}}`` record of
+    the kernel backend each leaf resolves to (via
+    ``kernels.ops.resolve_backend`` with ``sliced=True`` — the
+    per-slice view the kernels actually see after lax.scan slices a
+    layer stack or ``moe_apply`` vmaps over experts).
     """
+    from repro.kernels.ops import resolve_backend
+    from repro.kernels.ref import pack4_kin
+
     pol = as_policy(policy)
+    manifest: Dict[str, Dict] = {}
 
     def conv(path, leaf):
-        if isinstance(leaf, LutqState):
-            a = leaf.a
-            pack = pack4 and leaf.d.shape[-1] <= 16 and a.shape[-1] % 2 == 0
+        if not isinstance(leaf, LutqState):
+            return leaf
+        a = leaf.a
+        K = leaf.d.shape[-1]
+        spec, requested = _leaf_rule(pol, path)
+        packable = (a.dtype != jnp.uint8 and K <= 16
+                    and a.ndim >= 2 and a.shape[-2] % 2 == 0)
+        if requested == "packed4":
+            pack = packable
+        elif requested in ("fused", "decode"):
+            pack = False
+        else:  # auto
+            pack = packable and pack4
             if pack and pol is not None:
-                spec = _resolve_for_state(pol, path, leaf)
                 pack = spec is not None and spec.index_bits <= 4
-            if pack:
-                lo = a[..., 0::2].astype(jnp.uint8) & 0xF
-                hi = a[..., 1::2].astype(jnp.uint8) & 0xF
-                a = (lo | (hi << 4)).astype(jnp.uint8)
-            return LutqState(w=None, d=leaf.d, a=a, sid=leaf.sid)
-        return leaf
+        if pack:
+            a = pack4_kin(a)
+        out = LutqState(w=None, d=leaf.d, a=a, sid=leaf.sid)
+        if with_manifest:
+            # The rule's request has been realized *structurally* (packed
+            # vs int8 layout), so the leaf's auto resolution IS what
+            # lutq_dot picks at apply time under kernel_backend="auto".
+            manifest["/".join(path)] = {
+                "backend": resolve_backend(out, "auto", sliced=True),
+                "requested": requested,
+                "packed": bool(pack),
+                "K": int(K),
+                "bits": int(math.ceil(math.log2(max(K, 2)))),
+                "stack": int(leaf.d.ndim - 1),
+            }
+        return out
 
-    return map_with_path(conv, params)
+    tree = map_with_path(conv, params)
+    return (tree, manifest) if with_manifest else tree
 
 
-def unpack4_last(a: jax.Array) -> jax.Array:
-    """Inverse of serve_view(pack4=True): uint8 pairs -> int8 indices."""
-    lo = (a & 0xF).astype(jnp.int8)
-    hi = ((a >> 4) & 0xF).astype(jnp.int8)
-    return jnp.stack([lo, hi], axis=-1).reshape(*a.shape[:-1], a.shape[-1] * 2)
+def backend_manifest(params, policy: Optional[QuantLike] = None,
+                     override: Optional[str] = None) -> Dict[str, Dict]:
+    """Per-leaf kernel-backend resolution for an existing (serve) tree.
+
+    Same record as ``serve_view(..., with_manifest=True)`` but computed
+    from a tree as it stands — used by the serving CLI to report which
+    kernel each quantized leaf will hit, and by tests to assert the
+    JSON round-trips to what ``lutq_dot`` resolves at trace time.
+
+    ``override``: a model-wide kernel backend (the CLI's
+    ``--kernel-backend`` / ``ModelConfig.kernel_backend``), which at
+    apply time supersedes per-rule requests; infeasible leaves degrade
+    exactly as ``lutq_dot`` degrades them.
+    """
+    from repro.kernels.ops import resolve_backend
+
+    pol = as_policy(policy)
+    out: Dict[str, Dict] = {}
+    for path, leaf in tree_paths(params):
+        if not isinstance(leaf, LutqState):
+            continue
+        _, requested = _leaf_rule(pol, path)
+        # Apply-time dispatch sees cfg.kernel_backend (the override), not
+        # the rule request — rule requests act through serve_view's
+        # *layout* (packed vs int8), which this tree already has. So
+        # resolve structurally under the override, "auto" when none.
+        effective = override if override is not None else "auto"
+        K = leaf.d.shape[-1]
+        out["/".join(path)] = {
+            "backend": resolve_backend(leaf, effective, sliced=True),
+            "requested": requested,
+            "packed": bool(leaf.a.dtype == jnp.uint8),
+            "K": int(K),
+            "bits": int(math.ceil(math.log2(max(K, 2)))),
+            "stack": int(leaf.d.ndim - 1),
+        }
+    return out
 
 
 def lutq_weight_count(leaf: LutqState) -> int:

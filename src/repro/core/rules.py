@@ -49,16 +49,31 @@ class QuantRule:
         the pattern matches (the rule still *claims* the leaf: matching
         stops — first match wins).
       name: id used in reports/serialization; defaults to the pattern.
+      backend: serving kernel backend for the matched leaves ('auto' |
+        'decode' | 'fused' | 'packed4'); None defers to spec.backend.
+        Resolved per leaf by serve_view / kernels.ops.lutq_dot.
     """
 
     pattern: str
     spec: Optional[QuantSpec]
     min_size: Optional[int] = None
     name: Optional[str] = None
+    backend: Optional[str] = None
+
+    def __post_init__(self):
+        if self.backend not in (None, "auto", "decode", "fused", "packed4"):
+            raise ValueError(f"unknown kernel backend {self.backend!r}")
 
     @property
     def rule_name(self) -> str:
         return self.name if self.name is not None else self.pattern
+
+    @property
+    def resolved_backend(self) -> str:
+        """Requested backend: rule override > spec.backend > 'auto'."""
+        if self.backend is not None:
+            return self.backend
+        return self.spec.backend if self.spec is not None else "auto"
 
     def matches(self, path: Tuple[str, ...]) -> bool:
         joined = "/".join(path)
@@ -144,7 +159,8 @@ class QuantPolicy:
                 {"pattern": r.pattern,
                  "spec": None if r.spec is None else spec_to_dict(r.spec),
                  "min_size": r.min_size,
-                 "name": r.name}
+                 "name": r.name,
+                 "backend": r.backend}
                 for r in self.rules
             ],
         }
@@ -165,7 +181,8 @@ class QuantPolicy:
                           spec=None if r.get("spec") is None
                           else spec_from_dict(r["spec"]),
                           min_size=r.get("min_size"),
-                          name=r.get("name")))
+                          name=r.get("name"),
+                          backend=r.get("backend")))
         return QuantPolicy(rules=tuple(rules), name=d.get("name", "custom"))
 
     @staticmethod
@@ -180,6 +197,8 @@ class QuantPolicy:
             else:
                 rhs = (f"{r.spec.bits}-bit/{r.spec.constraint}"
                        f" (K={r.spec.K}, min_size={r.size_floor})")
+            if r.resolved_backend != "auto":
+                rhs += f" [{r.resolved_backend}]"
             lines.append(f"  [{i}] {r.rule_name:24s} {r.pattern:20s} -> {rhs}")
         return "\n".join(lines)
 

@@ -26,6 +26,10 @@ class QuantSpec:
       kmeans_iters: M in the paper — k-means iterations per minibatch.
       min_size: tensors with fewer elements are left unquantized
         (biases, norm gains; the paper quantizes affine/conv weights).
+      backend: serving kernel backend for tensors under this spec
+        ('auto' | 'decode' | 'fused' | 'packed4', see kernels/ops.py).
+        'auto' resolves structurally per leaf; explicit choices degrade
+        gracefully where a kernel cannot apply.
     """
 
     bits: int = 4
@@ -37,10 +41,13 @@ class QuantSpec:
     # effective values are alpha * {-1[,0],1} (TWN's {-a,0,a}; BWN's
     # scaled binary). False = literal {-1[,0],1} (BinaryConnect).
     fixed_scale: bool = False
+    backend: str = "auto"
 
     def __post_init__(self):
         if self.constraint not in ("none", "pow2", "binary", "ternary"):
             raise ValueError(f"unknown constraint {self.constraint!r}")
+        if self.backend not in ("auto", "decode", "fused", "packed4"):
+            raise ValueError(f"unknown kernel backend {self.backend!r}")
         if self.constraint == "binary" and self.bits != 1:
             raise ValueError("binary constraint requires bits=1")
         if self.constraint == "ternary" and self.bits != 2:

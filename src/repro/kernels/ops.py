@@ -1,7 +1,27 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Kernel execution-backend layer: jit'd wrappers + the ``lutq_dot`` entry.
 
 ``interpret`` defaults to True on CPU (this container) and False on TPU,
 so the same call sites work in tests and production.
+
+The raw Pallas kernels (``lutq_matmul``, ``lutq_gemv_packed``) demand
+tile-multiple shapes, 2-D operands and a single shared dictionary.
+:func:`lutq_dot` is the entry point the model layer actually calls: it
+resolves a *backend* per quantized leaf, pads/reshapes real-world shapes
+onto the kernel grids, consumes serve-packed uint8 assignments directly
+(no unpack round-trip), and falls back to the dense-decode reference
+wherever a kernel cannot apply (training STE, stacked per-layer /
+per-expert dictionaries, transposed packed layouts).
+
+Backends
+--------
+``decode``   dense reference: ``x @ d[A]`` with the STE master when
+             training — the numerics oracle for everything else.
+``fused``    :mod:`repro.kernels.lutq_matmul` — int8 assignments stream
+             HBM->VMEM at 1 byte/weight and decode against the
+             VMEM-resident dictionary in front of the MXU.
+``packed4``  :mod:`repro.kernels.lutq_gemv_packed` — 4-bit pairs stay
+             packed in HBM (0.5 byte/weight), unpacked in VMEM.
+``auto``     per-leaf structural resolution (see :func:`resolve_backend`).
 """
 from __future__ import annotations
 
@@ -10,10 +30,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.lutq import LutqState, decode_any, quantize_ste_any
 from repro.kernels.kmeans_tpu import kmeans_stats as _kmeans_stats
 from repro.kernels.lutq_gemv_packed import lutq_gemv_packed as _gemv_packed
 from repro.kernels.lutq_matmul import lutq_matmul as _lutq_matmul
-from repro.kernels.ref import pack4, unpack4  # re-export for callers
+from repro.kernels.ref import (  # noqa: F401  (re-export for callers)
+    pack4,
+    pack4_kin,
+    unpack4,
+    unpack4_kin,
+)
+
+#: Backend names accepted by ``lutq_dot`` / policy rules / CLI flags.
+BACKENDS = ("auto", "decode", "fused", "packed4")
 
 
 def _default_interpret() -> bool:
@@ -45,3 +74,149 @@ def kmeans_step_fused(w_flat, d, *, bn=4096, interpret=None):
     a, sums, counts = kmeans_stats(w_flat, d, bn=bn, interpret=interpret)
     new_d = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), d)
     return a, jnp.sort(new_d)
+
+
+# ---------------------------------------------------------------------------
+# backend resolution
+# ---------------------------------------------------------------------------
+
+def resolve_backend(state: LutqState, backend: str = "auto", *,
+                    transpose_rhs: bool = False, sliced: bool = False) -> str:
+    """Concrete backend ("decode" | "fused" | "packed4") for one leaf.
+
+    Resolution only consults trace-static leaf structure (dtypes, shapes,
+    presence of the fp master), so the result is stable under jit and
+    identical to what ``serve_view``'s backend manifest records:
+
+      * train-form leaves (``w`` present) -> ``decode`` — the STE forward
+        must stay differentiable and bit-exact with the paper's step 2/3;
+      * stacked dictionaries (``d.ndim > 1``: scan-over-layers slices
+        them away before the matmul, but MoE expert einsums see them
+        whole) -> ``decode``;
+      * packed uint8 assignments -> ``packed4`` (the packed kernel reads
+        them in place), except transposed use, where the row-pair layout
+        is along the wrong axis -> ``decode``;
+      * int8 assignments, K <= 256 -> ``fused``.
+
+    Explicit requests degrade down the same ladder
+    (packed4 -> fused -> decode) instead of erroring, so a policy can
+    pin ``backend="packed4"`` on rules whose leaves may not all pack.
+
+    ``sliced=True`` resolves the *per-slice* view of a stacked leaf —
+    what the kernels see after lax.scan slices a layer stack or
+    ``moe_apply`` vmaps over experts. ``serve_view``'s backend manifest
+    records this per-tensor resolution.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    nstack = state.d.ndim - 1
+    d_ndim = 1 if sliced else state.d.ndim
+    a_ndim = state.a.ndim - nstack if sliced else state.a.ndim
+    if state.w is not None or d_ndim > 1 or a_ndim != 2:
+        return "decode"
+    if backend == "decode":
+        return "decode"
+    K = state.d.shape[-1]
+    if state.a.dtype == jnp.uint8:  # serve-packed 4-bit pairs (pack4_kin)
+        if transpose_rhs or K > 16:
+            return "decode"
+        return "packed4"
+    return "fused" if K <= 256 else "decode"
+
+
+# ---------------------------------------------------------------------------
+# shape plumbing: tile choice + zero-padding onto the kernel grids
+# ---------------------------------------------------------------------------
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _tile(dim: int, block: int, base: int):
+    """(tile, padded_dim): tile <= block, tile % base == 0, padded % tile == 0.
+
+    In interpret mode base is 1 (any block shape emulates); on real TPU
+    base is the hardware tiling (8 sublanes / 128 lanes for f32), so the
+    padded operand is always Mosaic-layout friendly.
+    """
+    t = min(block, _round_up(dim, base))
+    return t, _round_up(dim, t)
+
+
+def lutq_dot(
+    x: jax.Array,
+    state: LutqState,
+    *,
+    backend: str = "auto",
+    transpose_rhs: bool = False,
+    out_dtype=None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = None,
+) -> jax.Array:
+    """``x @ d[A]`` (or ``x @ d[A].T``) through the resolved backend.
+
+    x: (..., Kin) — leading dims are flattened for the kernels and
+    restored on return. state: a LutqState whose assignments are
+    (Kin, N) int8, (Kin/2, N) packed uint8, or any stacked/train form
+    (those fall back to the dense decode path, which also carries the
+    training STE). Returns (..., N) in ``out_dtype`` (default x.dtype).
+
+    Fused backends never materialize the decoded weight matrix in HBM:
+    non-tile-multiple shapes are zero-padded onto the kernel grid
+    (padded x rows/K-columns are zero, padded assignment entries index
+    dictionary slot 0 against zero activations), and the pad is sliced
+    off the f32 kernel output.
+    """
+    be = resolve_backend(state, backend, transpose_rhs=transpose_rhs)
+    out_dtype = out_dtype or x.dtype
+
+    if be == "decode":
+        a = state.a
+        if a.dtype == jnp.uint8:
+            a = unpack4_kin(a)
+        if state.w is not None:
+            w = quantize_ste_any(state.w, state.d, a)
+        else:
+            w = decode_any(state.d, a)
+        w = w.astype(x.dtype)
+        if transpose_rhs:
+            w = jnp.swapaxes(w, -1, -2)
+        return jnp.matmul(x, w).astype(out_dtype)
+
+    interpret = _default_interpret() if interpret is None else interpret
+    lead, Kin = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, Kin)
+    M = x2.shape[0]
+    d = state.d
+    base_m = 1 if interpret else 8
+    base_l = 1 if interpret else 128
+
+    if be == "fused":
+        a = state.a.T if transpose_rhs else state.a  # (Kin, N) int8
+        assert a.shape[0] == Kin, (a.shape, x.shape)
+        N = a.shape[1]
+        tm, Mp = _tile(M, bm, base_m)
+        tn, Np = _tile(N, bn, base_l)
+        tk, Kp = _tile(Kin, bk, base_l)
+        if Mp != M or Kp != Kin:
+            x2 = jnp.pad(x2, ((0, Mp - M), (0, Kp - Kin)))
+        if Kp != Kin or Np != N:
+            a = jnp.pad(a, ((0, Kp - Kin), (0, Np - N)))
+        y = lutq_matmul(x2, a, d, bm=tm, bn=tn, bk=tk, interpret=interpret)
+        y = y[:M, :N]
+    else:  # packed4: x (M, Kin) @ unpack(packed (Kin/2, N))
+        p = state.a
+        assert p.shape[0] * 2 == Kin, (p.shape, x.shape)
+        N = p.shape[1]
+        tn, Np = _tile(N, bn, base_l)
+        tk, Kp = _tile(Kin, bk, 2 if interpret else 2 * base_l)
+        if Kp != Kin:
+            x2 = jnp.pad(x2, ((0, 0), (0, Kp - Kin)))
+        if Kp != Kin or Np != N:
+            p = jnp.pad(p, ((0, (Kp - Kin) // 2), (0, Np - N)))
+        y = lutq_gemv_packed(x2, p, d, bn=tn, bk=tk, interpret=interpret)
+        y = y[:, :N]
+    return y.reshape(*lead, N).astype(out_dtype)

@@ -26,6 +26,29 @@ def unpack4(p: jax.Array) -> jax.Array:
     return out.reshape(p.shape[0] * 2, *p.shape[1:])
 
 
+def pack4_kin(a: jax.Array) -> jax.Array:
+    """Pack two 4-bit indices per byte along axis -2.
+
+    For a linear assignment matrix (Kin, N) — possibly with leading
+    stack axes (layers, experts) — axis -2 is the matmul *reduction*
+    axis, which is exactly the layout ``lutq_gemv_packed`` streams
+    (packed rows (Kin/2, N), even index in the low nibble). The
+    serve-time convention: uint8 dtype == packed, int8 == raw indices.
+    """
+    assert a.shape[-2] % 2 == 0, a.shape
+    lo = a[..., 0::2, :].astype(jnp.uint8) & 0xF
+    hi = a[..., 1::2, :].astype(jnp.uint8) & 0xF
+    return lo | (hi << 4)
+
+
+def unpack4_kin(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack4_kin`: uint8 pairs -> int8 indices."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=-2)  # (..., Kin/2, 2, N)
+    return out.reshape(*p.shape[:-2], p.shape[-2] * 2, p.shape[-1])
+
+
 def lutq_gemv_packed_ref(x: jax.Array, packed: jax.Array, d: jax.Array) -> jax.Array:
     """y = x @ d[unpack(packed)]. x: (B, Kin); packed: (Kin/2, N) uint8."""
     a = unpack4(packed)

@@ -2,29 +2,35 @@
 
 CPU scale:
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
-        --batch 4 --prompt-len 32 --gen 16
+        --batch 4 --prompt-len 32 --gen 16 --kernel-backend fused
 
-Uses the paper's deployment form (serve_view: dictionary + int8
+Uses the paper's deployment form (serve_view: dictionary + int8/packed
 assignments, no fp masters) and reports the weight-memory footprint both
-ways (fp32 vs LUT-Q) alongside throughput.
+ways (fp32 vs LUT-Q) alongside throughput. Decode goes through
+``runtime.serving.generate`` — the same jit-cached prefill/decode entry
+points and SWA-ring cache re-layout the library path uses — and the
+quantized matmuls dispatch through the kernel execution-backend layer
+(``--kernel-backend``; see kernels/ops.lutq_dot and docs/kernels.md).
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
+from collections import Counter
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, list_archs
-from repro.core.policy import (effective_bits, format_breakdown,
-                               quantized_fraction, rule_breakdown, serve_view)
+from repro.core.policy import (backend_manifest, effective_bits,
+                               format_breakdown, quantized_fraction,
+                               rule_breakdown, serve_view)
 from repro.core.rules import get_policy
 from repro.core.spec import QuantSpec
+from repro.kernels.ops import BACKENDS
 from repro.models import api
 from repro.models.reduce import reduced
+from repro.runtime.serving import generate
 
 
 def footprint_bytes(params) -> int:
@@ -49,6 +55,11 @@ def main(argv=None):
     ap.add_argument("--quant-bits", type=int, default=4)
     ap.add_argument("--pack4", action="store_true",
                     help="pack two 4-bit assignments per byte (K<=16 leaves)")
+    ap.add_argument("--kernel-backend", default="auto", choices=list(BACKENDS),
+                    help="kernel path for quantized matmuls: auto resolves "
+                         "per leaf (int8 -> fused Pallas, packed -> packed4); "
+                         "decode forces the dense-materialize reference; "
+                         "packed4 implies --pack4")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -60,18 +71,25 @@ def main(argv=None):
     else:
         cfg = cfg.replace(quant=QuantSpec(bits=args.quant_bits, min_size=1024),
                           act_bits=8)
+    cfg = cfg.replace(kernel_backend=args.kernel_backend)
 
     params, axes = api.init(jax.random.PRNGKey(args.seed), cfg)
     fp_bytes = footprint_bytes(params)
     qparams = api.quantize(params, cfg, axes)
     policy = api.resolved_policy(cfg)
-    sparams = serve_view(qparams, pack4=args.pack4, policy=policy)
+    pack = args.pack4 or args.kernel_backend == "packed4"
+    sparams = serve_view(qparams, pack4=pack, policy=policy)
+    manifest = backend_manifest(sparams, policy,
+                                override=args.kernel_backend)
     q_bytes = footprint_bytes(sparams)
     print(f"[serve] {cfg.name}: weights fp32 {fp_bytes/2**20:.2f} MiB -> "
           f"LUT-Q {q_bytes/2**20:.2f} MiB ({fp_bytes/max(q_bytes,1):.2f}x) | "
           f"quantized {quantized_fraction(sparams)*100:.1f}% of params "
           f"@ {effective_bits(sparams):.2f} effective bits")
     print(format_breakdown(rule_breakdown(sparams, policy)))
+    counts = Counter(m["backend"] for m in manifest.values())
+    print(f"[serve] kernel backends (requested {args.kernel_backend!r}): "
+          + ", ".join(f"{k}: {v} leaves" for k, v in sorted(counts.items())))
 
     B, P = args.batch, args.prompt_len
     max_len = P + args.gen
@@ -84,45 +102,12 @@ def main(argv=None):
         batch["prefix_embeds"] = jax.random.normal(
             jax.random.PRNGKey(3), (B, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
 
-    prefill = jax.jit(lambda p, b: api.prefill(p, cfg, b, max_len=max_len))
-    decode = jax.jit(lambda p, t, c: api.decode_step(p, cfg, t, c))
-
-    t0 = time.perf_counter()
-    logits, cache = prefill(sparams, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    # grow linear caches to max_len where the family needs it
-    if cfg.family in ("dense", "moe", "vlm", "encdec"):
-        full = api.init_cache(cfg, B, max_len,
-                              src_len=P if cfg.family == "encdec" else 0)
-        def merge(big, small):
-            if big.shape == small.shape:
-                return small.astype(big.dtype)
-            pad = [(0, b - s) for b, s in zip(big.shape, small.shape)]
-            return jnp.pad(small.astype(big.dtype), pad)
-        cache_layers = jax.tree.map(merge, full["layers"], cache["layers"])
-        cache = {**cache, "layers": cache_layers}
-
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    outs = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(sparams, tok, cache)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = jnp.concatenate(outs, axis=1)
-    tput = B * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"[serve] prefill {P} toks x{B}: {t_prefill*1e3:.1f} ms | "
-          f"decode: {tput_fmt(tput)} tok/s | sample: {np.asarray(gen[0])[:8]}")
+    gen, stats = generate(sparams, cfg, batch, steps=args.gen,
+                          max_len=max_len, return_stats=True)
+    print(f"[serve] prefill {P} toks x{B}: {stats['t_prefill_s']*1e3:.1f} ms | "
+          f"decode[{stats['backend']}]: {stats['decode_tok_s']:.1f} tok/s | "
+          f"sample: {np.asarray(gen[0])[:8]}")
     return 0
-
-
-def tput_fmt(x):
-    return f"{x:.1f}"
 
 
 if __name__ == "__main__":

@@ -67,6 +67,11 @@ class ModelConfig:
     # serving optimizations (beyond-paper; see EXPERIMENTS.md §Perf)
     kv_cache_bits: int = 16     # 8 = int8 KV cache with per-step scales
     pack_assignments: bool = False  # two 4-bit LUT indices per byte (K<=16)
+    # kernel execution backend for quantized matmuls (kernels/ops.lutq_dot):
+    # "auto" resolves per leaf (train/STE -> decode, serve int8 -> fused,
+    # serve packed -> packed4); "decode"/"fused"/"packed4" force one path
+    # model-wide (infeasible leaves degrade down the same ladder).
+    kernel_backend: str = "auto"
 
     # quantization (the paper's technique; None = fp baseline).
     # A bare QuantSpec means "uniform policy" (auto-wrapped); a

@@ -34,21 +34,26 @@ def cross_attn_init(key, cfg: ModelConfig):
 def cross_kv(p, cfg: ModelConfig, memory):
     B, Sm, _ = memory.shape
     dh = cfg.resolved_head_dim
-    k = linear_apply(p["k"], _aq(memory, cfg)).reshape(B, Sm, cfg.n_kv_heads, dh)
-    v = linear_apply(p["v"], _aq(memory, cfg)).reshape(B, Sm, cfg.n_kv_heads, dh)
+    kb = cfg.kernel_backend
+    k = linear_apply(p["k"], _aq(memory, cfg), backend=kb).reshape(
+        B, Sm, cfg.n_kv_heads, dh)
+    v = linear_apply(p["v"], _aq(memory, cfg), backend=kb).reshape(
+        B, Sm, cfg.n_kv_heads, dh)
     return k, v
 
 
 def cross_attn_apply(p, cfg: ModelConfig, x, k, v):
     B, S, _ = x.shape
     dh = cfg.resolved_head_dim
-    q = linear_apply(p["q"], _aq(x, cfg)).reshape(B, S, cfg.n_heads, dh)
+    q = linear_apply(p["q"], _aq(x, cfg),
+                     backend=cfg.kernel_backend).reshape(B, S, cfg.n_heads, dh)
     if S == 1:
         o = decode_attention(q, k, v, jnp.full((B,), k.shape[1], jnp.int32))
     else:
         o = flash_attention(q, k, v, causal=False,
                             q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
-    return linear_apply(p["o"], _aq(o.reshape(B, S, -1), cfg))
+    return linear_apply(p["o"], _aq(o.reshape(B, S, -1), cfg),
+                        backend=cfg.kernel_backend)
 
 
 def _enc_layer_init(key, cfg: ModelConfig):
@@ -140,7 +145,8 @@ def encdec_loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict[str, j
     body_fn = jax.checkpoint(body) if cfg.remat else body
     h, _ = jax.lax.scan(body_fn, h, params["decoder"])
     from repro.distributed.sharding import constrain
-    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h))
+    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h),
+                              backend=cfg.kernel_backend)
     logits = constrain(logits, (("pod", "data"), None, "model"))
     labels = batch["labels"]
     mask = (labels >= 0).astype(jnp.float32)
@@ -166,7 +172,9 @@ def encdec_prefill(params, cfg: ModelConfig, frames, tokens):
         return h, {"k": cache["k"], "v": cache["v"], "xk": xk, "xv": xv}
 
     h, caches = jax.lax.scan(body, h, params["decoder"])
-    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h[:, -1:]))
+    logits = embedding_logits(params["embed"],
+                              rmsnorm_apply(params["final_norm"], h[:, -1:]),
+                              backend=cfg.kernel_backend)
     return logits, {"layers": caches, "len": jnp.full((B,), St, jnp.int32)}
 
 
@@ -196,5 +204,6 @@ def encdec_decode_step(params, cfg: ModelConfig, token, cache):
         return h, {**new_sc, "xk": lc["xk"], "xv": lc["xv"]}
 
     h, new_caches = jax.lax.scan(body, h, (params["decoder"], cache["layers"]))
-    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h))
+    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h),
+                              backend=cfg.kernel_backend)
     return logits, {"layers": new_caches, "len": cache_len + 1}

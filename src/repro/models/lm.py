@@ -66,9 +66,10 @@ def _qkv(p, cfg: ModelConfig, x, positions):
     B, S, _ = x.shape
     dh = cfg.resolved_head_dim
     x = _aq(x, cfg)
-    q = linear_apply(p["q"], x).reshape(B, S, cfg.n_heads, dh)
-    k = linear_apply(p["k"], x).reshape(B, S, cfg.n_kv_heads, dh)
-    v = linear_apply(p["v"], x).reshape(B, S, cfg.n_kv_heads, dh)
+    kb = cfg.kernel_backend
+    q = linear_apply(p["q"], x, backend=kb).reshape(B, S, cfg.n_heads, dh)
+    k = linear_apply(p["k"], x, backend=kb).reshape(B, S, cfg.n_kv_heads, dh)
+    v = linear_apply(p["v"], x, backend=kb).reshape(B, S, cfg.n_kv_heads, dh)
     if cfg.use_qk_norm:
         q = rmsnorm_apply(p["q_norm"], q)
         k = rmsnorm_apply(p["k_norm"], k)
@@ -84,7 +85,8 @@ def attn_forward(p, cfg: ModelConfig, x, positions, *, prefix=None):
     o = flash_attention(
         q, k, v, causal=True, window=cfg.window, prefix=prefix,
         q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
-    out = linear_apply(p["o"], _aq(o.reshape(B, S, -1), cfg))
+    out = linear_apply(p["o"], _aq(o.reshape(B, S, -1), cfg),
+                       backend=cfg.kernel_backend)
     return out, {"k": k, "v": v}
 
 
@@ -132,7 +134,8 @@ def attn_decode(p, cfg: ModelConfig, x, cache, cache_len):
         o = decode_attention(q, kc, vc, filled)  # all filled ring slots live
     else:
         o = decode_attention(q, kc, vc, idx + 1, window=cfg.window)
-    out = linear_apply(p["o"], _aq(o.reshape(B, 1, -1), cfg))
+    out = linear_apply(p["o"], _aq(o.reshape(B, 1, -1), cfg),
+                       backend=cfg.kernel_backend)
     return out, new_cache
 
 
@@ -152,8 +155,10 @@ def mlp_init(key, cfg: ModelConfig, d_ff=None):
 
 def mlp_apply(p, cfg: ModelConfig, x):
     x = _aq(x, cfg)
-    h = linear_apply(p["wi"], x) * jax.nn.silu(linear_apply(p["wg"], x))
-    return linear_apply(p["wo"], _aq(h, cfg))
+    kb = cfg.kernel_backend
+    h = (linear_apply(p["wi"], x, backend=kb)
+         * jax.nn.silu(linear_apply(p["wg"], x, backend=kb)))
+    return linear_apply(p["wo"], _aq(h, cfg), backend=kb)
 
 
 def layer_init(key, cfg: ModelConfig, *, moe: bool):
@@ -183,14 +188,16 @@ def layer_forward(p, cfg: ModelConfig, h, positions, *, prefix=None):
     if cfg.use_mla:
         a_out, cache = mla_forward(
             p["attn"], a_in, positions, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
-            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head)
+            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head,
+            backend=cfg.kernel_backend)
     else:
         a_out, cache = attn_forward(p["attn"], cfg, a_in, positions, prefix=prefix)
     h = h + a_out
     m_in = rmsnorm_apply(p["ln2"], h)
     if "moe" in p:
         m_out, aux = moe_apply(p["moe"], m_in, top_k=cfg.top_k,
-                               capacity_factor=cfg.capacity_factor)
+                               capacity_factor=cfg.capacity_factor,
+                               backend=cfg.kernel_backend)
     else:
         m_out, aux = mlp_apply(p["mlp"], cfg, m_in), jnp.zeros((), jnp.float32)
     return h + m_out, cache, aux
@@ -202,14 +209,15 @@ def layer_decode(p, cfg: ModelConfig, h, cache, cache_len):
         a_out, new_cache = mla_decode(
             p["attn"], a_in, cache, cache_len, n_heads=cfg.n_heads,
             kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
-            v_head=cfg.v_head)
+            v_head=cfg.v_head, backend=cfg.kernel_backend)
     else:
         a_out, new_cache = attn_decode(p["attn"], cfg, a_in, cache, cache_len)
     h = h + a_out
     m_in = rmsnorm_apply(p["ln2"], h)
     if "moe" in p:
         m_out, _ = moe_apply(p["moe"], m_in, top_k=cfg.top_k,
-                             capacity_factor=max(cfg.capacity_factor, 2.0))
+                             capacity_factor=max(cfg.capacity_factor, 2.0),
+                             backend=cfg.kernel_backend)
     else:
         m_out = mlp_apply(p["mlp"], cfg, m_in)
     return h + m_out, new_cache
@@ -271,9 +279,11 @@ def _readout(params, cfg: ModelConfig, h):
     from repro.distributed.sharding import constrain
     h = rmsnorm_apply(params["final_norm"], h)
     if cfg.tie_embeddings:
-        logits = embedding_logits(params["embed"], h)
+        logits = embedding_logits(params["embed"], h,
+                                  backend=cfg.kernel_backend)
     else:
-        logits = linear_apply(params["lm_head"], h)
+        logits = linear_apply(params["lm_head"], h,
+                              backend=cfg.kernel_backend)
     # vocab-shard the logits (softmax/CE partition fine over a sharded
     # vocab); crucial for tied embeddings whose table keeps vocab
     # unsharded for gather friendliness

@@ -166,8 +166,8 @@ def resnet20_apply(params, stats, x, *, widths=(16, 32, 64), blocks=2,
             h = act(y + idn)
             cin = w
     h = jnp.mean(h, axis=(1, 2))
-    from repro.nn.linear import materialize
-    logits = h @ materialize(params["fc"]["kernel"], h.dtype)
+    from repro.nn.linear import dot_kernel
+    logits = dot_kernel(h, params["fc"]["kernel"])
     return logits, new_stats
 
 

@@ -42,10 +42,12 @@ def init_rwkv(key, cfg: ModelConfig):
 
 def _layer(lp, cfg, h, state):
     t_out, t_state = rwkv6_time_mix(lp["mix"], rmsnorm_apply(lp["ln1"], h), state,
-                                    head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+                                    head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+                                    backend=cfg.kernel_backend)
     h = h + t_out
     c_state = None if state is None else {"shift_c": state["shift_c"]}
-    c_out, c_state = rwkv6_channel_mix(lp["mix"], rmsnorm_apply(lp["ln2"], h), c_state)
+    c_out, c_state = rwkv6_channel_mix(lp["mix"], rmsnorm_apply(lp["ln2"], h), c_state,
+                                       backend=cfg.kernel_backend)
     h = h + c_out
     return h, (t_state, c_state)
 
@@ -62,7 +64,7 @@ def rwkv_forward(params, cfg: ModelConfig, tokens):
     h, _ = jax.lax.scan(body_fn, h, params["layers"])
     h = rmsnorm_apply(params["final_norm"], h.astype(cfg.dtype))
     from repro.distributed.sharding import constrain
-    return constrain(embedding_logits(params["embed"], h),
+    return constrain(embedding_logits(params["embed"], h, backend=cfg.kernel_backend),
                      (("pod", "data"), None, "model"))
 
 
@@ -104,7 +106,7 @@ def rwkv_prefill(params, cfg: ModelConfig, tokens):
 
     h, states = jax.lax.scan(body, h, params["layers"])
     h = rmsnorm_apply(params["final_norm"], h[:, -1:].astype(cfg.dtype))
-    logits = embedding_logits(params["embed"], h)
+    logits = embedding_logits(params["embed"], h, backend=cfg.kernel_backend)
     return logits, {"layers": states, "len": jnp.full((B,), tokens.shape[1], jnp.int32)}
 
 
@@ -118,5 +120,6 @@ def rwkv_decode_step(params, cfg: ModelConfig, token, state):
 
     h, new_states = jax.lax.scan(body, h, (params["layers"], state["layers"]))
     logits = embedding_logits(params["embed"],
-                              rmsnorm_apply(params["final_norm"], h.astype(cfg.dtype)))
+                              rmsnorm_apply(params["final_norm"], h.astype(cfg.dtype)),
+                              backend=cfg.kernel_backend)
     return logits, {"layers": new_states, "len": state["len"] + 1}

@@ -79,7 +79,8 @@ def zamba_forward(params, cfg: ModelConfig, tokens):
     def inner(h, mp):
         out, _ = mamba2_forward(mp["mamba"], rmsnorm_apply(mp["ln"], h),
                                 d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
-                                head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+                                head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+                                backend=cfg.kernel_backend)
         return h + out, None
 
     def superblock(h, sp_params):
@@ -91,7 +92,7 @@ def zamba_forward(params, cfg: ModelConfig, tokens):
     h, _ = jax.lax.scan(superblock, h, params["mamba_layers"])
     h = rmsnorm_apply(params["final_norm"], h)
     from repro.distributed.sharding import constrain
-    return constrain(embedding_logits(params["embed"], h),
+    return constrain(embedding_logits(params["embed"], h, backend=cfg.kernel_backend),
                      (("pod", "data"), None, "model"))
 
 
@@ -132,7 +133,8 @@ def zamba_prefill(params, cfg: ModelConfig, tokens, max_len: int):
     def inner(h, mp):
         out, st = mamba2_forward(mp["mamba"], rmsnorm_apply(mp["ln"], h),
                                  d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
-                                 head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+                                 head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+                                 backend=cfg.kernel_backend)
         return h + out, st
 
     def superblock(h, sp_params):
@@ -145,7 +147,7 @@ def zamba_prefill(params, cfg: ModelConfig, tokens, max_len: int):
 
     h, st = jax.lax.scan(superblock, h, params["mamba_layers"])
     h = rmsnorm_apply(params["final_norm"], h[:, -1:])
-    logits = embedding_logits(params["embed"], h)
+    logits = embedding_logits(params["embed"], h, backend=cfg.kernel_backend)
     cache = {"mamba": st["mamba"], "attn": st["attn"],
              "len": jnp.full((B,), S, jnp.int32)}
     return logits, cache
@@ -160,7 +162,8 @@ def zamba_decode_step(params, cfg: ModelConfig, token, cache):
         mp, mstate = xs
         out, st = mamba2_decode(mp["mamba"], rmsnorm_apply(mp["ln"], h), mstate,
                                 d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
-                                head_dim=cfg.ssm_head_dim)
+                                head_dim=cfg.ssm_head_dim,
+                                backend=cfg.kernel_backend)
         return h + out, st
 
     def superblock(h, xs):
@@ -174,5 +177,6 @@ def zamba_decode_step(params, cfg: ModelConfig, token, cache):
 
     h, st = jax.lax.scan(superblock, h,
                          (params["mamba_layers"], cache["mamba"], cache["attn"]))
-    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h))
+    logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h),
+                              backend=cfg.kernel_backend)
     return logits, {"mamba": st["mamba"], "attn": st["attn"], "len": cache_len + 1}

@@ -3,6 +3,12 @@
 A kernel leaf is either a plain array (unquantized) or a
 :class:`LutqState` — in which case the forward pass uses the paper's
 tied weights ``Q = d[A]`` with the straight-through estimator.
+
+Matmul-shaped uses dispatch through the kernel execution-backend layer
+(:func:`repro.kernels.ops.lutq_dot`): train-form leaves keep the dense
+STE decode, serve-form leaves hit the fused Pallas LUT-Q kernels so the
+decoded weight matrix is never materialized in HBM. ``materialize``
+remains for gather-style uses (embedding lookup, convolutions).
 """
 from __future__ import annotations
 
@@ -12,6 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lutq import LutqState, decode_any, quantize_ste_any
+from repro.kernels.ops import lutq_dot
+from repro.kernels.ref import unpack4_kin
 
 
 def materialize(kernel, dtype=None) -> jax.Array:
@@ -19,12 +27,13 @@ def materialize(kernel, dtype=None) -> jax.Array:
 
     A LutqState with ``w=None`` is the *deployment* form (paper: store
     only dictionary + assignments): decode without the STE master.
+    Gather-style consumers only — matmuls go through :func:`dot_kernel`
+    / :func:`repro.kernels.ops.lutq_dot` instead.
     """
     if isinstance(kernel, LutqState):
         a = kernel.a
         if a.dtype == jnp.uint8:  # packed 4-bit pairs (serve_view pack4)
-            from repro.core.policy import unpack4_last
-            a = unpack4_last(a)
+            a = unpack4_kin(a)
         if kernel.w is None:
             k = decode_any(kernel.d, a)
         else:
@@ -32,6 +41,22 @@ def materialize(kernel, dtype=None) -> jax.Array:
     else:
         k = kernel
     return k.astype(dtype) if dtype is not None and k.dtype != dtype else k
+
+
+def dot_kernel(x: jax.Array, kernel, *, dtype=None, backend: str = "auto",
+               transpose_rhs: bool = False) -> jax.Array:
+    """``x @ kernel`` (or ``x @ kernel.T``) with LUT-Q-aware dispatch.
+
+    LutqState leaves route through the backend layer (train-form keeps
+    the dense STE path inside ``lutq_dot``; serve-form hits the fused
+    kernels). Plain arrays are a plain matmul.
+    """
+    if isinstance(kernel, LutqState):
+        return lutq_dot(x, kernel, backend=backend,
+                        transpose_rhs=transpose_rhs,
+                        out_dtype=dtype or x.dtype)
+    k = materialize(kernel, dtype or x.dtype)
+    return jnp.matmul(x, jnp.swapaxes(k, -1, -2) if transpose_rhs else k)
 
 
 def linear_init(
@@ -54,9 +79,9 @@ def linear_init(
     return params, ax
 
 
-def linear_apply(params, x: jax.Array, *, dtype=None) -> jax.Array:
-    k = materialize(params["kernel"], dtype or x.dtype)
-    y = x @ k
+def linear_apply(params, x: jax.Array, *, dtype=None,
+                 backend: str = "auto") -> jax.Array:
+    y = dot_kernel(x, params["kernel"], dtype=dtype, backend=backend)
     if "bias" in params:
         y = y + params["bias"].astype(y.dtype)
     return y
@@ -79,7 +104,7 @@ def embedding_apply(params, ids: jax.Array, *, dtype=None) -> jax.Array:
     return jnp.take(t, ids, axis=0)
 
 
-def embedding_logits(params, x: jax.Array) -> jax.Array:
-    """Tied-softmax readout: x @ table.T."""
-    t = materialize(params["table"], x.dtype)
-    return x @ t.T
+def embedding_logits(params, x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """Tied-softmax readout: x @ table.T (fused kernels via transposed
+    assignments when the table is a serve-form LutqState)."""
+    return dot_kernel(x, params["table"], backend=backend, transpose_rhs=True)

@@ -44,9 +44,10 @@ def mla_init(
     return params, axes
 
 
-def _split_q(params, x, n_heads, qk_nope, qk_rope):
+def _split_q(params, x, n_heads, qk_nope, qk_rope, backend="auto"):
     B, S, _ = x.shape
-    q = linear_apply(params["q"], x).reshape(B, S, n_heads, qk_nope + qk_rope)
+    q = linear_apply(params["q"], x, backend=backend).reshape(
+        B, S, n_heads, qk_nope + qk_rope)
     return q[..., :qk_nope], q[..., qk_nope:]
 
 
@@ -60,25 +61,29 @@ def mla_forward(
     qk_nope: int = 128,
     qk_rope: int = 64,
     v_head: int = 128,
+    backend: str = "auto",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Training/prefill (expanded form). Returns (out, cache)."""
     B, S, D = x.shape
-    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope)
+    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope, backend)
     qr = apply_rope(qr, positions)
 
-    dkv = linear_apply(params["dkv"], x)
+    dkv = linear_apply(params["dkv"], x, backend=backend)
     c_kv, k_rope = dkv[..., :kv_lora], dkv[..., kv_lora:]
     k_rope = apply_rope(k_rope[..., None, :], positions)  # (B,S,1,qk_rope)
 
-    kn = linear_apply(params["uk"], c_kv).reshape(B, S, n_heads, qk_nope)
-    v = linear_apply(params["uv"], c_kv).reshape(B, S, n_heads, v_head)
+    kn = linear_apply(params["uk"], c_kv, backend=backend).reshape(
+        B, S, n_heads, qk_nope)
+    v = linear_apply(params["uv"], c_kv, backend=backend).reshape(
+        B, S, n_heads, v_head)
 
     # combined key = [k_nope ; k_rope broadcast to all heads]
     k = jnp.concatenate([kn, jnp.broadcast_to(k_rope, (B, S, n_heads, qk_rope))], -1)
     q = jnp.concatenate([qn, qr], -1)
     scale = (qk_nope + qk_rope) ** -0.5
     o = flash_attention(q, k, v, causal=True, scale=scale)
-    out = linear_apply(params["o"], o.reshape(B, S, n_heads * v_head))
+    out = linear_apply(params["o"], o.reshape(B, S, n_heads * v_head),
+                       backend=backend)
     cache = {"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
     return out, cache
 
@@ -94,19 +99,24 @@ def mla_decode(
     qk_nope: int = 128,
     qk_rope: int = 64,
     v_head: int = 128,
+    backend: str = "auto",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode against the latent cache (absorbed form).
 
     x: (B,1,D); cache: {"c_kv": (B,Skv,r), "k_rope": (B,Skv,qk_rope)}.
+
+    The absorbed W_uk/W_uv einsums contract per-head 3-D reshapes of the
+    up-projections — no (Kin, N) matmul for ``lutq_dot`` to take, so
+    they stay on the dense decode path regardless of ``backend``.
     """
     B, _, D = x.shape
     Skv = cache["c_kv"].shape[1]
     pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,)).reshape(B, 1)
 
-    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope)
+    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope, backend)
     qr = apply_rope(qr, pos)  # new token at position cache_len
 
-    dkv = linear_apply(params["dkv"], x)
+    dkv = linear_apply(params["dkv"], x, backend=backend)
     c_new, kr_new = dkv[..., :kv_lora], dkv[..., kv_lora:]
     kr_new = apply_rope(kr_new[..., None, :], pos)[..., 0, :]
 
@@ -132,5 +142,5 @@ def mla_decode(
     o_lat = jnp.einsum("bhk,bkr->bhr", p.astype(x.dtype), c_kv)  # (B,H,r)
     wuv = materialize(params["uv"]["kernel"], x.dtype).reshape(kv_lora, n_heads, v_head)
     o = jnp.einsum("bhr,rhv->bhv", o_lat, wuv).reshape(B, 1, n_heads * v_head)
-    out = linear_apply(params["o"], o)
+    out = linear_apply(params["o"], o, backend=backend)
     return out, {"c_kv": c_kv, "k_rope": k_rope}

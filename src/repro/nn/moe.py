@@ -19,8 +19,28 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.nn.linear import materialize
+from repro.core.lutq import LutqState
+from repro.kernels.ops import lutq_dot
+from repro.nn.linear import dot_kernel, materialize
 from repro.nn.tree import rng_stream
+
+
+def _expert_dot(buf: jax.Array, leaf, cdt, backend: str = "auto") -> jax.Array:
+    """Batched per-expert matmul: (E, C, Din) @ leaf (E, Din, Dout).
+
+    Serve-form LUT-Q experts (stacked per-expert dictionaries) vmap the
+    kernel backend layer over E, so each expert's fused Pallas kernel
+    streams its own int8/packed assignments — the decoded expert weights
+    (the bulk of MoE parameters) are never materialized in HBM. Train
+    form / plain arrays keep the dense einsum.
+    """
+    if (isinstance(leaf, LutqState) and leaf.w is None
+            and leaf.d.ndim == 2 and leaf.a.ndim == 3):
+        return jax.vmap(
+            lambda b, d, a: lutq_dot(b, LutqState(w=None, d=d, a=a),
+                                     backend=backend, out_dtype=cdt)
+        )(buf, leaf.d, leaf.a)
+    return jnp.einsum("ecd,edf->ecf", buf, materialize(leaf, cdt))
 
 
 def moe_init(
@@ -65,8 +85,15 @@ def moe_apply(
     top_k: int,
     capacity_factor: float = 1.25,
     dtype=None,
+    backend: str = "auto",
 ) -> Tuple[jax.Array, jax.Array]:
-    """x: (B,S,D) -> (out, aux_loss)."""
+    """x: (B,S,D) -> (out, aux_loss).
+
+    Expert weights carry per-expert (stacked) dictionaries: serve-form
+    experts vmap the kernel backend layer over the expert axis (see
+    ``_expert_dot``), train-form experts keep the dense STE einsum. The
+    unstacked shared-expert projections route through ``dot_kernel``.
+    """
     B, S, D = x.shape
     cdt = dtype or x.dtype
     T = B * S
@@ -101,11 +128,9 @@ def moe_apply(
     buf = jnp.zeros((E * C + 1, D), cdt).at[slot].add(x_rep.astype(cdt))
     buf = buf[: E * C].reshape(E, C, D)
 
-    wi = materialize(params["wi"], cdt)
-    wg = materialize(params["wg"], cdt)
-    wo = materialize(params["wo"], cdt)
-    h = jnp.einsum("ecd,edf->ecf", buf, wi) * jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
-    out_buf = jnp.einsum("ecf,efd->ecd", h, wo).reshape(E * C, D)
+    h = (_expert_dot(buf, params["wi"], cdt, backend)
+         * jax.nn.silu(_expert_dot(buf, params["wg"], cdt, backend)))
+    out_buf = _expert_dot(h, params["wo"], cdt, backend).reshape(E * C, D)
 
     # combine
     gathered = jnp.take(out_buf, jnp.minimum(slot, E * C - 1), axis=0)
@@ -114,11 +139,10 @@ def moe_apply(
     out = combined.reshape(B, S, D).astype(x.dtype)
 
     if "shared_wi" in params:
-        swi = materialize(params["shared_wi"], cdt)
-        swg = materialize(params["shared_wg"], cdt)
-        swo = materialize(params["shared_wo"], cdt)
-        sh = (x.astype(cdt) @ swi) * jax.nn.silu(x.astype(cdt) @ swg)
-        out = out + (sh @ swo).astype(x.dtype)
+        xs = x.astype(cdt)
+        sh = (dot_kernel(xs, params["shared_wi"], backend=backend)
+              * jax.nn.silu(dot_kernel(xs, params["shared_wg"], backend=backend)))
+        out = out + dot_kernel(sh, params["shared_wo"], backend=backend).astype(x.dtype)
     return out, aux
 
 

@@ -21,7 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.nn.linear import linear_apply, linear_init
+from repro.nn.linear import dot_kernel, linear_apply, linear_init
 from repro.nn.norms import rmsnorm_apply
 from repro.nn.tree import rng_stream
 
@@ -125,7 +125,7 @@ def _wkv_scan(r, k, v, w, u, s0, *, chunk: int = 64):
 
 def rwkv6_time_mix(
     params, x: jax.Array, state: Optional[Dict[str, jax.Array]],
-    *, head_dim: int = 64, chunk: int = 64,
+    *, head_dim: int = 64, chunk: int = 64, backend: str = "auto",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     B, S, D = x.shape
     H = D // head_dim
@@ -138,15 +138,14 @@ def rwkv6_time_mix(
     xg = _mix(x, xs, params["mix_g"])
     xw = _mix(x, xs, params["mix_w"])
 
-    r = linear_apply(params["r"], xr).reshape(B, S, H, head_dim)
-    k = linear_apply(params["k"], xk).reshape(B, S, H, head_dim)
-    v = linear_apply(params["v"], xv).reshape(B, S, H, head_dim)
-    g = linear_apply(params["g"], xg)
+    r = linear_apply(params["r"], xr, backend=backend).reshape(B, S, H, head_dim)
+    k = linear_apply(params["k"], xk, backend=backend).reshape(B, S, H, head_dim)
+    v = linear_apply(params["v"], xv, backend=backend).reshape(B, S, H, head_dim)
+    g = linear_apply(params["g"], xg, backend=backend)
 
-    from repro.nn.linear import materialize
-    w1 = materialize(params["w1"], jnp.float32)
-    w2 = materialize(params["w2"], jnp.float32)
-    lora = jnp.tanh(xw.astype(jnp.float32) @ w1) @ w2
+    xw32 = xw.astype(jnp.float32)
+    lora = dot_kernel(jnp.tanh(dot_kernel(xw32, params["w1"], backend=backend)),
+                      params["w2"], backend=backend)
     logw = -jnp.exp(jnp.clip(params["w0"][None, None, :] + lora, -8.0, 4.0))
     w = jnp.exp(logw).reshape(B, S, H, head_dim)  # decay in (0,1)
 
@@ -160,27 +159,30 @@ def rwkv6_time_mix(
     y = y.reshape(B, S, H, head_dim)
     y = rmsnorm_apply({"scale": params["ln_x"].reshape(H, head_dim)[None, None]},
                       y).reshape(B, S, D).astype(x.dtype)
-    out = linear_apply(params["o"], y * jax.nn.silu(g))
+    out = linear_apply(params["o"], y * jax.nn.silu(g), backend=backend)
     return out, {"shift_t": new_prev, "wkv": sT}
 
 
 def rwkv6_channel_mix(
     params, x: jax.Array, state: Optional[Dict[str, jax.Array]],
+    *, backend: str = "auto",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     prev = None if state is None else state["shift_c"]
     xs, new_prev = _shift(x, prev)
     xk = _mix(x, xs, params["mix_ck"])
     xr = _mix(x, xs, params["mix_cr"])
-    k = jnp.square(jax.nn.relu(linear_apply(params["cm_k"], xk)))
-    out = jax.nn.sigmoid(linear_apply(params["cm_r"], xr)) * linear_apply(params["cm_v"], k)
+    k = jnp.square(jax.nn.relu(linear_apply(params["cm_k"], xk, backend=backend)))
+    out = (jax.nn.sigmoid(linear_apply(params["cm_r"], xr, backend=backend))
+           * linear_apply(params["cm_v"], k, backend=backend))
     return out, {"shift_c": new_prev}
 
 
 def rwkv6_layer(
     params, x: jax.Array, state: Optional[Dict[str, jax.Array]] = None,
-    *, head_dim: int = 64, chunk: int = 64,
+    *, head_dim: int = 64, chunk: int = 64, backend: str = "auto",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full pre-norm RWKV6 layer (time-mix + channel-mix). Norms are
     applied by the caller (model assembles ln -> tmix -> ln -> cmix)."""
-    t_out, t_state = rwkv6_time_mix(params, x, state, head_dim=head_dim, chunk=chunk)
+    t_out, t_state = rwkv6_time_mix(params, x, state, head_dim=head_dim,
+                                    chunk=chunk, backend=backend)
     return t_out, t_state

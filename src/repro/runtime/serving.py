@@ -5,10 +5,15 @@ Bridges ``prefill`` (which returns caches sized to the prompt) and
   * ``grow_cache``: right-pad linear caches to max_len;
   * ``ring_from_linear``: re-lay a linear KV cache into the SWA ring
     (slot = position % window) so decode can continue a long prompt;
+  * ``decode_fn`` / ``prefill_fn``: jit-cached entry points keyed on
+    the (hashable) ModelConfig, shared by the library loop and the
+    serving CLI so both reuse one trace per config;
   * ``generate``: batched greedy/temperature generation loop.
 """
 from __future__ import annotations
 
+import functools
+import time
 from typing import Dict, Optional
 
 import jax
@@ -66,6 +71,31 @@ def adapt_prefill_cache(cfg: ModelConfig, cache, batch: int, max_len: int,
     return grow_cache(cache, target)
 
 
+def _decode_step(cfg: ModelConfig, params, token, cache):
+    return api.decode_step(params, cfg, token, cache)
+
+
+def _prefill(cfg: ModelConfig, max_len: int, params, batch):
+    return api.prefill(params, cfg, batch, max_len=max_len)
+
+
+@functools.lru_cache(maxsize=64)
+def decode_fn(cfg: ModelConfig):
+    """Jit-cached one-token decode for a config.
+
+    ModelConfig is a frozen (hashable) dataclass, so repeated ``generate``
+    calls — and the serving CLI — share one compiled decode per config
+    instead of re-wrapping (and re-tracing) a fresh lambda per call.
+    """
+    return jax.jit(functools.partial(_decode_step, cfg))
+
+
+@functools.lru_cache(maxsize=64)
+def prefill_fn(cfg: ModelConfig, max_len: int):
+    """Jit-cached prefill for (config, max_len)."""
+    return jax.jit(functools.partial(_prefill, cfg, max_len))
+
+
 def generate(
     params,
     cfg: ModelConfig,
@@ -75,17 +105,36 @@ def generate(
     max_len: Optional[int] = None,
     temperature: float = 0.0,
     rng: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+    return_stats: bool = False,
 ):
-    """Prefill the prompt then decode `steps` tokens. Returns (B, steps)."""
+    """Prefill the prompt then decode `steps` tokens. Returns (B, steps).
+
+    ``backend``: optional kernel-backend override (auto | decode | fused
+    | packed4) applied as ``cfg.replace(kernel_backend=...)``, so serve
+    trees hit the requested Pallas LUT-Q path. ``return_stats=True``
+    additionally returns {"t_prefill_s", "t_decode_s", "decode_tok_s",
+    "backend"} measured around the jit-cached entry points (the same
+    ones the CLI times, so library and CLI numbers agree).
+    """
+    if backend is not None:
+        cfg = cfg.replace(kernel_backend=backend)
     toks = batch["tokens"]
     B, P = toks.shape
-    max_len = max_len or (P + steps)
-    logits, cache = api.prefill(params, cfg, batch, max_len=max_len)
+    # max_len counts text tokens; prepended modality embeddings (vlm)
+    # occupy cache slots too, so widen the decode cache by the prefix.
+    prefix = cfg.n_prefix_tokens if "prefix_embeds" in batch else 0
+    max_len = (max_len or (P + steps)) + prefix
+
+    t0 = time.perf_counter()
+    logits, cache = prefill_fn(cfg, max_len)(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
     cache = adapt_prefill_cache(
         cfg, cache, B, max_len,
         src_len=batch["frames"].shape[1] if cfg.family == "encdec" else 0)
 
-    decode = jax.jit(lambda p, t, c: api.decode_step(p, cfg, t, c))
+    decode = decode_fn(cfg)
 
     def sample(lg, key):
         lg = lg[:, -1].astype(jnp.float32)
@@ -97,9 +146,21 @@ def generate(
     key, sub = jax.random.split(key)
     tok = sample(logits, sub)
     out = [tok]
+    t0 = time.perf_counter()
     for _ in range(steps - 1):
         logits, cache = decode(params, tok, cache)
         key, sub = jax.random.split(key)
         tok = sample(logits, sub)
         out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    gen = jnp.concatenate(out, axis=1)
+    if return_stats:
+        stats = {
+            "t_prefill_s": t_prefill,
+            "t_decode_s": t_decode,
+            "decode_tok_s": B * max(steps - 1, 0) / max(t_decode, 1e-9),
+            "backend": cfg.kernel_backend,
+        }
+        return gen, stats
+    return gen

@@ -15,8 +15,8 @@ from repro.core.policy import (
     quantized_fraction,
     serve_view,
     split_trainable,
-    unpack4_last,
 )
+from repro.kernels.ref import unpack4_kin
 from repro.core.spec import QuantSpec
 
 
@@ -110,9 +110,11 @@ class TestServeView:
         s = serve_view(q, pack4=True)
         a_packed = s["layer"]["kernel"].a
         assert a_packed.dtype == jnp.uint8
-        assert a_packed.shape[-1] == q["layer"]["kernel"].a.shape[-1] // 2
+        # packed along axis -2: the matmul reduction axis = the Pallas
+        # lutq_gemv_packed row-pair layout
+        assert a_packed.shape[-2] == q["layer"]["kernel"].a.shape[-2] // 2
         np.testing.assert_array_equal(
-            np.asarray(unpack4_last(a_packed)),
+            np.asarray(unpack4_kin(a_packed)),
             np.asarray(q["layer"]["kernel"].a))
 
     def test_pack4_skipped_for_large_K(self):

@@ -253,11 +253,11 @@ class TestMixedPolicyEndToEnd:
                 assert (la.sid is None) == (lb.sid is None)
 
         # serve view from the restored tree, policy-gated packing
-        from repro.core.policy import unpack4_last
+        from repro.kernels.ref import unpack4_kin
         sv = serve_view(rmerged, pack4=True, policy=rpol)
         smlp = sv["layers"]["mlp"]["wi"]["kernel"]
         assert sv["layers"]["attn"]["q"]["kernel"].w is None
-        sa = unpack4_last(smlp.a) if smlp.a.dtype == jnp.uint8 else smlp.a
+        sa = unpack4_kin(smlp.a) if smlp.a.dtype == jnp.uint8 else smlp.a
         np.testing.assert_array_equal(np.asarray(decode_any(smlp.d, sa)),
                                       np.asarray(decode_any(mlp2.d, mlp2.a)))
         # a decode forward runs on the serve tree
