@@ -1,0 +1,230 @@
+"""Serving-discipline benchmark: static batching vs continuous batching
+on ragged Poisson arrivals.
+
+Both disciplines serve the SAME deterministic workload (ragged prompt
+lengths, ragged max_new, Poisson arrival times) on the SAME quantized
+weights and jit traces:
+
+  * static: requests are grouped in arrival order into lock-step batches
+    of ``--max-batch``; a batch launches once its last member has
+    arrived, prompts are right-padded to the batch max (the per-stream
+    ``lengths`` path in ``serving.generate``), and every stream decodes
+    ``max(max_new)`` steps — the padding + straggler waste this PR's
+    engine exists to eliminate;
+  * continuous: the slot-pool engine (``runtime.engine.Engine``) admits
+    each request as it arrives and a slot frees, and retires it the
+    step it finishes.
+
+Time is discrete-event: a virtual clock advances by the *measured* wall
+time of each compute call, and arrival gaps advance it for free — so
+queueing dynamics are Poisson while compute cost is real. A warmup pass
+over the same workload compiles every (shape, length) trace first;
+goodput counts requested tokens only (static over-generation is waste,
+not goodput).
+
+    python benchmarks/engine_bench.py --quick   # CI smoke; writes
+                                                # BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections import deque
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.policy import serve_view  # noqa: E402
+from repro.core.spec import QuantSpec  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.models.reduce import reduced  # noqa: E402
+from repro.runtime.engine import Engine, synthetic_requests  # noqa: E402
+from repro.runtime.serving import generate  # noqa: E402
+
+
+def _pctl(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def serve_static(params, cfg, reqs, *, capacity, max_len):
+    """Lock-step batches of ``capacity`` in arrival order (virtual clock)."""
+    clock = 0.0
+    lat, n_good = [], 0
+    batches = [reqs[i:i + capacity] for i in range(0, len(reqs), capacity)]
+    for group in batches:
+        clock = max(clock, max(r["arrival_s"] for r in group))
+        lens = [len(r["tokens"]) for r in group]
+        steps = max(r["max_new"] for r in group)
+        P = max(lens)
+        toks = np.zeros((len(group), P), np.int32)
+        for i, r in enumerate(group):
+            toks[i, :lens[i]] = r["tokens"]
+        t0 = time.perf_counter()
+        generate(params, cfg, {"tokens": jnp.asarray(toks)}, steps=steps,
+                 lengths=lens, max_len=max_len)
+        clock += time.perf_counter() - t0
+        for r in group:
+            lat.append(clock - r["arrival_s"])
+            n_good += r["max_new"]
+    return {
+        "discipline": "static",
+        "batches": len(batches),
+        "makespan_s": clock,
+        "goodput_tok_s": n_good / max(clock, 1e-9),
+        "p50_latency_s": _pctl(lat, 50),
+        "p95_latency_s": _pctl(lat, 95),
+    }
+
+
+def warm_engine_traces(params, cfg, *, capacity, max_len, bucket, vocab):
+    """Compile every admission-group shape the engine can hit: with a
+    fixed prefill bucket the group width is constant, so the trace set
+    is just the group sizes 1..capacity (plus the shared decode step)."""
+    eng = Engine(params, cfg, capacity=capacity, max_len=max_len,
+                 prefill_bucket=bucket)
+    rng = np.random.default_rng(0)
+    for m in range(1, capacity + 1):
+        for _ in range(m):
+            eng.submit(rng.integers(0, vocab, size=(bucket,)).astype(np.int32),
+                       max_new=2)
+        eng.run()
+
+
+def serve_continuous(params, cfg, reqs, *, capacity, max_len, bucket=1):
+    """Slot-pool engine fed by the arrival process (virtual clock)."""
+    eng = Engine(params, cfg, capacity=capacity, max_len=max_len,
+                 prefill_bucket=bucket)
+    pending = deque(reqs)
+    arrival = {}
+    clock = 0.0
+    lat, n_good = [], 0
+    while pending or not eng.idle:
+        while pending and pending[0]["arrival_s"] <= clock:
+            r = dict(pending.popleft())
+            t_arr = r.pop("arrival_s")
+            rid = eng.submit(**r)
+            arrival[rid] = t_arr
+        if eng.idle and pending:
+            clock = pending[0]["arrival_s"]  # idle until the next arrival
+            continue
+        t0 = time.perf_counter()
+        retired = eng.step()
+        clock += time.perf_counter() - t0
+        for res in retired:
+            lat.append(clock - arrival[res["rid"]])
+            n_good += res["n_new"]
+    return {
+        "discipline": "continuous",
+        "decode_steps": eng.stats()["decode_steps"],
+        "makespan_s": clock,
+        "goodput_tok_s": n_good / max(clock, 1e-9),
+        "p50_latency_s": _pctl(lat, 50),
+        "p95_latency_s": _pctl(lat, 95),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload / CI smoke")
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="0 = 12 with --quick else 24")
+    # decode-heavy by default: serving is decode-dominated (the LUT-Q
+    # roofline term), and decode steps are where the disciplines differ
+    # (static runs max(max_new) for the whole batch; the ragged spread
+    # of max_new in [gen/4, gen] is the straggler waste)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate in requests per virtual "
+                         "second (0 = 6x the static service rate, i.e. "
+                         "an overloaded queue, so goodput measures "
+                         "service capacity rather than offered load)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=str(ROOT / "BENCH_engine.json"))
+    args = ap.parse_args(argv)
+
+    n = args.requests or (12 if args.quick else 24)
+    cfg = reduced(get_config(args.arch)).replace(
+        quant=QuantSpec(bits=4, min_size=1024), act_bits=8)
+    params, axes = api.init(jax.random.PRNGKey(args.seed), cfg)
+    sparams = serve_view(api.quantize(params, cfg, axes),
+                         policy=api.resolved_policy(cfg))
+    max_len = args.prompt_len + args.gen
+
+    reqs = synthetic_requests(cfg, n, max_prompt=args.prompt_len,
+                              max_new=args.gen, seed=args.seed,
+                              rate=args.rate or 1.0)
+    # warmup: compile every (batch, length) trace both disciplines hit;
+    # the engine admits at a fixed bucket width so its trace set is
+    # closed (group sizes 1..capacity) regardless of arrival dynamics
+    bucket = args.prompt_len
+    serve_static(sparams, cfg, reqs, capacity=args.max_batch, max_len=max_len)
+    warm_engine_traces(sparams, cfg, capacity=args.max_batch,
+                       max_len=max_len, bucket=bucket, vocab=cfg.vocab)
+    serve_continuous(sparams, cfg, reqs, capacity=args.max_batch,
+                     max_len=max_len, bucket=bucket)
+
+    if not args.rate:
+        # calibrate offered load from the static path's *service*
+        # capacity (a warm burst with every arrival at t=0 — no
+        # arrival-limited feedback), then offer 2x that as a Poisson
+        # process: an overloaded queue, so goodput compares service
+        # capacity (padding + straggler waste) instead of echoing the
+        # offered load back
+        burst = [dict(r, arrival_s=0.0) for r in reqs]
+        calib = serve_static(sparams, cfg, burst, capacity=args.max_batch,
+                             max_len=max_len)
+        mean_new = float(np.mean([r["max_new"] for r in reqs]))
+        rate = 2.0 * calib["goodput_tok_s"] / max(mean_new, 1.0)
+        reqs = synthetic_requests(cfg, n, max_prompt=args.prompt_len,
+                                  max_new=args.gen, seed=args.seed, rate=rate)
+    # best-of-3: single-call CPU wall times jitter far more than the
+    # ~1.2x structural gap; the min-makespan run is the least-noise
+    # estimate of each discipline's true service cost
+    static = min((serve_static(sparams, cfg, reqs, capacity=args.max_batch,
+                               max_len=max_len) for _ in range(3)),
+                 key=lambda r: r["makespan_s"])
+    cont = min((serve_continuous(sparams, cfg, reqs, capacity=args.max_batch,
+                                 max_len=max_len, bucket=bucket)
+                for _ in range(3)),
+               key=lambda r: r["makespan_s"])
+
+    rec = {
+        "workload": {
+            "arch": cfg.name, "requests": n, "max_batch": args.max_batch,
+            "prompt_len": args.prompt_len, "gen": args.gen,
+            "seed": args.seed, "quick": bool(args.quick),
+            "total_requested_tokens": int(sum(r["max_new"] for r in reqs)),
+        },
+        "static": static,
+        "continuous": cont,
+        "speedup_goodput": cont["goodput_tok_s"] / max(static["goodput_tok_s"],
+                                                       1e-9),
+        "p95_latency_ratio": static["p95_latency_s"] / max(
+            cont["p95_latency_s"], 1e-9),
+    }
+    for row in (static, cont):
+        print(f"{row['discipline']:>10s}: goodput {row['goodput_tok_s']:8.1f} "
+              f"tok/s | makespan {row['makespan_s']:6.2f} s | "
+              f"latency p50 {row['p50_latency_s']*1e3:7.0f} ms "
+              f"p95 {row['p95_latency_s']*1e3:7.0f} ms")
+    print(f"continuous/static goodput: {rec['speedup_goodput']:.2f}x | "
+          f"static/continuous p95 latency: {rec['p95_latency_ratio']:.2f}x")
+    Path(args.json_out).write_text(json.dumps(rec, indent=1))
+    print(f"wrote {args.json_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

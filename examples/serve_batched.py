@@ -1,23 +1,27 @@
 """Batched serving with LUT-Q deployment weights (dictionary + packed
-assignments, no fp32 masters) — prefill a batch of prompts, then decode
-tokens with the int8 KV cache.
+assignments, no fp32 masters) — a ragged queue of prompts served by the
+continuous-batching slot-pool engine with the int8 KV cache.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6-1.6b]
+
+Each request is prefilled at its own length through the real prefill
+path (the fused LUT-Q kernel backends included), spliced into a free
+decode slot, and retired as soon as it finishes — the decode batch
+stays full instead of lock-stepping on the longest prompt. Prints the
+same stats dict as ``python -m repro.launch.serve --engine``.
 """
 import argparse
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.core.policy import serve_view
 from repro.core.spec import QuantSpec
+from repro.launch.serve import format_engine_stats, run_engine
 from repro.models import api
 from repro.models.reduce import reduced
 
@@ -25,7 +29,9 @@ from repro.models.reduce import reduced
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b", choices=list_archs())
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--queue", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
     args = ap.parse_args()
 
@@ -43,29 +49,10 @@ def main():
     print(f"[serve] {cfg.name}: deploy {dq/2**20:.2f} MiB "
           f"(fp32 {fp/2**20:.2f} MiB, {fp/dq:.1f}x)")
 
-    B, P = args.batch, 16
-    max_len = P + args.gen
-    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
-
-    # decode loop against a preallocated max_len cache: write the prompt
-    # through decode steps (simple; production prefill path also exists)
-    decode = jax.jit(lambda p, t, c: api.decode_step(p, cfg, t, c))
-    cache = api.init_cache(cfg, B, max_len, src_len=max_len)
-    tok = toks[:, :1]
-    t0 = time.perf_counter()
-    generated = []
-    for i in range(P + args.gen - 1):
-        logits, cache = decode(deploy, tok, cache)
-        if i + 1 < P:
-            tok = toks[:, i + 1:i + 2]  # teacher-force the prompt
-        else:
-            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-            generated.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    out = np.asarray(jnp.concatenate(generated, 1))
-    print(f"[serve] {B} streams x {len(generated)} new tokens in {dt:.2f}s "
-          f"({B*len(generated)/dt:.1f} tok/s) | first stream: {out[0][:10]}")
+    stats = run_engine(deploy, cfg, capacity=args.max_batch,
+                       n_requests=args.queue, prompt_len=args.prompt_len,
+                       gen=args.gen)
+    print(format_engine_stats(stats))
 
 
 if __name__ == "__main__":

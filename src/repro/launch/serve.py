@@ -4,6 +4,10 @@ CPU scale:
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --batch 4 --prompt-len 32 --gen 16 --kernel-backend fused
 
+Continuous batching (ragged queue through the slot-pool engine):
+    PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+        --reduced --engine --max-batch 4 --queue 16 --gen 12
+
 Uses the paper's deployment form (serve_view: dictionary + int8/packed
 assignments, no fp masters) and reports the weight-memory footprint both
 ways (fp32 vs LUT-Q) alongside throughput. Decode goes through
@@ -11,6 +15,9 @@ ways (fp32 vs LUT-Q) alongside throughput. Decode goes through
 points and SWA-ring cache re-layout the library path uses — and the
 quantized matmuls dispatch through the kernel execution-backend layer
 (``--kernel-backend``; see kernels/ops.lutq_dot and docs/kernels.md).
+With ``--engine`` the same weights serve a ragged request queue through
+``runtime.engine.Engine`` (see docs/serving.md) and the report adds
+goodput and p50/p95 request latency.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ from repro.core.spec import QuantSpec
 from repro.kernels.ops import BACKENDS
 from repro.models import api
 from repro.models.reduce import reduced
+from repro.runtime.engine import Engine
 from repro.runtime.serving import generate
 
 
@@ -39,6 +47,38 @@ def footprint_bytes(params) -> int:
         if leaf is not None and hasattr(leaf, "nbytes"):
             total += leaf.nbytes
     return total
+
+
+def run_engine(params, cfg, *, capacity: int, n_requests: int,
+               prompt_len: int, gen: int, seed: int = 0,
+               temperature: float = 0.0):
+    """Serve a deterministic ragged queue through the slot-pool engine
+    and return its stats dict (shared by the CLI and the example, so
+    both report identical fields)."""
+    from repro.runtime.engine import synthetic_requests
+
+    src_len = prompt_len if cfg.family == "encdec" else 0
+    eng = Engine(params, cfg, capacity=capacity, max_len=prompt_len + gen,
+                 src_len=src_len, temperature=temperature,
+                 rng=jax.random.PRNGKey(seed))
+    for req in synthetic_requests(cfg, n_requests, max_prompt=prompt_len,
+                                  max_new=gen, seed=seed, src_len=src_len):
+        req.pop("arrival_s")
+        eng.submit(**req)
+    eng.run()
+    return eng.stats()
+
+
+def format_engine_stats(stats) -> str:
+    return (f"[serve] engine: {stats['completed']}/{stats['admitted']} requests "
+            f"on {stats['capacity']} slots | decode[{stats['backend']}]: "
+            f"{stats['decode_tok_s']:.1f} tok/s | goodput "
+            f"{stats['goodput_tok_s']:.1f} tok/s | latency p50 "
+            f"{stats['p50_latency_s']*1e3:.0f} ms p95 "
+            f"{stats['p95_latency_s']*1e3:.0f} ms | "
+            f"{stats['decode_steps']} decode steps, "
+            f"prefill {stats['t_prefill_s']:.2f} s, "
+            f"decode {stats['t_decode_s']:.2f} s")
 
 
 def main(argv=None):
@@ -60,6 +100,14 @@ def main(argv=None):
                          "per leaf (int8 -> fused Pallas, packed -> packed4); "
                          "decode forces the dense-materialize reference; "
                          "packed4 implies --pack4")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a ragged FIFO queue through the "
+                         "continuous-batching slot-pool engine instead of "
+                         "one static batch (see docs/serving.md)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="engine slot-pool capacity (decode batch width)")
+    ap.add_argument("--queue", type=int, default=16,
+                    help="number of ragged requests to enqueue with --engine")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -90,6 +138,13 @@ def main(argv=None):
     counts = Counter(m["backend"] for m in manifest.values())
     print(f"[serve] kernel backends (requested {args.kernel_backend!r}): "
           + ", ".join(f"{k}: {v} leaves" for k, v in sorted(counts.items())))
+
+    if args.engine:
+        stats = run_engine(sparams, cfg, capacity=args.max_batch,
+                           n_requests=args.queue, prompt_len=args.prompt_len,
+                           gen=args.gen, seed=args.seed)
+        print(format_engine_stats(stats))
+        return 0
 
     B, P = args.batch, args.prompt_len
     max_len = P + args.gen

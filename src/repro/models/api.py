@@ -91,17 +91,32 @@ def loss_fn(params, cfg: ModelConfig, batch):
     raise ValueError(cfg.family)
 
 
-def prefill(params, cfg: ModelConfig, batch, *, max_len: Optional[int] = None):
+def prefill(params, cfg: ModelConfig, batch, *, max_len: Optional[int] = None,
+            lengths=None):
+    """Run the prompt, return (last_logits, cache).
+
+    ``lengths``: optional per-stream (B,) prompt lengths for ragged
+    (right-padded) batches — the returned logits are gathered at each
+    stream's last *real* token and ``cache["len"]`` records the true
+    lengths. Recurrent families (ssm/hybrid) gather logits correctly but
+    their state still integrates padding tokens; ragged batches for
+    those families should be prefilled per stream at exact length (see
+    ``runtime.engine``).
+    """
     if cfg.family in ("dense", "moe", "vlm"):
         return m_lm.lm_prefill(params, cfg, batch["tokens"],
-                               prefix_embeds=batch.get("prefix_embeds"))
+                               prefix_embeds=batch.get("prefix_embeds"),
+                               lengths=lengths)
     if cfg.family == "encdec":
-        return m_encdec.encdec_prefill(params, cfg, batch["frames"], batch["tokens"])
+        return m_encdec.encdec_prefill(params, cfg, batch["frames"],
+                                       batch["tokens"], lengths=lengths)
     if cfg.family == "hybrid":
         return m_zamba.zamba_prefill(params, cfg, batch["tokens"],
-                                     max_len or batch["tokens"].shape[1])
+                                     max_len or batch["tokens"].shape[1],
+                                     lengths=lengths)
     if cfg.family == "ssm":
-        return m_rwkv.rwkv_prefill(params, cfg, batch["tokens"])
+        return m_rwkv.rwkv_prefill(params, cfg, batch["tokens"],
+                                   lengths=lengths)
     raise ValueError(cfg.family)
 
 

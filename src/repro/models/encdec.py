@@ -42,13 +42,18 @@ def cross_kv(p, cfg: ModelConfig, memory):
     return k, v
 
 
-def cross_attn_apply(p, cfg: ModelConfig, x, k, v):
+def cross_attn_apply(p, cfg: ModelConfig, x, k, v, *, src_len=None):
+    """``src_len``: per-stream (B,) count of real memory positions —
+    decode against a right-padded cross KV (engine slot pool) must not
+    attend the zero padding."""
     B, S, _ = x.shape
     dh = cfg.resolved_head_dim
     q = linear_apply(p["q"], _aq(x, cfg),
                      backend=cfg.kernel_backend).reshape(B, S, cfg.n_heads, dh)
     if S == 1:
-        o = decode_attention(q, k, v, jnp.full((B,), k.shape[1], jnp.int32))
+        if src_len is None:
+            src_len = jnp.full((B,), k.shape[1], jnp.int32)
+        o = decode_attention(q, k, v, src_len)
     else:
         o = flash_attention(q, k, v, causal=False,
                             q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
@@ -157,10 +162,16 @@ def encdec_loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict[str, j
     return loss, {"loss": loss}
 
 
-def encdec_prefill(params, cfg: ModelConfig, frames, tokens):
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, *, lengths=None):
     """Encode + run target prefix; returns (last_logits, cache).
 
-    cache: self-attn KV per decoder layer + precomputed cross KV."""
+    cache: self-attn KV per decoder layer + precomputed cross KV.
+    ``lengths``: per-stream real *target* prompt lengths for ragged
+    (right-padded) token batches — logits come from each stream's last
+    real token. Frames are taken at face value (the encoder is
+    bidirectional, so padded frames would corrupt real positions; ragged
+    sources go through per-request prefill in ``runtime.engine``, which
+    records the true width in ``cache["src_len"]``)."""
     memory = encode(params, cfg, frames)
     h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
     B, St, _ = h.shape
@@ -172,10 +183,15 @@ def encdec_prefill(params, cfg: ModelConfig, frames, tokens):
         return h, {"k": cache["k"], "v": cache["v"], "xk": xk, "xv": xv}
 
     h, caches = jax.lax.scan(body, h, params["decoder"])
+    from repro.models.lm import last_real_slice
+    h_last = h[:, -1:] if lengths is None else last_real_slice(h, lengths)
     logits = embedding_logits(params["embed"],
-                              rmsnorm_apply(params["final_norm"], h[:, -1:]),
+                              rmsnorm_apply(params["final_norm"], h_last),
                               backend=cfg.kernel_backend)
-    return logits, {"layers": caches, "len": jnp.full((B,), St, jnp.int32)}
+    cache_len = (jnp.full((B,), St, jnp.int32) if lengths is None
+                 else jnp.asarray(lengths, jnp.int32))
+    return logits, {"layers": caches, "len": cache_len,
+                    "src_len": jnp.full((B,), memory.shape[1], jnp.int32)}
 
 
 def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int):
@@ -187,23 +203,28 @@ def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int):
         "xv": jnp.zeros((batch, src_len, cfg.n_kv_heads, dh), cfg.dtype),
     }
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
-    return {"layers": stacked, "len": jnp.zeros((batch,), jnp.int32)}
+    return {"layers": stacked, "len": jnp.zeros((batch,), jnp.int32),
+            "src_len": jnp.full((batch,), src_len, jnp.int32)}
 
 
 def encdec_decode_step(params, cfg: ModelConfig, token, cache):
     h = embedding_apply(params["embed"], token, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
     cache_len = cache["len"]
+    src_len = cache.get("src_len")
 
     def body(h, xs):
         lp, lc = xs
         a, new_sc = attn_decode(lp["attn"], cfg, rmsnorm_apply(lp["ln1"], h), lc, cache_len)
         h = h + a
         h = h + cross_attn_apply(lp["xattn"], cfg, rmsnorm_apply(lp["ln_x"], h),
-                                 lc["xk"], lc["xv"])
+                                 lc["xk"], lc["xv"], src_len=src_len)
         h = h + mlp_apply(lp["mlp"], cfg, rmsnorm_apply(lp["ln2"], h))
         return h, {**new_sc, "xk": lc["xk"], "xv": lc["xv"]}
 
     h, new_caches = jax.lax.scan(body, h, (params["decoder"], cache["layers"]))
     logits = embedding_logits(params["embed"], rmsnorm_apply(params["final_norm"], h),
                               backend=cfg.kernel_backend)
-    return logits, {"layers": new_caches, "len": cache_len + 1}
+    out = {"layers": new_caches, "len": cache_len + 1}
+    if src_len is not None:
+        out["src_len"] = src_len
+    return logits, out

@@ -389,13 +389,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return out
 
 
-def lm_prefill(params, cfg: ModelConfig, tokens, *, prefix_embeds=None):
-    """Run the full prompt, return (last_logits, cache)."""
+def last_real_slice(h, lengths, offset: int = 0):
+    """Gather (B,1,D) hidden states at each stream's last real token.
+
+    ``lengths`` (B,) counts real text tokens; ``offset`` shifts for a
+    prepended modality prefix that occupies leading positions."""
+    idx = offset + jnp.asarray(lengths, jnp.int32) - 1
+    return jnp.take_along_axis(h, idx[:, None, None], axis=1)
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+               lengths=None):
+    """Run the full prompt, return (last_logits, cache).
+
+    ``lengths``: per-stream real prompt lengths for ragged (right-padded)
+    batches — logits come from each stream's own last real position and
+    ``cache["len"]`` records the true per-stream lengths, so decode
+    continues every stream correctly, not just the longest one."""
     prefix = cfg.n_prefix_tokens if prefix_embeds is not None else None
     h = _embed_tokens(params, cfg, tokens, prefix_embeds)
     B, S, _ = h.shape
     positions = jnp.arange(S)[None, :]
-    cache: Dict[str, Any] = {"len": jnp.full((B,), S, jnp.int32)}
+    if lengths is None:
+        cache_len = jnp.full((B,), S, jnp.int32)
+    else:
+        cache_len = jnp.asarray(lengths, jnp.int32) + (prefix or 0)
+    cache: Dict[str, Any] = {"len": cache_len}
     if cfg.first_dense:
         pc = {}
         for i in range(cfg.first_dense):
@@ -406,7 +425,9 @@ def lm_prefill(params, cfg: ModelConfig, tokens, *, prefix_embeds=None):
     h, caches, _ = _scan_layers(params, cfg, h, positions, prefix=prefix,
                                 want_cache=True)
     cache["layers"] = caches
-    logits = _readout(params, cfg, h[:, -1:])
+    h_last = (h[:, -1:] if lengths is None
+              else last_real_slice(h, lengths, offset=prefix or 0))
+    logits = _readout(params, cfg, h_last)
     return logits, cache
 
 

@@ -91,8 +91,14 @@ def init_rwkv_state(cfg: ModelConfig, batch: int):
     }
 
 
-def rwkv_prefill(params, cfg: ModelConfig, tokens):
-    """Consume prompt, return (last_logits, state)."""
+def rwkv_prefill(params, cfg: ModelConfig, tokens, *, lengths=None):
+    """Consume prompt, return (last_logits, state).
+
+    ``lengths``: per-stream real prompt lengths — logits are gathered at
+    each stream's last real token. NOTE: the recurrent state still
+    integrates right-padding tokens (there is no position to mask after
+    the fact), so ragged batches should be prefilled per stream at exact
+    length (``runtime.engine`` does this)."""
     h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype).astype(jnp.float32)
     B = h.shape[0]
 
@@ -105,9 +111,13 @@ def rwkv_prefill(params, cfg: ModelConfig, tokens):
         return h, {**ts, **cs}
 
     h, states = jax.lax.scan(body, h, params["layers"])
-    h = rmsnorm_apply(params["final_norm"], h[:, -1:].astype(cfg.dtype))
-    logits = embedding_logits(params["embed"], h, backend=cfg.kernel_backend)
-    return logits, {"layers": states, "len": jnp.full((B,), tokens.shape[1], jnp.int32)}
+    from repro.models.lm import last_real_slice
+    h_last = h[:, -1:] if lengths is None else last_real_slice(h, lengths)
+    h_last = rmsnorm_apply(params["final_norm"], h_last.astype(cfg.dtype))
+    logits = embedding_logits(params["embed"], h_last, backend=cfg.kernel_backend)
+    cache_len = (jnp.full((B,), tokens.shape[1], jnp.int32) if lengths is None
+                 else jnp.asarray(lengths, jnp.int32))
+    return logits, {"layers": states, "len": cache_len}
 
 
 def rwkv_decode_step(params, cfg: ModelConfig, token, state):

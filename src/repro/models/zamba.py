@@ -124,8 +124,15 @@ def init_zamba_cache(cfg: ModelConfig, batch: int, max_len: int):
             "len": jnp.zeros((batch,), jnp.int32)}
 
 
-def zamba_prefill(params, cfg: ModelConfig, tokens, max_len: int):
-    """Run the prompt, return (last_logits, decode cache)."""
+def zamba_prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
+                  lengths=None):
+    """Run the prompt, return (last_logits, decode cache).
+
+    ``lengths``: per-stream real prompt lengths — logits are gathered at
+    each stream's last real token and the attention cache continues per
+    stream. NOTE: the Mamba2 state still integrates right-padding
+    tokens, so ragged batches should be prefilled per stream at exact
+    length (``runtime.engine`` does this)."""
     h = embedding_apply(params["embed"], tokens, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
     B, S, _ = h.shape
     positions = jnp.arange(S)[None, :]
@@ -146,10 +153,13 @@ def zamba_prefill(params, cfg: ModelConfig, tokens, max_len: int):
         return h, {"mamba": mstates, "attn": cache}
 
     h, st = jax.lax.scan(superblock, h, params["mamba_layers"])
-    h = rmsnorm_apply(params["final_norm"], h[:, -1:])
-    logits = embedding_logits(params["embed"], h, backend=cfg.kernel_backend)
-    cache = {"mamba": st["mamba"], "attn": st["attn"],
-             "len": jnp.full((B,), S, jnp.int32)}
+    from repro.models.lm import last_real_slice
+    h_last = h[:, -1:] if lengths is None else last_real_slice(h, lengths)
+    h_last = rmsnorm_apply(params["final_norm"], h_last)
+    logits = embedding_logits(params["embed"], h_last, backend=cfg.kernel_backend)
+    cache_len = (jnp.full((B,), S, jnp.int32) if lengths is None
+                 else jnp.asarray(lengths, jnp.int32))
+    cache = {"mamba": st["mamba"], "attn": st["attn"], "len": cache_len}
     return logits, cache
 
 

@@ -1,0 +1,530 @@
+"""Continuous-batching serving engine over the jit-cached decode path.
+
+A fixed-capacity **slot pool**: every decode step advances all
+``capacity`` slots through one jit-compiled ``decode_step + sample``
+trace (fixed shapes — no retracing as traffic changes), while a FIFO
+admission queue prefills new requests into free slots mid-flight and
+EOS / max-token retirement frees slots immediately. This converts the
+fused LUT-Q kernel win (weight bytes / HBM bandwidth per decode step)
+into *served* throughput on ragged, asynchronous traffic — the decode
+batch stays full instead of lock-stepping on the slowest member of a
+static batch.
+
+Lifecycle per request (see docs/serving.md):
+
+  submit -> [queue] -> admit: requests taken the same step share ONE
+                              batched prefill when exactness allows it
+                              -> adapt_prefill_cache -> cache.at[slot]
+         -> decode: one token per engine step, per-slot position/rng
+         -> retire: EOS or max_new reached; slot freed the same step
+
+Correctness contract: a request's tokens are **identical to a solo
+``generate``** run of the same prompt (the ragged-parity suite pins
+this per family, including ``kernel_backend="fused"``). Admission
+prefills at the request's exact length by default — which is what makes
+this hold for recurrent families (rwkv/zamba) whose state cannot mask
+padding after the fact — and groups compatible requests into one
+batched prefill (attention-only families batch ragged prompts via the
+per-stream ``lengths`` threading in ``models.api.prefill``; recurrent
+and MoE families group by exact length). ``prefill_bucket > 1``
+right-pads admission prompts onto bucket boundaries for attention
+families, closing the jit trace set over ragged lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.runtime.serving import adapt_prefill_cache, prefill_fn
+
+
+def _batch_axes(cfg: ModelConfig, max_len: int, src_len: int):
+    """Per-leaf batch axis of the decode cache, found structurally.
+
+    Stacked layer leaves carry the batch on axis 1 ((L, B, S, ...)),
+    zamba mamba states on axis 2, ``len`` on axis 0 — rather than
+    hard-coding per family, compare the cache shapes at two batch
+    sizes and take the axis that scales."""
+    s1 = jax.eval_shape(lambda: api.init_cache(cfg, 1, max_len, src_len=src_len))
+    s3 = jax.eval_shape(lambda: api.init_cache(cfg, 3, max_len, src_len=src_len))
+    axes = []
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s3)):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diff) != 1:
+            raise ValueError(f"ambiguous batch axis: {a.shape} vs {b.shape}")
+        axes.append(diff[0])
+    return tuple(axes)
+
+
+@functools.lru_cache(maxsize=64)
+def _splice_fn(cfg: ModelConfig, axes: tuple, max_len: int, src_len: int,
+               m: int):
+    """Jit-cached admission splice: adapt a batch=m prefill cache to the
+    decode layout (ring relay, int8-KV quant, length override) and write
+    row i into slot ``slots[i]`` of the pooled cache — one compiled
+    dispatch per admission *group* instead of a trail of small
+    host-driven ops. ``adapt_prefill_cache`` traces (no host sync),
+    which is what makes this composition possible."""
+
+    def splice(pool, prefill_cache, slots, lengths):
+        grp = adapt_prefill_cache(cfg, prefill_cache, m, max_len,
+                                  src_len=src_len, lengths=lengths)
+        leaves_p, treedef = jax.tree.flatten(pool)
+        leaves_g = jax.tree.leaves(grp)
+        out = []
+        for p, g, ax in zip(leaves_p, leaves_g, axes):
+            g = g.astype(p.dtype)
+            for i in range(m):
+                row = jax.lax.dynamic_slice_in_dim(g, i, 1, axis=ax)
+                p = jax.lax.dynamic_update_slice_in_dim(p, row, slots[i],
+                                                        axis=ax)
+            out.append(p)
+        return jax.tree.unflatten(treedef, out)
+
+    return jax.jit(splice)
+
+
+def _sample(logits, keys, temp, greedy: bool):
+    """Per-slot sampling: logits (B,1,V) -> (tok (B,1), new keys).
+
+    Each slot owns an rng chain, so a request's samples depend only on
+    its own key — not on batch composition — which is what makes
+    continuous-batch output reproducible against solo runs."""
+    lg = logits[:, -1].astype(jnp.float32)
+    if greedy:
+        return jnp.argmax(lg, -1)[:, None].astype(jnp.int32), keys
+    split = jax.vmap(jax.random.split)(keys)  # (B, 2, key)
+    sub, new = split[:, 0], split[:, 1]
+    tok = jax.vmap(jax.random.categorical)(sub, lg / jnp.maximum(temp, 1e-6))
+    return tok[:, None].astype(jnp.int32), new
+
+
+@functools.lru_cache(maxsize=64)
+def _sample_fn(greedy: bool):
+    return jax.jit(functools.partial(_sample, greedy=greedy))
+
+
+@functools.lru_cache(maxsize=64)
+def _step_fn(cfg: ModelConfig, greedy: bool):
+    """One fused engine step: decode_step + per-slot sampling."""
+
+    def step(params, tok, cache, keys, temp):
+        logits, cache = api.decode_step(params, cfg, tok, cache)
+        tok, keys = _sample(logits, keys, temp, greedy)
+        return tok, cache, keys
+
+    return jax.jit(step)
+
+
+def synthetic_requests(cfg: ModelConfig, n: int, *, max_prompt: int,
+                       max_new: int, seed: int = 0, src_len: int = 0,
+                       rate: float = 0.0):
+    """Deterministic ragged workload: ``n`` requests with uniform prompt
+    lengths in [max(2, max_prompt//4), max_prompt], uniform max_new in
+    [max(1, max_new//8), max_new] (wide on purpose — real generation
+    lengths are heavy-tailed, which is exactly the straggle a lock-step
+    batch pays for), and (for ``rate > 0``) Poisson arrival offsets at
+    ``rate`` requests/s. Returns a list of kwargs dicts for
+    ``Engine.submit`` plus an ``arrival_s`` field (callers that serve an
+    open queue pop requests as their arrival time passes; batch callers
+    ignore it)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        L = int(rng.integers(max(2, max_prompt // 4), max_prompt + 1))
+        g = int(rng.integers(max(1, max_new // 8), max_new + 1))
+        req: Dict[str, Any] = {
+            "tokens": rng.integers(0, cfg.vocab, size=(L,)).astype(np.int32),
+            "max_new": g,
+            "arrival_s": t,
+        }
+        if cfg.family == "encdec":
+            sl = int(rng.integers(max(2, src_len // 2), src_len + 1))
+            req["frames"] = rng.standard_normal((sl, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            req["prefix_embeds"] = rng.standard_normal(
+                (cfg.n_prefix_tokens, cfg.d_model)).astype(np.float32)
+        reqs.append(req)
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+    return reqs
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                      # (L,) int32 prompt
+    max_new: int
+    eos_id: Optional[int]
+    key: jax.Array
+    frames: Optional[np.ndarray] = None     # encdec source embeddings (S, D)
+    prefix_embeds: Optional[np.ndarray] = None  # vlm prefix (P, D)
+    out: List[int] = dataclasses.field(default_factory=list)
+    pstart: int = 0   # index into the engine's pending-token ring
+    finish: str = ""
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Engine:
+    """Fixed-capacity continuous-batching engine.
+
+    Usage::
+
+        eng = Engine(params, cfg, capacity=8, max_len=128)
+        eng.submit(prompt_tokens, max_new=32, eos_id=2)
+        for result in eng.run(stream=True):
+            ...                      # per-request dict as it retires
+        print(eng.stats())
+
+    ``capacity``: decode slots (the fixed decode batch).
+    ``max_len``: per-slot cache width in text tokens (prompt + new);
+    the vlm modality prefix widens it internally.
+    ``src_len``: cross-attention memory width (encdec only).
+    ``prefill_bucket``: round admission prefills up to a multiple of
+    this to bound jit retraces across ragged prompt lengths (attention
+    families only; recurrent families always prefill exact).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, capacity: int = 8,
+                 max_len: int = 128, src_len: int = 0,
+                 temperature: float = 0.0, rng: Optional[jax.Array] = None,
+                 backend: Optional[str] = None, prefill_bucket: int = 1):
+        if backend is not None:
+            cfg = cfg.replace(kernel_backend=backend)
+        self.cfg = cfg
+        self.params = params
+        self.capacity = int(capacity)
+        self.prefix = cfg.n_prefix_tokens if cfg.family == "vlm" else 0
+        self.max_len = int(max_len) + self.prefix
+        self.src_len = int(src_len)
+        self.temperature = float(temperature)
+        self.greedy = self.temperature <= 0
+        self.prefill_bucket = max(1, int(prefill_bucket))
+        if cfg.family in ("ssm", "hybrid") or cfg.n_experts:
+            # padded prefill corrupts recurrent state, and MoE routing
+            # capacity couples real tokens to padding — always exact
+            self.prefill_bucket = 1
+        self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+        self.cache = api.init_cache(cfg, self.capacity, self.max_len,
+                                    src_len=self.src_len)
+        self._axes = _batch_axes(cfg, self.max_len, self.src_len)
+        self.tok = jnp.zeros((self.capacity, 1), jnp.int32)
+        self.keys = jnp.stack([jax.random.fold_in(self._base_rng, i)
+                               for i in range(self.capacity)])
+        self.slots: List[Optional[Request]] = [None] * self.capacity
+        self.queue: deque = deque()
+        self._pending: List[jax.Array] = []  # un-synced decode tokens
+        self.results: Dict[int, Dict[str, Any]] = {}
+        self._next_rid = 0
+        self.n_decode_steps = 0
+        self.n_admitted = 0
+        self.t_prefill = 0.0
+        self.t_decode = 0.0
+        self._t_start: Optional[float] = None
+
+    # ------------------------------------------------------------- queue
+
+    def submit(self, tokens, *, max_new: int, eos_id: Optional[int] = None,
+               rng: Optional[jax.Array] = None, frames=None,
+               prefix_embeds=None) -> int:
+        """Enqueue one request; returns its rid (FIFO admission order).
+
+        ``rng``: per-request sampling key (defaults to
+        ``fold_in(engine_rng, rid)``). ``generate`` gives its stream i
+        the key ``fold_in(generate_rng, i)``, so to reproduce a
+        temperature>0 stream against a solo ``generate(..., rng=K)``
+        run, submit with ``rng=jax.random.fold_in(K, 0)``.
+        """
+        prompt = np.asarray(jax.device_get(tokens), np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) + int(max_new) + self.prefix > self.max_len:
+            raise ValueError(
+                f"prompt {len(prompt)} + max_new {max_new} exceeds engine "
+                f"max_len {self.max_len - self.prefix}")
+        if self.cfg.family == "encdec":
+            if frames is None:
+                raise ValueError("encdec requests need `frames`")
+            if frames.shape[0] > self.src_len:
+                raise ValueError(
+                    f"frames {frames.shape[0]} exceed engine src_len "
+                    f"{self.src_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        key = rng if rng is not None else jax.random.fold_in(self._base_rng, rid)
+        req = Request(rid, prompt, int(max_new), eos_id, key,
+                      frames=frames, prefix_embeds=prefix_embeds,
+                      t_submit=time.perf_counter())
+        self.queue.append(req)
+        return rid
+
+    # --------------------------------------------------------- admission
+
+    def _group_key(self, req: Request):
+        """Requests admitted in the same step share one batched prefill
+        when exactness allows it: attention-only families batch ragged
+        prompts freely (per-stream ``lengths`` keeps them exact);
+        recurrent state and MoE routing are batch-coupled under padding,
+        so those group by exact prompt length; encdec additionally needs
+        equal source widths (the encoder is bidirectional — padded
+        frames would corrupt real positions)."""
+        if self.cfg.family in ("ssm", "hybrid") or self.cfg.n_experts:
+            return ("exact", len(req.tokens))
+        if self.cfg.family == "encdec":
+            return ("src", req.frames.shape[0])
+        # text-only and prefixed vlm requests occupy different cache
+        # layouts — never share a prefill
+        return ("any", req.prefix_embeds is not None)
+
+    def _admit_group(self, slots: List[int], reqs: List[Request]):
+        """Prefill a group of compatible requests with ONE batched call
+        and splice each row into its slot."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        m = len(reqs)
+        Ls = [len(r.tokens) for r in reqs]
+        Lb = -(-max(Ls) // self.prefill_bucket) * self.prefill_bucket
+        toks = np.zeros((m, Lb), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :Ls[i]] = r.tokens
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.stack([jnp.asarray(r.frames) for r in reqs])
+        # a modality prefix occupies cache slots only when it is really
+        # present (text-only vlm requests prefill without one, and the
+        # group key keeps the two kinds apart)
+        pfx = 0
+        if reqs[0].prefix_embeds is not None:
+            batch["prefix_embeds"] = jnp.stack(
+                [jnp.asarray(r.prefix_embeds) for r in reqs])
+            pfx = self.prefix
+        lengths = jnp.asarray(Ls, jnp.int32)
+        slots_j = jnp.asarray(slots, jnp.int32)
+
+        logits, cache = prefill_fn(cfg, self.max_len)(self.params, batch,
+                                                      lengths)
+        # prefill wants *text* lengths (its logit gather offsets the vlm
+        # prefix itself); the decode cache's `len` counts cache slots,
+        # which include any prefix positions
+        self.cache = _splice_fn(cfg, self._axes, self.max_len, self.src_len,
+                                m)(self.cache, cache, slots_j,
+                                   lengths + pfx)
+        keys = jnp.stack([r.key for r in reqs])
+        tok1, keys1 = _sample_fn(self.greedy)(logits, keys,
+                                              jnp.float32(self.temperature))
+        self.tok = self.tok.at[slots_j].set(tok1)
+        self.keys = self.keys.at[slots_j].set(keys1)
+        firsts = np.asarray(jax.device_get(tok1[:, 0]))  # one sync per group
+
+        now = time.perf_counter()
+        for i, (slot, req) in enumerate(zip(slots, reqs)):
+            req.t_admit = t0
+            req.t_first = now
+            req.out = [int(firsts[i])]
+            req.pstart = len(self._pending)  # earlier pending rows belong
+            self.slots[slot] = req           # to the slot's prior occupant
+            self.n_admitted += 1
+            self._maybe_retire(slot)
+        self.t_prefill += now - t0
+
+    def _maybe_retire(self, slot: int):
+        req = self.slots[slot]
+        done_eos = req.eos_id is not None and req.out[-1] == req.eos_id
+        done_len = len(req.out) >= req.max_new
+        if not (done_eos or done_len):
+            return
+        req.finish = "eos" if done_eos else "length"
+        req.t_done = time.perf_counter()
+        self.slots[slot] = None
+        # pin the freed slot's position and token so its dead-slot
+        # decode writes stay inside the slot (and stay deterministic)
+        # until the next admission overwrites it
+        self.cache = dict(self.cache)
+        self.cache["len"] = self.cache["len"].at[slot].set(0)
+        self.tok = self.tok.at[slot].set(0)
+        self.results[req.rid] = {
+            "rid": req.rid,
+            "tokens": np.asarray(req.out, np.int32),
+            "prompt_len": len(req.tokens),
+            "n_new": len(req.out),
+            "finish": req.finish,
+            "t_queue_s": req.t_admit - req.t_submit,
+            "t_first_token_s": req.t_first - req.t_submit,
+            "t_total_s": req.t_done - req.t_submit,
+        }
+
+    # ------------------------------------------------------ static batch
+
+    def preload(self, batch: Dict[str, jax.Array], steps: int, *,
+                lengths=None, eos_id: Optional[int] = None):
+        """Admit a whole padded batch with ONE batched prefill.
+
+        The static-batch fast path used by ``serving.generate``: the
+        engine must be idle and ``batch["tokens"]`` must have exactly
+        ``capacity`` rows. ``lengths`` carries per-stream real prompt
+        lengths for ragged batches (attention families; see
+        ``api.prefill``). Slot i samples with ``fold_in(engine_rng, i)``
+        — the same key a solo ``submit`` of that request would get.
+        """
+        if self.queue or any(s is not None for s in self.slots):
+            raise RuntimeError("preload requires an idle engine")
+        toks = batch["tokens"]
+        B, P = toks.shape
+        if B != self.capacity:
+            raise ValueError(f"batch {B} != capacity {self.capacity}")
+        t0 = time.perf_counter()
+        lengths_j = (jnp.full((B,), P, jnp.int32) if lengths is None
+                     else jnp.asarray(lengths, jnp.int32))
+        pf = prefill_fn(self.cfg, self.max_len)
+        if lengths is None:
+            logits, cache = pf(self.params, batch)
+        else:
+            logits, cache = pf(self.params, batch, lengths_j)
+        pfx = self.prefix if "prefix_embeds" in batch else 0
+        self.cache = adapt_prefill_cache(
+            self.cfg, cache, B, self.max_len, src_len=self.src_len,
+            lengths=lengths_j + pfx)
+        tok1, keys = _sample_fn(self.greedy)(logits, self.keys,
+                                             jnp.float32(self.temperature))
+        self.tok, self.keys = tok1, keys
+        firsts = np.asarray(jax.device_get(tok1[:, 0]))
+        self.t_prefill += time.perf_counter() - t0
+
+        now = time.perf_counter()
+        lens_h = np.asarray(jax.device_get(lengths_j))
+        toks_h = np.asarray(jax.device_get(toks), np.int32)
+        for i in range(B):
+            req = Request(self._next_rid, toks_h[i, :int(lens_h[i])],
+                          int(steps), eos_id, self.keys[i],
+                          t_submit=t0)
+            self._next_rid += 1
+            req.t_admit = t0
+            req.t_first = now
+            req.out = [int(firsts[i])]
+            self.slots[i] = req
+            self.n_admitted += 1
+            self._maybe_retire(i)
+
+    # -------------------------------------------------------------- loop
+
+    def _materialize(self):
+        """Pull all pending decode tokens to the host in one sync and
+        run the retirement checks they unlock."""
+        if not self._pending:
+            return
+        vals = np.asarray(jax.device_get(jnp.stack(self._pending)))  # (k, B)
+        k = len(self._pending)
+        self._pending = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            for j in range(req.pstart, k):
+                req.out.append(int(vals[j, slot]))
+            req.pstart = 0
+        for slot in range(self.capacity):
+            if self.slots[slot] is not None:
+                self._maybe_retire(slot)
+
+    def step(self) -> List[Dict[str, Any]]:
+        """One engine iteration: admit into free slots, then advance all
+        slots one decode step. Returns the requests retired this step.
+
+        Sampled tokens stay on the device as pending handles — dispatch
+        runs ahead of the host — and are materialized in ONE sync only
+        when a retirement decision needs their values: every step while
+        a live request carries an ``eos_id`` (the decision depends on
+        the token), otherwise only on the host-predictable step where
+        some request reaches ``max_new``. The static ``generate`` path
+        (no EOS) therefore syncs once per run, like the loop it
+        replaced; admission stays per-step responsive because it needs
+        a free slot, not token values."""
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        before = set(self.results)
+        if self.queue and None in self.slots:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            take = [self.queue.popleft()
+                    for _ in range(min(len(free), len(self.queue)))]
+            groups: Dict[Any, List[Request]] = {}
+            for req in take:
+                groups.setdefault(self._group_key(req), []).append(req)
+            for reqs in groups.values():
+                slots, free = free[:len(reqs)], free[len(reqs):]
+                self._admit_group(slots, reqs)
+        active = [r for r in self.slots if r is not None]
+        if active:
+            t0 = time.perf_counter()
+            self.tok, self.cache, self.keys = _step_fn(self.cfg, self.greedy)(
+                self.params, self.tok, self.cache, self.keys,
+                jnp.float32(self.temperature))
+            self._pending.append(self.tok[:, 0])
+            n_pend = len(self._pending)
+            if (any(r.eos_id is not None for r in active)
+                    or any(len(r.out) + n_pend - r.pstart >= r.max_new
+                           for r in active)):
+                self._materialize()
+            self.t_decode += time.perf_counter() - t0
+            self.n_decode_steps += 1
+        return [self.results[r] for r in sorted(set(self.results) - before)]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
+
+    def run(self, stream: bool = False):
+        """Drive the engine until every request retires.
+
+        ``stream=True`` yields per-request result dicts as they finish;
+        otherwise returns the full list ordered by rid."""
+
+        def _gen():
+            while not self.idle:
+                for res in self.step():
+                    yield res
+
+        if stream:
+            return _gen()
+        for _ in _gen():
+            pass
+        return [self.results[rid] for rid in sorted(self.results)]
+
+    # ------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, Any]:
+        done = list(self.results.values())
+        new_toks = sum(r["n_new"] for r in done)
+        # first tokens come from prefill; decode produced the rest
+        decoded = sum(max(r["n_new"] - 1, 0) for r in done)
+        lat = sorted(r["t_total_s"] for r in done) or [0.0]
+        wall = ((time.perf_counter() - self._t_start)
+                if self._t_start is not None else 0.0)
+        return {
+            "capacity": self.capacity,
+            "max_len": self.max_len,
+            "backend": self.cfg.kernel_backend,
+            "admitted": self.n_admitted,
+            "completed": len(done),
+            "decode_steps": self.n_decode_steps,
+            "new_tokens": new_toks,
+            "t_prefill_s": self.t_prefill,
+            "t_decode_s": self.t_decode,
+            "wall_s": wall,
+            "decode_tok_s": decoded / max(self.t_decode, 1e-9),
+            "goodput_tok_s": new_toks / max(wall, 1e-9),
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+        }

@@ -8,12 +8,14 @@ Bridges ``prefill`` (which returns caches sized to the prompt) and
   * ``decode_fn`` / ``prefill_fn``: jit-cached entry points keyed on
     the (hashable) ModelConfig, shared by the library loop and the
     serving CLI so both reuse one trace per config;
-  * ``generate``: batched greedy/temperature generation loop.
+  * ``generate``: static-batch generation — a thin wrapper over the
+    continuous-batching slot pool in ``runtime.engine`` (one batched
+    prefill, then the engine's decode/retire loop), with per-stream
+    ``lengths`` support for ragged right-padded batches.
 """
 from __future__ import annotations
 
 import functools
-import time
 from typing import Dict, Optional
 
 import jax
@@ -23,18 +25,27 @@ from repro.models import api
 from repro.models.config import ModelConfig
 
 
-def ring_from_linear(lin: jax.Array, prompt_len: int, window: int) -> jax.Array:
+def ring_from_linear(lin: jax.Array, prompt_len, window: int) -> jax.Array:
     """lin: (B, S_prompt, ...) linear cache -> (B, window, ...) ring.
 
     Position p lands in slot p % window; only the last `window`
     positions survive (they are the only live ones under SWA).
+    ``prompt_len`` may be a python int, a scalar, or a per-stream (B,)
+    vector — ragged batches relay each stream at its own length. The
+    relay is a pure gather (slot s reads position
+    ``s + window * floor((len-1-s)/window)``), so it traces without a
+    host sync and vmaps over stacked layers.
     """
     B, S = lin.shape[:2]
-    keep = lin[:, max(0, prompt_len - window):prompt_len]
-    k = keep.shape[1]
-    positions = jnp.arange(prompt_len - k, prompt_len) % window
-    out = jnp.zeros((B, window) + lin.shape[2:], lin.dtype)
-    return out.at[:, positions].set(keep)
+    L = jnp.broadcast_to(jnp.asarray(prompt_len, jnp.int32).reshape(-1),
+                         (B,))[:, None]                       # (B, 1)
+    s = jnp.arange(window, dtype=jnp.int32)[None, :]          # (1, W)
+    p = s + window * ((L - 1 - s) // window)   # slot's live position
+    valid = p >= 0                             # slot empty when len < window
+    idx = jnp.clip(p, 0, S - 1).reshape((B, window) + (1,) * (lin.ndim - 2))
+    gathered = jnp.take_along_axis(lin, idx, axis=1)
+    mask = valid.reshape((B, window) + (1,) * (lin.ndim - 2))
+    return jnp.where(mask, gathered, jnp.zeros((), lin.dtype))
 
 
 def grow_cache(cache_small, cache_big):
@@ -51,19 +62,50 @@ def grow_cache(cache_small, cache_big):
 
 
 def adapt_prefill_cache(cfg: ModelConfig, cache, batch: int, max_len: int,
-                        *, src_len: int = 0):
-    """Convert a prefill cache into a decode-ready cache of max_len."""
-    target = api.init_cache(cfg, batch, max_len, src_len=src_len)
-    prompt_len = int(cache["len"][0]) if hasattr(cache["len"], "shape") else cache["len"]
+                        *, src_len: int = 0, lengths=None):
+    """Convert a prefill cache into a decode-ready cache of max_len.
 
-    if cfg.family in ("dense", "moe", "vlm") and cfg.window is not None \
-            and not cfg.use_mla:
-        # SWA ring: re-lay k/v at the decode cache's ring width
+    ``lengths``: optional per-stream (B,) prompt lengths for ragged
+    (right-padded) batches. Defaults to the prefill cache's own ``len``
+    vector — never ``len[0]`` broadcast to the batch, and never forced
+    to the host: the whole adaptation traces, so it can run inside jit
+    (the engine's admission path relies on this).
+    """
+    target = api.init_cache(cfg, batch, max_len, src_len=src_len)
+    if lengths is None:
+        lengths = cache["len"]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (batch,))
+    cache = dict(cache)
+    cache["len"] = lengths
+
+    attn_kv = cfg.family in ("dense", "moe", "vlm") and not cfg.use_mla
+    if attn_kv and cfg.kv_cache_bits == 8:
+        # prefill emits float K/V; the decode cache holds int8 + scales
+        # (§Perf cell C), so quantize on adaptation.
+        from repro.models.lm import _kv_quant
+
+        def quant_kv(layers):
+            layers = dict(layers)
+            for key in ("k", "v"):
+                q, s = _kv_quant(layers[key], 8)
+                layers[key], layers[f"{key}_scale"] = q, s
+            return layers
+
+        cache["layers"] = quant_kv(cache["layers"])
+        if "prefix_layers" in cache:
+            cache["prefix_layers"] = {k: quant_kv(v)
+                                      for k, v in cache["prefix_layers"].items()}
+
+    if attn_kv and cfg.window is not None:
+        # SWA ring: re-lay per-position leaves at the decode ring width,
+        # each stream at its own length
         layers = dict(cache["layers"])
-        for key in ("k", "v"):
-            lin = cache["layers"][key]  # (L, B, S, H, dh)
+        keys = [k for k in ("k", "v", "k_scale", "v_scale") if k in layers]
+        for key in keys:
+            lin = layers[key]  # (L, B, S, ...)
             eff = target["layers"][key].shape[2]
-            ring = jax.vmap(lambda x: ring_from_linear(x, prompt_len, eff))(lin)
+            ring = jax.vmap(lambda x: ring_from_linear(x, lengths, eff))(lin)
             layers[key] = ring.astype(target["layers"][key].dtype)
         out = dict(cache)
         out["layers"] = layers
@@ -75,8 +117,8 @@ def _decode_step(cfg: ModelConfig, params, token, cache):
     return api.decode_step(params, cfg, token, cache)
 
 
-def _prefill(cfg: ModelConfig, max_len: int, params, batch):
-    return api.prefill(params, cfg, batch, max_len=max_len)
+def _prefill(cfg: ModelConfig, max_len: int, params, batch, lengths=None):
+    return api.prefill(params, cfg, batch, max_len=max_len, lengths=lengths)
 
 
 @functools.lru_cache(maxsize=64)
@@ -102,13 +144,31 @@ def generate(
     batch: Dict[str, jax.Array],
     *,
     steps: int,
+    lengths=None,
     max_len: Optional[int] = None,
     temperature: float = 0.0,
     rng: Optional[jax.Array] = None,
     backend: Optional[str] = None,
+    eos_id: Optional[int] = None,
     return_stats: bool = False,
 ):
     """Prefill the prompt then decode `steps` tokens. Returns (B, steps).
+
+    A thin static-batch wrapper over ``runtime.engine.Engine``: the
+    whole batch is preloaded into a capacity-B slot pool with one
+    batched prefill, then decoded by the engine's slot loop. This keeps
+    one code path for sampling, retirement and stats between static and
+    continuous batching.
+
+    ``lengths``: per-stream prompt lengths for ragged (right-padded)
+    batches. Each stream's first token is sampled from the logits at its
+    own last *real* position and its cache continues from its own
+    length. For recurrent families (ssm/hybrid) a padded prefill would
+    corrupt the state, so ragged batches are prefilled per stream at
+    exact length through the engine's admission path instead.
+
+    ``eos_id``: optional early stop per stream; retired streams are
+    right-padded with ``eos_id`` so the result stays (B, steps).
 
     ``backend``: optional kernel-backend override (auto | decode | fused
     | packed4) applied as ``cfg.replace(kernel_backend=...)``, so serve
@@ -117,50 +177,48 @@ def generate(
     "backend"} measured around the jit-cached entry points (the same
     ones the CLI times, so library and CLI numbers agree).
     """
-    if backend is not None:
-        cfg = cfg.replace(kernel_backend=backend)
+    import numpy as np
+
+    from repro.runtime.engine import Engine
+
     toks = batch["tokens"]
     B, P = toks.shape
-    # max_len counts text tokens; prepended modality embeddings (vlm)
-    # occupy cache slots too, so widen the decode cache by the prefix.
-    prefix = cfg.n_prefix_tokens if "prefix_embeds" in batch else 0
-    max_len = (max_len or (P + steps)) + prefix
+    if lengths is not None:
+        lengths = np.broadcast_to(
+            np.asarray(jax.device_get(lengths), np.int32).reshape(-1), (B,))
+    eng = Engine(
+        params, cfg, capacity=B, max_len=max_len or (P + steps),
+        src_len=batch["frames"].shape[1] if cfg.family == "encdec" else 0,
+        temperature=temperature, rng=rng, backend=backend)
 
-    t0 = time.perf_counter()
-    logits, cache = prefill_fn(cfg, max_len)(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    cache = adapt_prefill_cache(
-        cfg, cache, B, max_len,
-        src_len=batch["frames"].shape[1] if cfg.family == "encdec" else 0)
+    # recurrent state has no positions to mask and MoE expert capacity
+    # couples real tokens to padding, so ANY padding (ragged or
+    # uniformly short-of-P) corrupts those families — prefill each
+    # stream at its exact length through the admission path instead
+    padded = lengths is not None and (int(lengths.min()) != int(lengths.max())
+                                      or int(lengths.max()) != P)
+    if padded and (cfg.family in ("ssm", "hybrid") or cfg.n_experts):
+        toks_h = np.asarray(jax.device_get(toks), np.int32)
+        for i in range(B):
+            eng.submit(toks_h[i, :int(lengths[i])], max_new=steps,
+                       eos_id=eos_id)
+        results = eng.run()
+    else:
+        eng.preload(batch, steps, lengths=lengths, eos_id=eos_id)
+        results = eng.run()
 
-    decode = decode_fn(cfg)
-
-    def sample(lg, key):
-        lg = lg[:, -1].astype(jnp.float32)
-        if temperature <= 0:
-            return jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
-        return jax.random.categorical(key, lg / temperature)[:, None].astype(jnp.int32)
-
-    key = rng if rng is not None else jax.random.PRNGKey(0)
-    key, sub = jax.random.split(key)
-    tok = sample(logits, sub)
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(steps - 1):
-        logits, cache = decode(params, tok, cache)
-        key, sub = jax.random.split(key)
-        tok = sample(logits, sub)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    gen = jnp.concatenate(out, axis=1)
+    pad = 0 if eos_id is None else eos_id
+    gen = np.full((B, steps), pad, np.int32)
+    for r in results:
+        t = r["tokens"]
+        gen[r["rid"], :len(t)] = t
+    gen = jnp.asarray(gen)
     if return_stats:
-        stats = {
-            "t_prefill_s": t_prefill,
-            "t_decode_s": t_decode,
-            "decode_tok_s": B * max(steps - 1, 0) / max(t_decode, 1e-9),
-            "backend": cfg.kernel_backend,
+        stats = eng.stats()
+        return gen, {
+            "t_prefill_s": stats["t_prefill_s"],
+            "t_decode_s": stats["t_decode_s"],
+            "decode_tok_s": stats["decode_tok_s"],
+            "backend": cfg.kernel_backend if backend is None else backend,
         }
-        return gen, stats
     return gen

@@ -54,6 +54,7 @@ def test_all_archs_registered():
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_train_step_smoke(arch):
     cfg = reduced(get_config(arch)).replace(quant=None, act_bits=32)
     params, axes = api.init(jax.random.PRNGKey(0), cfg)
@@ -68,6 +69,7 @@ def test_train_step_smoke(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_quantized_train_step_smoke(arch):
     """LUT-Q applied (or explicitly inapplicable-free) for every arch."""
     cfg = reduced(get_config(arch)).replace(

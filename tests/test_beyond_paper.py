@@ -4,6 +4,7 @@ quantization (paper §4)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.actquant import learned_clip_fake_quant
 from repro.core.distill import kd_loss, make_distill_loss
@@ -29,6 +30,7 @@ class TestDistill:
         far = l1 + 2.0 * jax.random.normal(jax.random.PRNGKey(2), l1.shape)
         assert 0 < float(kd_loss(near, l1)) < float(kd_loss(far, l1))
 
+    @pytest.mark.slow
     def test_distilled_lutq_student_trains(self):
         """2-bit student distilling from an fp32 teacher: loss decreases
         and teacher receives no gradient."""

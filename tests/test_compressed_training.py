@@ -3,6 +3,7 @@ LUT-Q train loop — convergence must track the uncompressed run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.policy import merge_trainable, split_trainable
@@ -52,6 +53,7 @@ def _train(compress: bool, steps=40, seed=0):
 
 
 class TestCompressedTraining:
+    @pytest.mark.slow
     def test_ef_int8_converges_like_fp(self):
         base = _train(False)
         comp = _train(True)

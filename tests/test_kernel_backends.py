@@ -228,6 +228,7 @@ class TestServeDispatch:
         np.testing.assert_allclose(outs["fused"], outs["decode"],
                                    rtol=2e-3, atol=2e-3)
 
+    @pytest.mark.slow
     def test_packed4_serve_tree_matches_decode(self):
         from repro.configs import get_config
         from repro.models import api
@@ -246,6 +247,7 @@ class TestServeDispatch:
         np.testing.assert_allclose(outs["auto"], outs["decode"],
                                    rtol=2e-3, atol=2e-3)
 
+    @pytest.mark.slow
     def test_no_dense_materialize_on_fused_path(self, monkeypatch):
         """Acceptance: in serve mode with the fused backend, no matmul
         leaf decodes a dense weight matrix — only gather-style uses

@@ -94,6 +94,7 @@ with tempfile.TemporaryDirectory() as td:
 
 
 class TestDryrunCell:
+    @pytest.mark.slow
     def test_one_cell_on_512_devices(self):
         """Full lower+compile of one cell on the 2x16x16 mesh, in a
         subprocess so the 512-device XLA flag doesn't leak here."""

@@ -142,6 +142,7 @@ class TestServeView:
 
 
 class TestKV8:
+    @pytest.mark.slow
     def test_decode_parity_within_tolerance(self):
         from repro.configs import get_config
         from repro.models import api

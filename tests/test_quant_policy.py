@@ -202,6 +202,7 @@ class TestMixedPolicyEndToEnd:
         back = merge_trainable(t, s)
         assert set(np.asarray(back["layers"]["attn"]["q"]["kernel"].sid).tolist()) == {2}
 
+    @pytest.mark.slow
     def test_train_ckpt_restore_serve_roundtrip(self, tmp_path):
         """The acceptance-criteria path: mixed quantize -> train step
         (per-leaf refresh) -> checkpoint save/restore (policy included)

@@ -26,7 +26,33 @@ class TestRingConversion:
         ring = ring_from_linear(lin, prompt_len=3, window=4)
         np.testing.assert_array_equal(np.asarray(ring[0, :3, 0]), [0, 1, 2])
 
+    def test_per_stream_lengths(self):
+        """Ragged batches relay each stream at its own length — the
+        ISSUE-3 bug was collapsing every stream to len[0]."""
+        B, S, D, W = 3, 10, 2, 4
+        lin = jnp.arange(B * S * D, dtype=jnp.float32).reshape(B, S, D)
+        ring = ring_from_linear(lin, jnp.array([10, 3, 6]), W)
+        # stream 0: positions 6..9 in slots 2,3,0,1
+        np.testing.assert_array_equal(np.asarray(ring[0, 0]), np.asarray(lin[0, 8]))
+        np.testing.assert_array_equal(np.asarray(ring[0, 2]), np.asarray(lin[0, 6]))
+        # stream 1: only 3 live positions, slot 3 empty
+        np.testing.assert_array_equal(np.asarray(ring[1, :3]), np.asarray(lin[1, :3]))
+        assert (np.asarray(ring[1, 3]) == 0).all()
+        # stream 2: positions 2..5 in slots 2,3,0,1
+        np.testing.assert_array_equal(np.asarray(ring[2, 0]), np.asarray(lin[2, 4]))
+        np.testing.assert_array_equal(np.asarray(ring[2, 3]), np.asarray(lin[2, 3]))
 
+    def test_traces_without_host_sync(self):
+        """The relay must run under jit (the engine's admission splice
+        composes it) — a host sync inside would fail tracing."""
+        lin = jnp.arange(16, dtype=jnp.float32).reshape(1, 8, 2)
+        out = jax.jit(lambda x, n: ring_from_linear(x, n, 4))(
+            lin, jnp.array([5]))
+        np.testing.assert_array_equal(
+            np.asarray(out[0, 0]), np.asarray(lin[0, 4]))
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "mistral-nemo-12b",
                                   "rwkv6-1.6b", "zamba2-2.7b",
                                   "deepseek-v2-lite-16b"])
@@ -51,3 +77,50 @@ def test_generate_continues_prefill_exactly(arch):
         cur = jnp.concatenate([cur, nxt], axis=1)
     want = jnp.concatenate(want, axis=1)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("arch", [
+    "h2o-danube-1.8b",                                     # SWA ring relay
+    "mistral-nemo-12b",                                    # dense, no window
+    pytest.param("deepseek-v2-lite-16b",                   # MLA + MoE (routed
+                 marks=pytest.mark.slow)])                 # via admission)
+def test_generate_ragged_batch_matches_solo(arch):
+    """ISSUE-3 bugfix: a right-padded mixed-length batch must decode
+    every stream from its own last real token — before the fix, logits
+    came from `logits[:, -1]` (padding) and the SWA ring was laid out
+    with `len[0]` for all streams."""
+    cfg = reduced(get_config(arch)).replace(quant=None, act_bits=32,
+                                            remat=False)
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    P, G = 12, 4
+    lens = [7, 12, 4]
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (3, P),
+                                         0, cfg.vocab), np.int32)
+    padded = np.zeros((3, P), np.int32)
+    for i, L in enumerate(lens):
+        padded[i, :L] = toks[i, :L]
+    rag = np.asarray(generate(params, cfg, {"tokens": jnp.asarray(padded)},
+                              steps=G, lengths=lens, max_len=P + G))
+    for i, L in enumerate(lens):
+        solo = np.asarray(generate(
+            params, cfg, {"tokens": jnp.asarray(toks[i:i + 1, :L])},
+            steps=G, max_len=P + G))[0]
+        np.testing.assert_array_equal(rag[i], solo,
+                                      err_msg=f"{arch} stream {i} (len {L})")
+
+
+def test_adapt_prefill_cache_quantizes_int8_kv():
+    """kv_cache_bits=8 through the real prefill path: adaptation must
+    emit int8 K/V + scales matching the decode cache structure (it used
+    to crash on a tree-structure mismatch)."""
+    cfg = reduced(get_config("h2o-danube-1.8b")).replace(
+        quant=None, act_bits=32, remat=False, kv_cache_bits=8)
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    _, cache = api.prefill(params, cfg, {"tokens": toks})
+    adapted = adapt_prefill_cache(cfg, cache, 2, 16)
+    assert adapted["layers"]["k"].dtype == jnp.int8
+    assert "k_scale" in adapted["layers"]
+    gen = np.asarray(generate(params, cfg, {"tokens": toks}, steps=5,
+                              max_len=16))
+    assert gen.shape == (2, 5) and (gen >= 0).all() and (gen < cfg.vocab).all()

@@ -9,6 +9,7 @@ just at init.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
@@ -37,6 +38,7 @@ def _train_some(arch, spec, steps=5, seed=0):
     return merge_trainable(state["trainable"], state["static"])
 
 
+@pytest.mark.slow
 class TestMultiplierLessInvariant:
     def test_at_most_K_distinct_values_after_training(self):
         spec = QuantSpec(bits=2, min_size=512)
