@@ -1,0 +1,109 @@
+"""Sharded-serving benchmark: 1 vs 8 virtual host devices.
+
+Forces an 8-way host platform (like ``launch/dryrun.py``), builds one
+reduced arch in the LUT-Q deployment form, and serves the same static
+batch twice: on a trivial 1x1 mesh and on the 2x4 ("data", "model")
+mesh. Emits ``BENCH_shard.json`` at the repo root:
+
+  * per-device weight bytes (quantized + dense split) — the tensor-
+    parallel memory win this PR is about: index shards divide by the
+    model axis while the dictionaries replicate for free;
+  * decode ms/token + prefill ms per mesh — on virtual CPU devices the
+    sharded path pays collective-emulation overhead, so wall-clock is a
+    structural record, not a speedup claim (the memory column is the
+    claim; real-TPU timing is a deploy step);
+  * a token-parity bit so the benchmark doubles as a smoke check.
+
+Run: python benchmarks/shard_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.spec import QuantSpec  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.launch.serve import device_footprint  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.models.reduce import reduced  # noqa: E402
+from repro.runtime.serving import generate  # noqa: E402
+
+
+def bench(arch: str, *, quick: bool = False, backend: str = "fused"):
+    cfg = reduced(get_config(arch)).replace(
+        quant=QuantSpec(bits=4, min_size=1024), act_bits=8,
+        kernel_backend=backend)
+
+    B, Pl = (4, 16) if quick else (8, 32)
+    steps = 8 if quick else 24
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, Pl), 0,
+                                          cfg.vocab)}
+
+    rec = {"arch": arch, "backend": backend, "batch": B, "prompt": Pl,
+           "steps": steps, "devices": len(jax.devices()), "meshes": {}}
+    outputs = {}
+    for name, (d, m) in {"1x1": (1, 1), "2x4": (2, 4)}.items():
+        mesh = make_host_mesh(d, m)
+        placed, _ = api.serve_state(jax.random.PRNGKey(0), cfg, mesh=mesh)
+        # warm the jit caches, then time a fresh run
+        generate(placed, cfg, batch, steps=2, mesh=mesh)
+        t0 = time.perf_counter()
+        toks, stats = generate(placed, cfg, batch, steps=steps, mesh=mesh,
+                               return_stats=True)
+        wall = time.perf_counter() - t0
+        outputs[name] = jax.device_get(toks)
+        qb, fb = device_footprint(placed, mesh.devices.flat[0])
+        rec["meshes"][name] = {
+            "mesh": f"{d}x{m}",
+            "per_device_quantized_bytes": qb,
+            "per_device_dense_bytes": fb,
+            "decode_ms_per_token": 1e3 * stats["t_decode_s"] / max(steps - 1, 1),
+            "prefill_ms": 1e3 * stats["t_prefill_s"],
+            "wall_s": wall,
+        }
+        print(f"[shard_bench] {arch} mesh {d}x{m}: "
+              f"{qb/2**10:.1f} KiB quantized/device, "
+              f"{rec['meshes'][name]['decode_ms_per_token']:.2f} ms/tok")
+    rec["token_identical"] = bool((outputs["1x1"] == outputs["2x4"]).all())
+    rec["per_device_bytes_ratio"] = (
+        rec["meshes"]["2x4"]["per_device_quantized_bytes"]
+        / max(rec["meshes"]["1x1"]["per_device_quantized_bytes"], 1))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b")
+    ap.add_argument("--backend", default="fused")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_shard.json"))
+    args = ap.parse_args(argv)
+
+    if len(jax.devices()) < 8:
+        print("[shard_bench] fewer than 8 devices visible — was jax "
+              "imported before XLA_FLAGS was set?", file=sys.stderr)
+        return 1
+    rec = bench(args.arch, quick=args.quick, backend=args.backend)
+    Path(args.out).write_text(json.dumps(rec, indent=1))
+    print(f"[shard_bench] token_identical={rec['token_identical']} "
+          f"per-device bytes ratio {rec['per_device_bytes_ratio']:.2f} "
+          f"-> {args.out}")
+    return 0 if rec["token_identical"] else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -76,12 +76,17 @@ def _unflatten(items: Dict[str, Any]):
 
 
 def save(tree, directory: str, step: int, *, keep_n: int = 3,
-         policy: Optional[QuantPolicy] = None) -> str:
+         policy: Optional[QuantPolicy] = None, mesh=None) -> str:
     """Synchronous checkpoint write. Returns the final path.
 
     ``policy``: the QuantPolicy governing any LutqState leaves; stored
     in the manifest so a restore can rebuild the exact per-leaf spec
     mapping (see :func:`load_policy`).
+
+    ``mesh``: the device mesh the tree was sharded under when saved;
+    recorded in the manifest (axis names + sizes) so a restore job can
+    tell whether it is re-sharding onto a different topology (elastic
+    restore) or resuming in place. See :func:`load_mesh`.
     """
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
@@ -94,6 +99,11 @@ def save(tree, directory: str, step: int, *, keep_n: int = 3,
     manifest = {"step": step, "leaves": []}
     if policy is not None:
         manifest["quant_policy"] = policy.to_json_dict()
+    if mesh is not None:
+        manifest["mesh"] = {
+            "axes": list(mesh.axis_names),
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        }
     for i, (key, val) in enumerate(items):
         entry = {"key": key, "file": None}
         if val is not None:
@@ -120,10 +130,11 @@ class AsyncCheckpointer:
     """Snapshot-to-host synchronously, write on a background thread."""
 
     def __init__(self, directory: str, keep_n: int = 3,
-                 policy: Optional[QuantPolicy] = None):
+                 policy: Optional[QuantPolicy] = None, mesh=None):
         self.directory = directory
         self.keep_n = keep_n
         self.policy = policy
+        self.mesh = mesh
         self._thread: Optional[threading.Thread] = None
         self.last_path: Optional[str] = None
 
@@ -135,7 +146,8 @@ class AsyncCheckpointer:
 
         def _write():
             self.last_path = save(host_tree, self.directory, step,
-                                  keep_n=self.keep_n, policy=self.policy)
+                                  keep_n=self.keep_n, policy=self.policy,
+                                  mesh=self.mesh)
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -155,39 +167,72 @@ def latest_step(directory: str) -> Optional[int]:
     return int(steps[-1].split("_")[1]) if steps else None
 
 
-def load_policy(directory: str, step: Optional[int] = None
-                ) -> Optional[QuantPolicy]:
-    """QuantPolicy stored with a checkpoint, or None (fp / legacy)."""
+def _manifest(directory: str, step: Optional[int]) -> Tuple[Path, Dict, int]:
+    """(step dir, parsed manifest, resolved step) for a checkpoint."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     d = Path(directory) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    return d, json.loads((d / "manifest.json").read_text()), step
+
+
+def load_policy(directory: str, step: Optional[int] = None
+                ) -> Optional[QuantPolicy]:
+    """QuantPolicy stored with a checkpoint, or None (fp / legacy)."""
+    _, manifest, _ = _manifest(directory, step)
     pol = manifest.get("quant_policy")
     return None if pol is None else QuantPolicy.from_json_dict(pol)
 
 
+def load_mesh(directory: str, step: Optional[int] = None) -> Optional[Dict]:
+    """Mesh record ({"axes", "shape"}) stored with a checkpoint, or None
+    (unsharded / legacy save)."""
+    return _manifest(directory, step)[1].get("mesh")
+
+
 def restore(directory: str, step: Optional[int] = None, *, shardings=None):
-    """Load a checkpoint; re-shard onto `shardings` (a matching tree of
+    """Load a checkpoint; place onto `shardings` (a matching tree of
     jax.sharding.Sharding or None) if given — this is the elastic-restore
-    path: the stored global arrays are placed onto whatever mesh the new
-    job runs with."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    d = Path(directory) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    path: the stored global arrays land on whatever mesh the new job
+    runs with, which may differ from the mesh recorded at save time.
+
+    Leaves with a sharding are memory-mapped and ``device_put`` straight
+    onto their NamedSharding: the file is never copied into a full host
+    ndarray first, so restore peaks at (device bytes + mmap pages)
+    instead of the 2x host-then-device spike on big configs. Unsharded
+    leaves load eagerly as before.
+    """
+    d, manifest, step = _manifest(directory, step)
+    sh_items = dict(_flatten(shardings)) if shardings is not None else {}
+    if sh_items:
+        # a sharding tree that doesn't line up with the stored tree would
+        # silently fall back to eager unsharded loads — fail loudly instead
+        # (a sharding for a leaf stored as None — e.g. a serve-form
+        # LutqState master — has no data to place and is fine)
+        stored = {e["key"] for e in manifest["leaves"]}
+        unmatched = sorted(k for k, s in sh_items.items()
+                           if s is not None and k not in stored
+                           and f"{k}@none" not in stored)
+        if unmatched:
+            raise ValueError(
+                f"shardings tree does not match checkpoint structure: "
+                f"{len(unmatched)} sharding keys absent from the manifest "
+                f"(e.g. {unmatched[:3]})")
     items = {}
     for entry in manifest["leaves"]:
         if entry["file"] is None:
             items[entry["key"]] = None
+            continue
+        sharding = sh_items.get(entry["key"])
+        if sharding is not None:
+            arr = np.load(d / entry["file"], mmap_mode="r")
+            items[entry["key"]] = jax.device_put(arr, sharding)
         else:
             items[entry["key"]] = np.load(d / entry["file"])
-    tree = _unflatten(items)
-    if shardings is not None:
-        tree = jax.tree.map(
-            lambda x, s: x if x is None or s is None else jax.device_put(x, s),
-            tree, shardings, is_leaf=lambda x: x is None)
-    return tree, manifest["step"]
+    return _unflatten(items), manifest["step"]
+
+
+def load(directory: str, step: Optional[int] = None, *, shardings=None):
+    """Alias of :func:`restore` (sharded direct-to-device placement)."""
+    return restore(directory, step, shardings=shardings)

@@ -212,7 +212,7 @@ def _leaf_rule(pol: Optional[QuantPolicy], path):
 
 
 def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = None,
-               with_manifest: bool = False):
+               with_manifest: bool = False, mesh=None, axes=None):
     """Deployment form: drop the full-precision masters, keep (d, A).
 
     This is the paper's memory claim made literal — the served model's
@@ -236,6 +236,15 @@ def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = Non
     ``kernels.ops.resolve_backend`` with ``sliced=True`` — the
     per-slice view the kernels actually see after lax.scan slices a
     layer stack or ``moe_apply`` vmaps over experts).
+
+    ``mesh`` (with ``axes``, the logical-axes tree from model init):
+    emit a *sharding-aware* tree — every leaf is placed onto its serving
+    NamedSharding as it is built (indices/packed layouts partitioned
+    along the model axis per ``distributed.sharding.SERVE_RULES``, with
+    the packed4 row-pair axis respected in the divisibility fallback;
+    dictionaries, rule ids and fp leaves replicated or batch-free). This
+    is the entry point the sharded serving stack starts from; see
+    docs/sharding.md.
     """
     from repro.kernels.ops import resolve_backend
     from repro.kernels.ref import pack4_kin
@@ -277,6 +286,13 @@ def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = Non
         return out
 
     tree = map_with_path(conv, params)
+    if mesh is not None:
+        if axes is None:
+            raise ValueError("serve_view(mesh=...) needs the logical-axes "
+                             "tree from model init (axes=)")
+        from repro.distributed.sharding import shard_serve_params
+
+        tree, _ = shard_serve_params(tree, axes, mesh)
     return (tree, manifest) if with_manifest else tree
 
 

@@ -46,24 +46,34 @@ LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
     "inner": (),
 }
 
+# Serving variant: tensor/expert parallel only. At decode the FSDP-style
+# "embed" -> data mapping is a pessimization — every step would
+# all-gather weight shards over the data axis — and it breaks solo/
+# sharded bit-identity (partial-sum reduction order). At serve the data
+# axis shards batch/caches only; weights shard on "model" alone, so each
+# matmul keeps its full reduction axis local and numerics are identical
+# to a single device.
+SERVE_RULES: Dict[str, Tuple[str, ...]] = {**LOGICAL_RULES, "embed": ()}
 
-def _axes_for(name: Optional[str], mesh: Mesh):
+
+def _axes_for(name: Optional[str], mesh: Mesh, rules=None):
     if name is None:
         return None
-    cands = [a for a in LOGICAL_RULES.get(name, ()) if a in mesh.axis_names]
+    rules = LOGICAL_RULES if rules is None else rules
+    cands = [a for a in rules.get(name, ()) if a in mesh.axis_names]
     if not cands:
         return None
     return tuple(cands) if len(cands) > 1 else cands[0]
 
 
 def pspec_for(logical: Tuple[Optional[str], ...], mesh: Mesh,
-              shape: Optional[Tuple[int, ...]] = None) -> P:
+              shape: Optional[Tuple[int, ...]] = None, rules=None) -> P:
     """PartitionSpec for one array. Drops axes that don't divide and
     never maps one mesh axis twice in a single spec."""
     parts = []
     used: set = set()
     for i, name in enumerate(logical):
-        ax = _axes_for(name, mesh)
+        ax = _axes_for(name, mesh, rules)
         if ax is not None:
             ax_tuple = ax if isinstance(ax, tuple) else (ax,)
             if any(a in used for a in ax_tuple):
@@ -81,11 +91,17 @@ def pspec_for(logical: Tuple[Optional[str], ...], mesh: Mesh,
     return P(*parts)
 
 
-def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None):
+def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None, rules=None):
     """Build a PartitionSpec tree parallel to the params tree.
 
     LutqState leaves: w and a use the weight's spec; the dictionary d is
     sharded only along its stack axes (the K axis is tiny/replicated).
+    For serve-form leaves (w=None) the spec — including the divisibility
+    fallback — is computed against the *assignment's* actual shape:
+    packed4 assignments hold two 4-bit indices per byte along axis -2,
+    so a reduction axis that divides the logical weight dim but not the
+    packed row count replicates rather than splitting a row pair across
+    devices.
     """
 
     def lookup_shape(path):
@@ -102,8 +118,9 @@ def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None):
         shp = lookup_shape(path)
         if isinstance(shp, LutqState) or (shp is not None and hasattr(shp, "w")):
             # serve_view drops w; assignments mirror the weight shape
+            # (packed4: axis -2 counts packed row *pairs* — see docstring)
             wshape = (shp.w if shp.w is not None else shp.a).shape
-            wspec = pspec_for(tuple(logical), mesh, wshape)
+            wspec = pspec_for(tuple(logical), mesh, wshape, rules)
             # d: (stack..., K) — shard stack axes like w, replicate K
             nstack = shp.d.ndim - 1
             dspec = P(*([wspec[i] if i < len(wspec) else None
@@ -111,9 +128,30 @@ def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None):
             sidspec = P() if getattr(shp, "sid", None) is not None else None
             return LutqState(w=wspec, d=dspec, a=wspec, sid=sidspec)
         shape = getattr(shp, "shape", None)
-        return pspec_for(tuple(logical), mesh, shape)
+        return pspec_for(tuple(logical), mesh, shape, rules)
 
     return map_with_path(build, axes_tree)
+
+
+def serve_pspecs(axes_tree, mesh: Mesh, params):
+    """PartitionSpec tree for a serve_view tree under SERVE_RULES.
+
+    Indices (and packed layouts) partition along the same logical axes
+    as the dense weight would, restricted to the "model" axis;
+    dictionaries and rule ids replicate. See docs/sharding.md.
+    """
+    return tree_pspecs(axes_tree, mesh, params, rules=SERVE_RULES)
+
+
+def shard_serve_params(params, axes_tree, mesh: Mesh):
+    """device_put a serve_view tree onto its serving NamedShardings.
+
+    Returns (sharded_params, pspec_tree). Every leaf lands committed —
+    the serving jits then run SPMD with no dense weight materialization
+    (quantized leaves stay dictionary + index shards on every device).
+    """
+    pspecs = serve_pspecs(axes_tree, mesh, params)
+    return shard_tree(params, pspecs, mesh), pspecs
 
 
 def shard_tree(tree, pspecs, mesh: Mesh):

@@ -220,3 +220,97 @@ def lutq_dot(
         y = lutq_gemv_packed(x2, p, d, bn=tn, bk=tk, interpret=interpret)
         y = y[:, :N]
     return y.reshape(*lead, N).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# SPMD: explicit shard_map path over a device mesh
+# ---------------------------------------------------------------------------
+
+def _spec_parts(spec, ndim: int):
+    """Right-pad a PartitionSpec to ``ndim`` entries."""
+    parts = list(tuple(spec) if spec is not None else ())
+    return parts + [None] * (ndim - len(parts))
+
+
+def lutq_dot_spmd(
+    x: jax.Array,
+    state: LutqState,
+    mesh,
+    *,
+    a_spec,
+    x_spec=None,
+    backend: str = "auto",
+    transpose_rhs: bool = False,
+    out_dtype=None,
+):
+    """:func:`lutq_dot` under ``shard_map``: each device runs the fused
+    Pallas kernel on its **local** index shard.
+
+    This is the path GSPMD cannot give a ``pallas_call``: the automatic
+    partitioner has no rule for the custom call, so inside a plain jit a
+    sharded Pallas matmul falls back to replicate-and-gather. Here the
+    grid is split by hand instead:
+
+      * ``a_spec``: PartitionSpec of the assignments, matching their
+        actual layout — ``(K, N)`` int8, ``(K/2, N)`` packed uint8
+        (shards then hold whole row *pairs* by construction), or
+        ``(E, K, N)`` expert-stacked, where sharding E is expert
+        parallelism (each device computes its local experts; ``x`` must
+        then carry a matching leading E axis, e.g. the MoE capacity
+        buffer ``(E, C, D)``).
+      * output-dim (N) sharding keeps the full reduction local — the
+        result is bit-identical to the unsharded kernel, just sharded.
+      * reduction-dim (K) sharding emits one ``psum`` over the named
+        axes of the partial products (f32 accumulation; not bit-exact
+        against a single device, like any reduce-scatter matmul).
+      * ``transpose_rhs`` (tied logits: ``x @ d[A].T``): the roles of
+        a's last two dims swap — sharding the vocab dim shards the
+        output, sharding the feature dim triggers the psum.
+
+    ``x_spec`` defaults to replicated leading dims with the last dim
+    matching a's reduction sharding (so local shards always line up);
+    pass e.g. ``P("data", ...)`` to batch-shard activations too. The
+    dictionary (and any stacked per-expert dictionaries) are replicated
+    across the sharded matmul axes — LUT-Q's tiny-d / big-A split is
+    exactly what makes this cheap.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    nstack = state.a.ndim - 2
+    if nstack not in (0, 1):
+        raise ValueError(f"lutq_dot_spmd supports at most one stack axis, "
+                         f"got assignments of rank {state.a.ndim}")
+    if nstack and transpose_rhs:
+        raise ValueError("transpose_rhs with expert-stacked assignments "
+                         "is not supported")
+    aparts = _spec_parts(a_spec, state.a.ndim)
+    # contraction/output entries of the *assignment* spec
+    k_entry, n_entry = (aparts[-1], aparts[-2]) if transpose_rhs else \
+                       (aparts[-2], aparts[-1])
+    stack_entry = aparts[0] if nstack else None
+
+    if x_spec is None:
+        x_spec = P(*([stack_entry] if nstack else []),
+                   *([None] * (x.ndim - nstack - 1)), k_entry)
+    xparts = _spec_parts(x_spec, x.ndim)
+    out_spec = P(*xparts[:-1], n_entry)
+    d_spec = P(stack_entry, None) if nstack else P()
+
+    def local(x_l, d_l, a_l):
+        st = LutqState(w=None, d=d_l, a=a_l)
+        if nstack:
+            y = jax.vmap(lambda xe, de, ae: lutq_dot(
+                xe, LutqState(w=None, d=de, a=ae), backend=backend,
+                out_dtype=out_dtype))(x_l, d_l, a_l)
+        else:
+            y = lutq_dot(x_l, st, backend=backend,
+                         transpose_rhs=transpose_rhs, out_dtype=out_dtype)
+        if k_entry is not None:
+            y = jax.lax.psum(y, k_entry)
+        return y
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(*xparts), d_spec, P(*aparts)),
+                     out_specs=out_spec, check_rep=False)(
+                         x, state.d, state.a)

@@ -37,3 +37,26 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // data))
     return _make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_arg(spec: str):
+    """CLI mesh spec "DxM" (e.g. "2x4") -> (data, model).
+
+    Raises with an actionable message when the host exposes fewer
+    devices than requested (on CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
+    starting python to split the host into N virtual devices).
+    """
+    try:
+        data, model = (int(t) for t in spec.lower().split("x"))
+    except ValueError as e:
+        raise ValueError(f"--mesh wants DxM (e.g. 2x4), got {spec!r}") from e
+    if data < 1 or model < 1:
+        raise ValueError(f"--mesh sizes must be >= 1, got {spec!r}")
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(
+            f"--mesh {spec} needs {data * model} devices but only {n} are "
+            f"visible; on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={data * model} before launching")
+    return data, model

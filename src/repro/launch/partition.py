@@ -3,10 +3,13 @@
 Maps the model's logical-axes tree + structural knowledge of the cache
 trees onto concrete NamedShardings for every jit boundary the launcher
 lowers: train_step(state, batch), prefill(params, batch),
-decode_step(params, token, cache).
+decode_step(params, token, cache), and — via :func:`serve_shardings` —
+the serving runtime's prefill/decode/engine-step jits (see
+docs/sharding.md).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -162,3 +165,82 @@ def token_shardings(token_struct, mesh: Mesh):
     if _fits(token_struct.shape[0], mesh, spec_dp):
         parts[0] = spec_dp
     return _named(mesh, P(*parts))
+
+
+# ---------------------------------------------------------------------------
+# serving: explicit shardings for the runtime's prefill/decode/engine jits
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def cache_batch_axes(cfg, max_len: int, src_len: int):
+    """Per-leaf batch axis of the decode cache, found structurally.
+
+    Stacked layer leaves carry the batch on axis 1 ((L, B, S, ...)),
+    zamba mamba states on axis 2, ``len`` on axis 0 — rather than
+    hard-coding per family, compare the cache shapes at two batch
+    sizes and take the axis that scales."""
+    from repro.models import api
+
+    s1 = jax.eval_shape(lambda: api.init_cache(cfg, 1, max_len, src_len=src_len))
+    s3 = jax.eval_shape(lambda: api.init_cache(cfg, 3, max_len, src_len=src_len))
+    axes = []
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s3)):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diff) != 1:
+            raise ValueError(f"ambiguous batch axis: {a.shape} vs {b.shape}")
+        axes.append(diff[0])
+    return tuple(axes)
+
+
+def serve_cache_shardings(cfg, mesh: Mesh, batch: int, max_len: int,
+                          src_len: int = 0):
+    """Decode-pool cache shardings for serving: batch on the data axis.
+
+    Unlike the dryrun's :func:`cache_shardings` (context parallelism:
+    sequence dim on "model" for the 32k/524k lowerings), the serving
+    pool replicates the sequence dim — attention reductions then stay
+    whole per stream, which keeps sharded decode bit-identical to a
+    single device (the engine-parity contract). The batch dim lands on
+    "data" wherever the slot count divides it.
+    """
+    from repro.models import api
+
+    dp = _dp_axes(mesh)
+    spec_dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    struct = jax.eval_shape(
+        lambda: api.init_cache(cfg, batch, max_len, src_len=src_len))
+    axes = cache_batch_axes(cfg, max_len, src_len)
+    leaves, treedef = jax.tree.flatten(struct)
+    out = []
+    for leaf, b_ax in zip(leaves, axes):
+        parts = [None] * leaf.ndim
+        if _fits(leaf.shape[b_ax], mesh, spec_dp):
+            parts[b_ax] = spec_dp
+        out.append(_named(mesh, P(*parts)))
+    return jax.tree.unflatten(treedef, out)
+
+
+@functools.lru_cache(maxsize=64)
+def serve_shardings(cfg, mesh: Mesh, *, batch: int, max_len: int,
+                    src_len: int = 0):
+    """NamedShardings for every serving jit boundary of one engine pool.
+
+    Returns a dict (cached per (cfg, mesh, pool geometry) — both keys
+    are hashable, so runtime jit caches keyed on the same tuple never
+    reuse a trace across meshes):
+
+      cache   decode-pool cache tree (batch on "data", seq replicated)
+      token   (B, 1) decode token / sampled-token layout
+      keys    (B, key) per-slot rng chains
+      logits  (B, 1, V) sampler input — vocab on "model" when it divides
+    """
+    dp = _dp_axes(mesh)
+    spec_dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    b_parts = spec_dp if _fits(batch, mesh, spec_dp) else None
+    v_parts = "model" if _fits(cfg.vocab, mesh, "model") else None
+    return {
+        "cache": serve_cache_shardings(cfg, mesh, batch, max_len, src_len),
+        "token": _named(mesh, P(b_parts, None)),
+        "keys": _named(mesh, P(b_parts, None)),
+        "logits": _named(mesh, P(b_parts, None, v_parts)),
+    }

@@ -8,6 +8,11 @@ Continuous batching (ragged queue through the slot-pool engine):
     PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
         --reduced --engine --max-batch 4 --queue 16 --gen 12
 
+Tensor/data-parallel SPMD serving (see docs/sharding.md):
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch mistral-nemo-12b --reduced \
+        --mesh 2x4 --engine --kernel-backend fused
+
 Uses the paper's deployment form (serve_view: dictionary + int8/packed
 assignments, no fp masters) and reports the weight-memory footprint both
 ways (fp32 vs LUT-Q) alongside throughput. Decode goes through
@@ -29,6 +34,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, list_archs
+from repro.core.lutq import LutqState
 from repro.core.policy import (backend_manifest, effective_bits,
                                format_breakdown, quantized_fraction,
                                rule_breakdown, serve_view)
@@ -37,6 +43,7 @@ from repro.core.spec import QuantSpec
 from repro.kernels.ops import BACKENDS
 from repro.models import api
 from repro.models.reduce import reduced
+from repro.nn.tree import tree_paths
 from repro.runtime.engine import Engine
 from repro.runtime.serving import generate
 
@@ -49,9 +56,70 @@ def footprint_bytes(params) -> int:
     return total
 
 
+def _device_nbytes(x, dev) -> int:
+    """Bytes of ``x`` resident on one device (its shard, or everything
+    for unsharded/host arrays)."""
+    try:
+        shards = x.addressable_shards
+    except Exception:  # noqa: BLE001 — numpy / host leaf
+        return int(x.nbytes)
+    for s in shards:
+        if s.device == dev:
+            return int(s.data.nbytes)
+    return 0
+
+
+def device_footprint(params, dev):
+    """(quantized, dense) bytes resident on one device.
+
+    Quantized = dictionary + assignment (+ rule id) shards of LutqState
+    leaves; dense = everything else. Shared by the serve CLI report and
+    ``benchmarks/shard_bench.py`` so the two always agree on what counts
+    as quantized per-device weight bytes.
+    """
+    q = f = 0
+    for _, leaf in tree_paths(params):
+        if isinstance(leaf, LutqState):
+            q += sum(_device_nbytes(t, dev)
+                     for t in (leaf.d, leaf.a, leaf.sid) if t is not None)
+        elif leaf is not None and hasattr(leaf, "nbytes"):
+            f += _device_nbytes(leaf, dev)
+    return q, f
+
+
+def shard_report(params, mesh) -> str:
+    """Per-device footprint + the resolved pspec of the largest leaves.
+
+    The five largest leaves are listed with the PartitionSpec they
+    actually resolved to (including divisibility fallbacks), read back
+    from the placed arrays.
+    """
+    dev = mesh.devices.flat[0]
+    q_dev, f_dev = device_footprint(params, dev)
+    rows = []
+    for path, leaf in tree_paths(params):
+        if isinstance(leaf, LutqState):
+            spec = getattr(leaf.a.sharding, "spec", None)
+            rows.append((leaf.a.nbytes, "/".join(path), tuple(leaf.a.shape),
+                         str(leaf.a.dtype), spec))
+        elif leaf is not None and hasattr(leaf, "nbytes"):
+            spec = getattr(getattr(leaf, "sharding", None), "spec", None)
+            rows.append((int(leaf.nbytes), "/".join(path), tuple(leaf.shape),
+                         str(leaf.dtype), spec))
+    mesh_s = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    lines = [f"[serve] mesh {mesh_s} ({','.join(mesh.axis_names)}): "
+             f"per-device weights quantized {q_dev/2**20:.2f} MiB + dense "
+             f"{f_dev/2**20:.2f} MiB"]
+    for nbytes, path, shape, dtype, spec in sorted(rows, reverse=True)[:5]:
+        lines.append(f"[serve]   {path}: {dtype}{list(shape)} "
+                     f"{nbytes/2**20:.2f} MiB -> "
+                     f"{spec if spec is not None else 'unplaced'}")
+    return "\n".join(lines)
+
+
 def run_engine(params, cfg, *, capacity: int, n_requests: int,
                prompt_len: int, gen: int, seed: int = 0,
-               temperature: float = 0.0):
+               temperature: float = 0.0, mesh=None):
     """Serve a deterministic ragged queue through the slot-pool engine
     and return its stats dict (shared by the CLI and the example, so
     both report identical fields)."""
@@ -60,7 +128,7 @@ def run_engine(params, cfg, *, capacity: int, n_requests: int,
     src_len = prompt_len if cfg.family == "encdec" else 0
     eng = Engine(params, cfg, capacity=capacity, max_len=prompt_len + gen,
                  src_len=src_len, temperature=temperature,
-                 rng=jax.random.PRNGKey(seed))
+                 rng=jax.random.PRNGKey(seed), mesh=mesh)
     for req in synthetic_requests(cfg, n_requests, max_prompt=prompt_len,
                                   max_new=gen, seed=seed, src_len=src_len):
         req.pop("arrival_s")
@@ -108,6 +176,12 @@ def main(argv=None):
                     help="engine slot-pool capacity (decode batch width)")
     ap.add_argument("--queue", type=int, default=16,
                     help="number of ragged requests to enqueue with --engine")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve SPMD on a (data, model) host mesh, e.g. 2x4 "
+                         "(indices tensor-parallel on the model axis, batch/"
+                         "caches on data; see docs/sharding.md). On CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                         "first")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -121,12 +195,20 @@ def main(argv=None):
                           act_bits=8)
     cfg = cfg.replace(kernel_backend=args.kernel_backend)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh, parse_mesh_arg
+
+        dsz, msz = parse_mesh_arg(args.mesh)
+        mesh = make_host_mesh(dsz, msz)
+
     params, axes = api.init(jax.random.PRNGKey(args.seed), cfg)
     fp_bytes = footprint_bytes(params)
     qparams = api.quantize(params, cfg, axes)
     policy = api.resolved_policy(cfg)
     pack = args.pack4 or args.kernel_backend == "packed4"
-    sparams = serve_view(qparams, pack4=pack, policy=policy)
+    sparams = serve_view(qparams, pack4=pack, policy=policy,
+                         mesh=mesh, axes=axes)
     manifest = backend_manifest(sparams, policy,
                                 override=args.kernel_backend)
     q_bytes = footprint_bytes(sparams)
@@ -138,11 +220,13 @@ def main(argv=None):
     counts = Counter(m["backend"] for m in manifest.values())
     print(f"[serve] kernel backends (requested {args.kernel_backend!r}): "
           + ", ".join(f"{k}: {v} leaves" for k, v in sorted(counts.items())))
+    if mesh is not None:
+        print(shard_report(sparams, mesh))
 
     if args.engine:
         stats = run_engine(sparams, cfg, capacity=args.max_batch,
                            n_requests=args.queue, prompt_len=args.prompt_len,
-                           gen=args.gen, seed=args.seed)
+                           gen=args.gen, seed=args.seed, mesh=mesh)
         print(format_engine_stats(stats))
         return 0
 
@@ -158,7 +242,7 @@ def main(argv=None):
             jax.random.PRNGKey(3), (B, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
 
     gen, stats = generate(sparams, cfg, batch, steps=args.gen,
-                          max_len=max_len, return_stats=True)
+                          max_len=max_len, return_stats=True, mesh=mesh)
     print(f"[serve] prefill {P} toks x{B}: {stats['t_prefill_s']*1e3:.1f} ms | "
           f"decode[{stats['backend']}]: {stats['decode_tok_s']:.1f} tok/s | "
           f"sample: {np.asarray(gen[0])[:8]}")

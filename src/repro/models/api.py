@@ -79,6 +79,28 @@ def quantize(params, cfg: ModelConfig, axes=None):
     return quantize_tree(params, policy, axes=axes)
 
 
+def serve_state(key, cfg: ModelConfig, *, pack4: bool = False, mesh=None,
+                with_manifest: bool = False):
+    """One-call deployment state: init -> quantize -> serve_view.
+
+    Returns ``(serve_params, axes)`` (plus the backend manifest with
+    ``with_manifest=True``). ``axes`` is the logical-axes tree — keep it
+    around for sharding decisions. With ``mesh`` the tree comes back
+    already placed on its serving NamedShardings (indices partitioned
+    on the model axis, dictionaries replicated; see docs/sharding.md),
+    ready for ``generate(..., mesh=)`` / ``Engine(..., mesh=)``.
+    """
+    from repro.core.policy import serve_view
+
+    params, axes = init(key, cfg)
+    qparams = quantize(params, cfg, axes)
+    out = serve_view(qparams, pack4=pack4, policy=resolved_policy(cfg),
+                     with_manifest=with_manifest, mesh=mesh, axes=axes)
+    if with_manifest:
+        return out[0], axes, out[1]
+    return out, axes
+
+
 def loss_fn(params, cfg: ModelConfig, batch):
     if cfg.family in ("dense", "moe", "vlm"):
         return m_lm.lm_loss(params, cfg, batch)

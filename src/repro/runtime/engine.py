@@ -48,32 +48,25 @@ from repro.runtime.serving import adapt_prefill_cache, prefill_fn
 
 
 def _batch_axes(cfg: ModelConfig, max_len: int, src_len: int):
-    """Per-leaf batch axis of the decode cache, found structurally.
+    """Per-leaf batch axis of the decode cache (structural finder;
+    shared with ``partition.serve_shardings`` which needs the same
+    answer to batch-shard the pool)."""
+    from repro.launch.partition import cache_batch_axes
 
-    Stacked layer leaves carry the batch on axis 1 ((L, B, S, ...)),
-    zamba mamba states on axis 2, ``len`` on axis 0 — rather than
-    hard-coding per family, compare the cache shapes at two batch
-    sizes and take the axis that scales."""
-    s1 = jax.eval_shape(lambda: api.init_cache(cfg, 1, max_len, src_len=src_len))
-    s3 = jax.eval_shape(lambda: api.init_cache(cfg, 3, max_len, src_len=src_len))
-    axes = []
-    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s3)):
-        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
-        if len(diff) != 1:
-            raise ValueError(f"ambiguous batch axis: {a.shape} vs {b.shape}")
-        axes.append(diff[0])
-    return tuple(axes)
+    return cache_batch_axes(cfg, max_len, src_len)
 
 
 @functools.lru_cache(maxsize=64)
 def _splice_fn(cfg: ModelConfig, axes: tuple, max_len: int, src_len: int,
-               m: int):
+               m: int, mesh=None, capacity: int = 0):
     """Jit-cached admission splice: adapt a batch=m prefill cache to the
     decode layout (ring relay, int8-KV quant, length override) and write
     row i into slot ``slots[i]`` of the pooled cache — one compiled
     dispatch per admission *group* instead of a trail of small
     host-driven ops. ``adapt_prefill_cache`` traces (no host sync),
-    which is what makes this composition possible."""
+    which is what makes this composition possible. Under a mesh the
+    pool keeps its batch-on-data NamedShardings through the splice
+    (mesh is part of the cache key — no stale traces across meshes)."""
 
     def splice(pool, prefill_cache, slots, lengths):
         grp = adapt_prefill_cache(cfg, prefill_cache, m, max_len,
@@ -90,7 +83,14 @@ def _splice_fn(cfg: ModelConfig, axes: tuple, max_len: int, src_len: int,
             out.append(p)
         return jax.tree.unflatten(treedef, out)
 
-    return jax.jit(splice)
+    if mesh is None:
+        return jax.jit(splice)
+    from repro.launch.partition import serve_shardings
+
+    sh = serve_shardings(cfg, mesh, batch=capacity, max_len=max_len,
+                         src_len=src_len)
+    return jax.jit(splice, in_shardings=(sh["cache"], None, None, None),
+                   out_shardings=sh["cache"])
 
 
 def _sample(logits, keys, temp, greedy: bool):
@@ -110,19 +110,37 @@ def _sample(logits, keys, temp, greedy: bool):
 
 @functools.lru_cache(maxsize=64)
 def _sample_fn(greedy: bool):
+    # no explicit shardings: jit keys its executables on the input
+    # shardings itself, so meshed and un-meshed engines can share this
     return jax.jit(functools.partial(_sample, greedy=greedy))
 
 
 @functools.lru_cache(maxsize=64)
-def _step_fn(cfg: ModelConfig, greedy: bool):
-    """One fused engine step: decode_step + per-slot sampling."""
+def _step_fn(cfg: ModelConfig, greedy: bool, mesh=None, capacity: int = 0,
+             max_len: int = 0, src_len: int = 0):
+    """One fused engine step: decode_step + per-slot sampling.
+
+    With a mesh, the step takes explicit in/out NamedShardings
+    (``partition.serve_shardings``): tok/cache/keys batch-sharded on
+    the data axis, params at their committed placement. The mesh is in
+    the lru key, so one process can serve several meshes without trace
+    reuse."""
 
     def step(params, tok, cache, keys, temp):
         logits, cache = api.decode_step(params, cfg, tok, cache)
         tok, keys = _sample(logits, keys, temp, greedy)
         return tok, cache, keys
 
-    return jax.jit(step)
+    if mesh is None:
+        return jax.jit(step)
+    from repro.launch.partition import serve_shardings
+
+    sh = serve_shardings(cfg, mesh, batch=capacity, max_len=max_len,
+                         src_len=src_len)
+    return jax.jit(
+        step,
+        in_shardings=(None, sh["token"], sh["cache"], sh["keys"], None),
+        out_shardings=(sh["token"], sh["cache"], sh["keys"]))
 
 
 def synthetic_requests(cfg: ModelConfig, n: int, *, max_prompt: int,
@@ -196,12 +214,20 @@ class Engine:
     ``prefill_bucket``: round admission prefills up to a multiple of
     this to bound jit retraces across ragged prompt lengths (attention
     families only; recurrent families always prefill exact).
+    ``mesh``: optional ``("data", "model")`` device mesh. The slot pool
+    (cache, pending tokens, per-slot rng chains) is placed batch-on-data
+    and every engine jit — splice dispatch, decode step, sampler —
+    takes explicit NamedShardings keyed on the mesh, so continuous
+    batching composes with tensor parallelism (params should already be
+    placed via ``distributed.sharding.shard_serve_params``). Results
+    are token-identical to an un-meshed engine.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, capacity: int = 8,
                  max_len: int = 128, src_len: int = 0,
                  temperature: float = 0.0, rng: Optional[jax.Array] = None,
-                 backend: Optional[str] = None, prefill_bucket: int = 1):
+                 backend: Optional[str] = None, prefill_bucket: int = 1,
+                 mesh=None):
         if backend is not None:
             cfg = cfg.replace(kernel_backend=backend)
         self.cfg = cfg
@@ -212,6 +238,7 @@ class Engine:
         self.src_len = int(src_len)
         self.temperature = float(temperature)
         self.greedy = self.temperature <= 0
+        self.mesh = mesh
         self.prefill_bucket = max(1, int(prefill_bucket))
         if cfg.family in ("ssm", "hybrid") or cfg.n_experts:
             # padded prefill corrupts recurrent state, and MoE routing
@@ -225,6 +252,14 @@ class Engine:
         self.tok = jnp.zeros((self.capacity, 1), jnp.int32)
         self.keys = jnp.stack([jax.random.fold_in(self._base_rng, i)
                                for i in range(self.capacity)])
+        if mesh is not None:
+            from repro.launch.partition import serve_shardings
+
+            sh = serve_shardings(cfg, mesh, batch=self.capacity,
+                                 max_len=self.max_len, src_len=self.src_len)
+            self.cache = jax.device_put(self.cache, sh["cache"])
+            self.tok = jax.device_put(self.tok, sh["token"])
+            self.keys = jax.device_put(self.keys, sh["keys"])
         self.slots: List[Optional[Request]] = [None] * self.capacity
         self.queue: deque = deque()
         self._pending: List[jax.Array] = []  # un-synced decode tokens
@@ -315,17 +350,17 @@ class Engine:
         lengths = jnp.asarray(Ls, jnp.int32)
         slots_j = jnp.asarray(slots, jnp.int32)
 
-        logits, cache = prefill_fn(cfg, self.max_len)(self.params, batch,
-                                                      lengths)
+        logits, cache = prefill_fn(cfg, self.max_len, self.mesh)(
+            self.params, batch, lengths)
         # prefill wants *text* lengths (its logit gather offsets the vlm
         # prefix itself); the decode cache's `len` counts cache slots,
         # which include any prefix positions
         self.cache = _splice_fn(cfg, self._axes, self.max_len, self.src_len,
-                                m)(self.cache, cache, slots_j,
-                                   lengths + pfx)
+                                m, self.mesh, self.capacity)(
+                                    self.cache, cache, slots_j, lengths + pfx)
         keys = jnp.stack([r.key for r in reqs])
-        tok1, keys1 = _sample_fn(self.greedy)(logits, keys,
-                                              jnp.float32(self.temperature))
+        tok1, keys1 = _sample_fn(self.greedy)(
+            logits, keys, jnp.float32(self.temperature))
         self.tok = self.tok.at[slots_j].set(tok1)
         self.keys = self.keys.at[slots_j].set(keys1)
         firsts = np.asarray(jax.device_get(tok1[:, 0]))  # one sync per group
@@ -389,7 +424,7 @@ class Engine:
         t0 = time.perf_counter()
         lengths_j = (jnp.full((B,), P, jnp.int32) if lengths is None
                      else jnp.asarray(lengths, jnp.int32))
-        pf = prefill_fn(self.cfg, self.max_len)
+        pf = prefill_fn(self.cfg, self.max_len, self.mesh)
         if lengths is None:
             logits, cache = pf(self.params, batch)
         else:
@@ -398,8 +433,14 @@ class Engine:
         self.cache = adapt_prefill_cache(
             self.cfg, cache, B, self.max_len, src_len=self.src_len,
             lengths=lengths_j + pfx)
-        tok1, keys = _sample_fn(self.greedy)(logits, self.keys,
-                                             jnp.float32(self.temperature))
+        if self.mesh is not None:
+            from repro.launch.partition import serve_shardings
+
+            sh = serve_shardings(self.cfg, self.mesh, batch=self.capacity,
+                                 max_len=self.max_len, src_len=self.src_len)
+            self.cache = jax.device_put(self.cache, sh["cache"])
+        tok1, keys = _sample_fn(self.greedy)(
+            logits, self.keys, jnp.float32(self.temperature))
         self.tok, self.keys = tok1, keys
         firsts = np.asarray(jax.device_get(tok1[:, 0]))
         self.t_prefill += time.perf_counter() - t0
@@ -468,9 +509,11 @@ class Engine:
         active = [r for r in self.slots if r is not None]
         if active:
             t0 = time.perf_counter()
-            self.tok, self.cache, self.keys = _step_fn(self.cfg, self.greedy)(
-                self.params, self.tok, self.cache, self.keys,
-                jnp.float32(self.temperature))
+            self.tok, self.cache, self.keys = _step_fn(
+                self.cfg, self.greedy, self.mesh, self.capacity,
+                self.max_len, self.src_len)(
+                    self.params, self.tok, self.cache, self.keys,
+                    jnp.float32(self.temperature))
             self._pending.append(self.tok[:, 0])
             n_pend = len(self._pending)
             if (any(r.eos_id is not None for r in active)
@@ -516,6 +559,8 @@ class Engine:
             "capacity": self.capacity,
             "max_len": self.max_len,
             "backend": self.cfg.kernel_backend,
+            "mesh": (None if self.mesh is None else "x".join(
+                str(self.mesh.shape[a]) for a in self.mesh.axis_names)),
             "admitted": self.n_admitted,
             "completed": len(done),
             "decode_steps": self.n_decode_steps,

@@ -122,20 +122,61 @@ def _prefill(cfg: ModelConfig, max_len: int, params, batch, lengths=None):
 
 
 @functools.lru_cache(maxsize=64)
-def decode_fn(cfg: ModelConfig):
-    """Jit-cached one-token decode for a config.
+def decode_fn(cfg: ModelConfig, mesh=None, batch: Optional[int] = None,
+              max_len: Optional[int] = None, src_len: int = 0):
+    """Jit-cached one-token decode for a config (and optionally a mesh).
 
     ModelConfig is a frozen (hashable) dataclass, so repeated ``generate``
     calls — and the serving CLI — share one compiled decode per config
     instead of re-wrapping (and re-tracing) a fresh lambda per call.
+
+    With ``mesh`` (a hashable ``jax.sharding.Mesh`` — it is part of the
+    cache key, so switching meshes in one process never reuses a stale
+    trace) the jit takes explicit in/out NamedShardings from
+    ``partition.serve_shardings``: token + cache batch-sharded on the
+    data axis, cache layout preserved through the step, params left to
+    their committed placement (``shard_serve_params``).
     """
-    return jax.jit(functools.partial(_decode_step, cfg))
+    if mesh is None:
+        return jax.jit(functools.partial(_decode_step, cfg))
+    if batch is None or max_len is None:
+        raise ValueError("decode_fn(cfg, mesh) needs the pool geometry: "
+                         "pass batch= and max_len= (they size the cache "
+                         "shardings)")
+    from repro.launch.partition import serve_shardings
+
+    sh = serve_shardings(cfg, mesh, batch=batch, max_len=max_len,
+                         src_len=src_len)
+    return jax.jit(functools.partial(_decode_step, cfg),
+                   in_shardings=(None, sh["token"], sh["cache"]),
+                   out_shardings=(sh["logits"], sh["cache"]))
 
 
 @functools.lru_cache(maxsize=64)
-def prefill_fn(cfg: ModelConfig, max_len: int):
-    """Jit-cached prefill for (config, max_len)."""
-    return jax.jit(functools.partial(_prefill, cfg, max_len))
+def prefill_fn(cfg: ModelConfig, max_len: int, mesh=None):
+    """Jit-cached prefill for (config, max_len[, mesh]).
+
+    The mesh variant places batch inputs onto their data-parallel
+    NamedShardings before the call (prefill's cache output is re-laid by
+    the admission splice, whose jit pins the pool shardings). It wraps
+    the *same* cached jit as the meshless path — the jit pins no
+    explicit shardings here, and jax keys executables on input
+    shardings itself, so solo and meshed serving share one trace per
+    distinct placement instead of recompiling per mesh.
+    """
+    if mesh is None:
+        return jax.jit(functools.partial(_prefill, cfg, max_len))
+    from repro.launch.partition import data_batch_shardings
+
+    fn = prefill_fn(cfg, max_len)
+
+    def sharded(params, batch, lengths=None):
+        batch = jax.device_put(batch, data_batch_shardings(batch, mesh))
+        if lengths is None:
+            return fn(params, batch)
+        return fn(params, batch, lengths)
+
+    return sharded
 
 
 def generate(
@@ -151,6 +192,7 @@ def generate(
     backend: Optional[str] = None,
     eos_id: Optional[int] = None,
     return_stats: bool = False,
+    mesh=None,
 ):
     """Prefill the prompt then decode `steps` tokens. Returns (B, steps).
 
@@ -176,6 +218,12 @@ def generate(
     additionally returns {"t_prefill_s", "t_decode_s", "decode_tok_s",
     "backend"} measured around the jit-cached entry points (the same
     ones the CLI times, so library and CLI numbers agree).
+
+    ``mesh``: optional ``("data", "model")`` device mesh for SPMD
+    serving — params should already be placed (``shard_serve_params``);
+    the engine places its slot pool/caches batch-on-data and the decode
+    jits take explicit NamedShardings (see docs/sharding.md). Output is
+    token-identical to the un-meshed path.
     """
     import numpy as np
 
@@ -189,7 +237,7 @@ def generate(
     eng = Engine(
         params, cfg, capacity=B, max_len=max_len or (P + steps),
         src_len=batch["frames"].shape[1] if cfg.family == "encdec" else 0,
-        temperature=temperature, rng=rng, backend=backend)
+        temperature=temperature, rng=rng, backend=backend, mesh=mesh)
 
     # recurrent state has no positions to mask and MoE expert capacity
     # couples real tokens to padding, so ANY padding (ragged or
