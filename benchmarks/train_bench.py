@@ -1,0 +1,154 @@
+"""SPMD training benchmark: 1 vs 8 virtual host devices, compressed vs
+uncompressed data-parallel gradients.
+
+Forces an 8-way host platform (like ``shard_bench.py``), builds one
+reduced arch's LUT-Q train state, and times the train step on a trivial
+1x1 mesh and on the 2x4 ("data", "model") mesh, with and without the
+error-feedback compressed gradient exchange. Emits ``BENCH_train.json``
+at the repo root:
+
+  * step ms per cell — on virtual CPU devices the sharded step pays
+    collective-emulation overhead, so wall-clock is a structural record,
+    not a speedup claim;
+  * DP gradient-exchange wire bytes per device per step (the ring model
+    ``2 (n-1)/n * payload``, computed from the actual trainable tree and
+    the transform's actual wire dtypes — modeled, labeled as such): the
+    compressed-collective claim is ``ef``/``ring`` < uncompressed;
+  * per-device master bytes (the FSDP memory win) and a loss-parity bit
+    (first-step solo vs 2x4 losses agree to reduction order), so the
+    benchmark doubles as a smoke check.
+
+Run: python benchmarks/train_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.spec import QuantSpec  # noqa: E402
+from repro.data.synthetic import MarkovLM  # noqa: E402
+from repro.distributed.compress import (dp_grad_transform, dp_wire_bytes,  # noqa: E402
+                                        trainable_pspecs)
+from repro.launch import partition  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.models.reduce import reduced  # noqa: E402
+from repro.optim.optimizers import adamw  # noqa: E402
+from repro.optim.train_state import (init_train_state, make_train_step,  # noqa: E402
+                                     state_flat)
+
+
+def _cell(cfg, params, mesh, compress, *, batch, seq, steps):
+    opt = adamw(1e-3)
+    state = state_flat(init_train_state(params, opt,
+                                        grad_compress=bool(compress)))
+    sh = None
+    if mesh is not None:
+        sh = partition.train_shardings(cfg, mesh, batch=batch, seq=seq,
+                                       grad_compress=bool(compress))
+        state = partition.place_state(state, sh["state"])
+    gt = (dp_grad_transform(mesh, mode=compress,
+                            pspecs=None if sh is None
+                            else trainable_pspecs(sh["state"]))
+          if compress else None)
+    step_fn = make_train_step(cfg, api.loss_fn, opt, grad_transform=gt,
+                              shardings=sh)
+    if mesh is None:
+        step_fn = jax.jit(step_fn)
+    lm = MarkovLM(cfg.vocab, seed=0)
+
+    def make_batch(n):
+        return {k: jnp.asarray(v) for k, v in lm.batch(0, n, batch, seq).items()}
+
+    state, m0 = step_fn(state, make_batch(0))  # warm the trace
+    loss0 = float(m0["loss"])  # first-step loss: the parity bit's input
+    t0 = time.perf_counter()
+    for n in range(1, steps + 1):
+        state, m = step_fn(state, make_batch(n))
+    jax.block_until_ready(m["loss"])
+    wall = time.perf_counter() - t0
+    return {"step_ms": 1e3 * wall / steps, "loss0": loss0}, state
+
+
+def bench(arch: str, *, quick: bool = False):
+    cfg = reduced(get_config(arch)).replace(
+        vocab=64, act_bits=8,
+        quant=QuantSpec(bits=4, kmeans_iters=1, min_size=4096,
+                        constraint="pow2"))
+    batch, seq = (4, 16) if quick else (8, 32)
+    steps = 4 if quick else 12
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    params = api.quantize(params, cfg)
+
+    trainable = state_flat(init_train_state(params, adamw(1e-3)))["trainable"]
+    rec = {"arch": arch, "batch": batch, "seq": seq, "steps": steps,
+           "devices": len(jax.devices()), "meshes": {}}
+    losses = {}
+    for name, dm in {"1x1": (1, 1), "2x4": (2, 4)}.items():
+        mesh = make_host_mesh(*dm)
+        dp = dm[0]
+        cell = {"mesh": name, "step_ms": {}, "dp_wire_bytes_modeled": {}}
+        for mode in (None, "ef", "ring"):
+            if mode == "ring" and dp == 1:
+                continue  # no data axis to ring over
+            r, state = _cell(cfg, params, mesh, mode,
+                             batch=batch, seq=seq, steps=steps)
+            key = mode or "uncompressed"
+            cell["step_ms"][key] = round(r["step_ms"], 2)
+            cell["dp_wire_bytes_modeled"][key] = dp_wire_bytes(
+                trainable, dp, mode)
+            losses[(name, mode)] = r["loss0"]
+            if mode is None:
+                dev = mesh.devices.flat[0]
+                cell["per_device_master_bytes"] = sum(
+                    partition.device_nbytes(l, dev)
+                    for l in jax.tree.leaves(state["trainable"],
+                                             is_leaf=lambda x: x is None)
+                    if l is not None and hasattr(l, "nbytes"))
+        rec["meshes"][name] = cell
+        print(f"[train_bench] {arch} mesh {name}: "
+              + ", ".join(f"{k} {v} ms" for k, v in cell["step_ms"].items()))
+    a, b = losses[("1x1", None)], losses[("2x4", None)]
+    rec["loss_parity"] = bool(abs(a - b) / abs(a) < 1e-3)
+    rec["compressed_bytes_ratio"] = (
+        rec["meshes"]["2x4"]["dp_wire_bytes_modeled"]["ef"]
+        / max(rec["meshes"]["2x4"]["dp_wire_bytes_modeled"]["uncompressed"], 1))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_train.json"))
+    args = ap.parse_args(argv)
+
+    if len(jax.devices()) < 8:
+        print("[train_bench] fewer than 8 devices visible — was jax "
+              "imported before XLA_FLAGS was set?", file=sys.stderr)
+        return 1
+    rec = bench(args.arch, quick=args.quick)
+    Path(args.out).write_text(json.dumps(rec, indent=1))
+    print(f"[train_bench] loss_parity={rec['loss_parity']} "
+          f"compressed/uncompressed DP bytes "
+          f"{rec['compressed_bytes_ratio']:.2f} -> {args.out}")
+    return 0 if (rec["loss_parity"]
+                 and rec["compressed_bytes_ratio"] < 1.0) else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

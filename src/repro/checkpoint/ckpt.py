@@ -191,6 +191,25 @@ def load_mesh(directory: str, step: Optional[int] = None) -> Optional[Dict]:
     return _manifest(directory, step)[1].get("mesh")
 
 
+def prune_shardings(directory: str, shardings, step: Optional[int] = None):
+    """Restrict a shardings tree to the leaves a checkpoint actually
+    stores.
+
+    Elastic resume may carry shardings for state the checkpoint
+    predates — e.g. error-feedback residuals after turning
+    ``--grad-compress`` on mid-run. :func:`restore`'s strict
+    structure check would reject those keys; pruning them lets the
+    stored leaves land sharded while the new leaves keep their live
+    value through the caller's graft (``TrainLoop.maybe_resume``).
+    """
+    _, manifest, _ = _manifest(directory, step)
+    stored = {e["key"] for e in manifest["leaves"]}
+    items = {k: (s if (k in stored or f"{k.removesuffix('@none')}@none"
+                       in stored) else None)
+             for k, s in _flatten(shardings)}
+    return _unflatten(items)
+
+
 def restore(directory: str, step: Optional[int] = None, *, shardings=None):
     """Load a checkpoint; place onto `shardings` (a matching tree of
     jax.sharding.Sharding or None) if given — this is the elastic-restore
@@ -236,3 +255,22 @@ def restore(directory: str, step: Optional[int] = None, *, shardings=None):
 def load(directory: str, step: Optional[int] = None, *, shardings=None):
     """Alias of :func:`restore` (sharded direct-to-device placement)."""
     return restore(directory, step, shardings=shardings)
+
+
+def restore_params(directory: str, step: Optional[int] = None):
+    """Restore only the {"trainable", "static"} subtrees of a train
+    checkpoint — what serving needs. Optimizer moments and EF residuals
+    (the bulk of the state) are never read from disk; the returned
+    leaves are memory-mapped, so the caller pays pages for the params it
+    touches instead of an eager full-state host copy. Returns
+    ``({"trainable", "static"}, step)``.
+    """
+    d, manifest, step = _manifest(directory, step)
+    items = {}
+    for entry in manifest["leaves"]:
+        key = entry["key"]
+        if not key.startswith(("trainable/", "static/")):
+            continue
+        items[key] = (None if entry["file"] is None
+                      else np.load(d / entry["file"], mmap_mode="r"))
+    return _unflatten(items), step

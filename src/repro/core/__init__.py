@@ -16,6 +16,8 @@ from repro.core.lutq import (
     assign,
     kmeans_update,
     kmeans_update_segsum,
+    kmeans_update_stats,
+    resolve_kmeans_impl,
     update_state,
     init_state,
     init_dictionary,
@@ -30,7 +32,8 @@ __all__ = [
     "QuantSpec", "LUTQ_4BIT", "LUTQ_2BIT", "LUTQ_4BIT_POW2", "LUTQ_2BIT_POW2",
     "BINARY", "TERNARY", "TERNARY_SCALED",
     "LutqState", "decode", "quantize_ste", "assign", "kmeans_update",
-    "kmeans_update_segsum", "update_state", "init_state", "init_dictionary",
+    "kmeans_update_segsum", "kmeans_update_stats", "resolve_kmeans_impl",
+    "update_state", "init_state", "init_dictionary",
     "pow2_round", "apply_constraint",
     "BNParams", "BNStats", "init_bn", "batch_norm", "inference_scale_offset",
     "fake_quant", "relu_fake_quant", "memory",

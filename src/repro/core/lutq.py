@@ -290,12 +290,102 @@ def kmeans_update_segsum(w: jax.Array, d: jax.Array, spec: QuantSpec) -> Tuple[j
     return d, a
 
 
+def kmeans_update_stats(w: jax.Array, d: jax.Array, spec: QuantSpec,
+                        *, bn: int = 65536, interpret: Optional[bool] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """:func:`kmeans_update` through the Pallas ``kmeans_stats`` kernel.
+
+    One fused pass per iteration computes assignments and per-entry
+    sums/counts (one HBM read of w, one int8 write of a), instead of the
+    K separate masked reductions of :func:`kmeans_update_segsum`. The
+    constraints the kernel cannot express are composed around its stats:
+
+      * fixed dictionaries (binary/ternary) take the kernel's assignment
+        but recenter via :func:`_fixed_scale_update` (cheap reductions);
+      * prune masks move each pruned weight's contribution from its
+        kernel-assigned cluster to the zero entry with K masked
+        correction reductions — only paid when ``prune_frac > 0``;
+      * pow2/sort projections run on the (K,)-sized dictionary on host
+        as in the reference.
+
+    Same results as :func:`kmeans_update` / ``kmeans_update_segsum`` up
+    to f32 accumulation order (the kernel reduces block-partials over a
+    sequential grid).
+    """
+    from repro.kernels import ops  # local: kernels.ops imports this module
+
+    K = spec.K
+    flat = w.ravel().astype(jnp.float32)
+    pmask = (_prune_mask(w, spec.prune_frac).ravel()
+             if spec.prune_frac > 0.0 else None)
+
+    def stats(d):
+        a, sums, counts = ops.kmeans_stats(flat, d, bn=bn,
+                                           interpret=interpret)
+        a = a.astype(jnp.int32)
+        if pmask is not None:
+            zi = jnp.argmin(jnp.abs(d))
+
+            def corr(k):
+                m = pmask & (a == k)
+                return (jnp.sum(jnp.where(m, flat, 0.0)),
+                        jnp.sum(m.astype(jnp.float32)))
+
+            csum, ccnt = jax.lax.map(corr, jnp.arange(K))
+            sums = (sums - csum).at[zi].add(jnp.sum(csum))
+            counts = (counts - ccnt).at[zi].add(jnp.sum(ccnt))
+            a = jnp.where(pmask, zi, a)
+        return a, sums, counts
+
+    def one_iter(d, _):
+        a, sums, counts = stats(d)
+        if spec.fixed_dictionary:
+            return _fixed_scale_update(d, flat, a, spec), None
+        new_d = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), d)
+        return apply_constraint(new_d.astype(d.dtype), spec), None
+
+    d, _ = jax.lax.scan(one_iter, d, None, length=spec.kmeans_iters)
+    a, _, _ = stats(d)
+    return d, a.astype(jnp.int8).reshape(w.shape)
+
+
 _SEGSUM_THRESHOLD = 1 << 16
 
+_KMEANS_IMPLS = {
+    "dense": kmeans_update,
+    "segsum": kmeans_update_segsum,
+    "stats": kmeans_update_stats,
+}
 
-def update_state(state: LutqState, spec: QuantSpec) -> LutqState:
-    """Paper step 4 applied to a LutqState (after the optimizer touched w)."""
-    fn = kmeans_update_segsum if state.w.size >= _SEGSUM_THRESHOLD else kmeans_update
+
+def resolve_kmeans_impl(n: int, impl: Optional[str] = None) -> str:
+    """Structural step-4 implementation choice for an n-element leaf.
+
+    ``None`` resolves: dense one-hot below ``_SEGSUM_THRESHOLD``; above
+    it the fused Pallas ``kmeans_stats`` kernel on TPU, and the
+    sharding-friendly masked-reduction ``segsum`` form elsewhere (CPU /
+    interpret — where the kernel would just emulate the same reductions
+    slower). Explicit names force a path (tests, benches).
+    """
+    if impl is not None:
+        if impl not in _KMEANS_IMPLS:
+            raise ValueError(
+                f"unknown kmeans impl {impl!r}; expected one of "
+                f"{tuple(_KMEANS_IMPLS)}")
+        return impl
+    if n < _SEGSUM_THRESHOLD:
+        return "dense"
+    return "stats" if jax.default_backend() == "tpu" else "segsum"
+
+
+def update_state(state: LutqState, spec: QuantSpec,
+                 impl: Optional[str] = None) -> LutqState:
+    """Paper step 4 applied to a LutqState (after the optimizer touched w).
+
+    ``impl``: force "dense" | "segsum" | "stats"; default structural
+    (see :func:`resolve_kmeans_impl`).
+    """
+    fn = _KMEANS_IMPLS[resolve_kmeans_impl(state.w.size, impl)]
     d, a = fn(state.w, state.d, spec)
     return LutqState(w=state.w, d=d, a=a, sid=state.sid)
 

@@ -129,8 +129,15 @@ def _resolve_for_state(policy: QuantPolicy, path, leaf: LutqState
     return policy.rules[i].spec
 
 
-def kmeans_tree(params, quant: QuantLike):
-    """Paper step 4 over every quantized leaf, honoring each leaf's rule."""
+def kmeans_tree(params, quant: QuantLike, impl: Optional[str] = None):
+    """Paper step 4 over every quantized leaf, honoring each leaf's rule.
+
+    ``impl`` forces the per-leaf k-means implementation ("dense" |
+    "segsum" | "stats"); default is the structural choice of
+    :func:`repro.core.lutq.resolve_kmeans_impl` — dense one-hot for
+    small leaves, the fused Pallas ``kmeans_stats`` kernel on TPU above
+    ``_SEGSUM_THRESHOLD``, the sharding-friendly segsum form elsewhere.
+    """
     policy = as_policy(quant)
 
     def refresh(path, leaf):
@@ -143,7 +150,7 @@ def kmeans_tree(params, quant: QuantLike):
             return leaf
         nstack = leaf.d.ndim - 1
         core = LutqState(w=leaf.w, d=leaf.d, a=leaf.a)
-        f = _vmapped(lambda s: update_state(s, spec), nstack)
+        f = _vmapped(lambda s: update_state(s, spec, impl=impl), nstack)
         return f(core)._replace(sid=leaf.sid)
 
     return map_with_path(refresh, params)

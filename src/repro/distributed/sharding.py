@@ -55,6 +55,17 @@ LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
 # to a single device.
 SERVE_RULES: Dict[str, Tuple[str, ...]] = {**LOGICAL_RULES, "embed": ()}
 
+# Training variant: the full FSDP/DP + tensor-parallel mapping. Master
+# weights, their gradients and the optimizer moments all shard embed ->
+# "data" (ZeRO-style) on top of the "model" tensor axes; LutqState
+# assignments follow the master's spec while dictionaries and rule ids
+# are forced fully replicated by :func:`train_pspecs` — the step-4
+# recenter then combines per-shard sums/counts with one psum (emitted by
+# the partitioner for the segsum/stats formulations) and lands an
+# identical dictionary on every device with no gather and no dense
+# rematerialization. See docs/training.md.
+TRAIN_RULES: Dict[str, Tuple[str, ...]] = dict(LOGICAL_RULES)
+
 
 def _axes_for(name: Optional[str], mesh: Mesh, rules=None):
     if name is None:
@@ -131,6 +142,30 @@ def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None, rules=None):
         return pspec_for(tuple(logical), mesh, shape, rules)
 
     return map_with_path(build, axes_tree)
+
+
+def train_pspecs(axes_tree, mesh: Mesh, params):
+    """PartitionSpec tree for a *train-form* params tree under TRAIN_RULES.
+
+    Masters ``w`` and assignments ``a`` partition along the weight's
+    logical axes (FSDP ``embed -> data`` plus the tensor-parallel model
+    axes); dictionaries ``d`` and rule ids ``sid`` are fully replicated
+    — including their leading stack axes — so every device holds every
+    (tiny) dictionary and the step-4 recenter psum is exact with no
+    gather. The same specs govern gradients, optimizer moments and
+    error-feedback state (they mirror the trainable tree leaf-for-leaf).
+    """
+    specs = tree_pspecs(axes_tree, mesh, params, rules=TRAIN_RULES)
+
+    def replicate_d(leaf):
+        if isinstance(leaf, LutqState):
+            return LutqState(w=leaf.w, d=P(), a=leaf.a,
+                             sid=P() if leaf.sid is not None else None)
+        return leaf
+
+    return jax.tree.map(
+        replicate_d, specs,
+        is_leaf=lambda x: isinstance(x, (LutqState, P)) or x is None)
 
 
 def serve_pspecs(axes_tree, mesh: Mesh, params):

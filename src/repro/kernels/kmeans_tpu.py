@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(w_ref, d_ref, a_ref, sums_ref, counts_ref, *, n_dict: int):
+def _kernel(w_ref, d_ref, a_ref, sums_ref, counts_ref, *, n_dict: int,
+            bn: int, n_valid: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -36,6 +37,13 @@ def _kernel(w_ref, d_ref, a_ref, sums_ref, counts_ref, *, n_dict: int):
     a_ref[...] = a.astype(jnp.int8)
     onehot = (a[:, None] == jnp.arange(n_dict, dtype=jnp.int32)[None, :]
               ).astype(jnp.float32)             # (bn, K)
+    if n_valid % bn:
+        # ragged tail: zero-pad entries (global index >= n_valid) must not
+        # enter the statistics. n_valid is trace-static, so full blocks
+        # compile with no masking at all. (2-D iota + squeeze: TPU has no
+        # 1-D iota.)
+        idx = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)[:, 0]
+        onehot = jnp.where((idx < n_valid)[:, None], onehot, 0.0)
     sums_ref[...] += onehot.T @ w
     counts_ref[...] += jnp.sum(onehot, axis=0)
 
@@ -47,14 +55,22 @@ def kmeans_stats(
     bn: int = 4096,
     interpret: bool = False,
 ):
-    """Returns (assignments int8 (N,), sums f32 (K,), counts f32 (K,))."""
+    """Returns (assignments int8 (N,), sums f32 (K,), counts f32 (K,)).
+
+    Any N is accepted: the flat weights are zero-padded onto the block
+    grid and the tail block masks padded entries out of the sums/counts
+    (assignments for the pad are computed but sliced off), so the result
+    is element-exact with the unpadded kernel.
+    """
     N = w.shape[0]
     n_dict = d.shape[0]
     bn = min(bn, N)
-    assert N % bn == 0, (N, bn)
-    grid = (N // bn,)
-    return pl.pallas_call(
-        functools.partial(_kernel, n_dict=n_dict),
+    Np = -(-N // bn) * bn
+    if Np != N:
+        w = jnp.pad(w, (0, Np - N))
+    grid = (Np // bn,)
+    a, sums, counts = pl.pallas_call(
+        functools.partial(_kernel, n_dict=n_dict, bn=bn, n_valid=N),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn,), lambda i: (i,)),
@@ -66,9 +82,10 @@ def kmeans_stats(
             pl.BlockSpec((n_dict,), lambda i: (0,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N,), jnp.int8),
+            jax.ShapeDtypeStruct((Np,), jnp.int8),
             jax.ShapeDtypeStruct((n_dict,), jnp.float32),
             jax.ShapeDtypeStruct((n_dict,), jnp.float32),
         ],
         interpret=interpret,
     )(w, d)
+    return (a[:N] if Np != N else a), sums, counts

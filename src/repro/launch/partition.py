@@ -13,11 +13,13 @@ import functools
 from typing import Any, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.lutq import LutqState
-from repro.distributed.sharding import batch_pspec, pspec_for, tree_pspecs
+from repro.distributed.sharding import (batch_pspec, pspec_for, train_pspecs,
+                                        tree_pspecs)
 
 
 def _named(mesh, spec):
@@ -48,7 +50,10 @@ def _mirror_split(pspecs, struct):
 
     def walk(ps, st):
         if isinstance(st, LutqState):
-            return ps.w, {"__lutq_d": ps.d, "__lutq_a": ps.a}
+            s = {"__lutq_d": ps.d, "__lutq_a": ps.a}
+            if st.sid is not None:
+                s["__lutq_sid"] = ps.sid if ps.sid is not None else P()
+            return ps.w, s
         if isinstance(st, dict):
             pairs = {k: walk(ps[k], st[k]) for k in st}
             return ({k: v[0] for k, v in pairs.items()},
@@ -63,8 +68,13 @@ def _mirror_split(pspecs, struct):
 
 
 def train_state_shardings(axes_tree, params_struct, state_struct, mesh: Mesh):
-    """Shardings for {"trainable","static","opt_state","step"}."""
-    pspecs = tree_pspecs(axes_tree, mesh, params_struct)
+    """Shardings for {"trainable","static","opt_state","step"[,"ef"]}.
+
+    Masters/moments/EF residuals follow ``train_pspecs`` (FSDP embed ->
+    data + tensor-parallel model axes; dictionaries and rule ids
+    replicated); ``step`` replicates.
+    """
+    pspecs = train_pspecs(axes_tree, mesh, params_struct)
     t_spec, s_spec = _mirror_split(pspecs, params_struct)
 
     def like_trainable(opt_struct):
@@ -77,6 +87,8 @@ def train_state_shardings(axes_tree, params_struct, state_struct, mesh: Mesh):
         "opt_state": like_trainable(state_struct["opt_state"]),
         "step": P(),
     }
+    if "ef" in state_struct:
+        spec_tree["ef"] = t_spec
 
     def to_sharding(spec, st):
         if st is None:
@@ -244,3 +256,77 @@ def serve_shardings(cfg, mesh: Mesh, *, batch: int, max_len: int,
         "keys": _named(mesh, P(b_parts, None)),
         "logits": _named(mesh, P(b_parts, None, v_parts)),
     }
+
+
+# ---------------------------------------------------------------------------
+# training: explicit shardings for the train-step jit boundary
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def train_shardings(cfg, mesh: Mesh, *, batch: int, seq: int,
+                    optimizer: str = "adamw", grad_compress: bool = False):
+    """NamedShardings for the SPMD train step of one (cfg, mesh, batch
+    geometry) cell — the train-side twin of :func:`serve_shardings`.
+
+    Returns a cached dict (both keys hashable, so every jit keyed on the
+    same tuple reuses one trace per mesh):
+
+      state   {"trainable","static","opt_state","step"[,"ef"]} — masters,
+              moments and EF residuals FSDP/TP-sharded per TRAIN_RULES;
+              LUT-Q dictionaries/rule ids replicated
+      batch   tokens/labels (+frames/prefix embeds) batch-sharded on the
+              data axes
+
+    Feed them to ``make_train_step(..., shardings=)`` and reuse
+    ``["state"]`` for initial placement, checkpoint restore
+    (``ckpt.restore(shardings=)``) and elastic resume onto a different
+    mesh.
+    """
+    from repro.models import api
+    from repro.optim.optimizers import adamw, sgd
+    from repro.optim.train_state import init_train_state, state_flat
+
+    params_struct, axes = api.init_struct(cfg)
+    params_struct = jax.eval_shape(
+        lambda p: api.quantize(p, cfg, axes), params_struct)
+    opt = {"adamw": adamw(1e-3), "sgd": sgd(1e-2)}[optimizer]
+    state_struct = jax.eval_shape(
+        lambda p: state_flat(init_train_state(p, opt,
+                                              grad_compress=grad_compress)),
+        params_struct)
+    state_sh = train_state_shardings(axes, params_struct,
+                                     state_struct, mesh)
+
+    sds, i32 = jax.ShapeDtypeStruct, jnp.int32
+    batch_struct = {"tokens": sds((batch, seq), i32),
+                    "labels": sds((batch, seq), i32)}
+    if cfg.family == "encdec":
+        batch_struct["frames"] = sds((batch, seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        batch_struct["prefix_embeds"] = sds(
+            (batch, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
+    return {"state": state_sh,
+            "batch": data_batch_shardings(batch_struct, mesh)}
+
+
+def place_state(state, state_shardings):
+    """device_put every train-state leaf onto its NamedSharding (initial
+    placement / after an unsharded restore)."""
+    return jax.tree.map(
+        lambda x, s: x if (x is None or s is None) else jax.device_put(x, s),
+        state, state_shardings, is_leaf=lambda x: x is None)
+
+
+def device_nbytes(x, dev) -> int:
+    """Bytes of ``x`` resident on one device (its shard, or everything
+    for unsharded/host arrays). Shared by the train/serve CLI reports
+    and the shard/train benchmarks so they agree on what counts as
+    per-device bytes."""
+    try:
+        shards = x.addressable_shards
+    except Exception:  # noqa: BLE001 — numpy / host leaf
+        return int(x.nbytes)
+    for s in shards:
+        if s.device == dev:
+            return int(s.data.nbytes)
+    return 0

@@ -41,6 +41,7 @@ from repro.core.policy import (backend_manifest, effective_bits,
 from repro.core.rules import get_policy
 from repro.core.spec import QuantSpec
 from repro.kernels.ops import BACKENDS
+from repro.launch.partition import device_nbytes
 from repro.models import api
 from repro.models.reduce import reduced
 from repro.nn.tree import tree_paths
@@ -56,17 +57,6 @@ def footprint_bytes(params) -> int:
     return total
 
 
-def _device_nbytes(x, dev) -> int:
-    """Bytes of ``x`` resident on one device (its shard, or everything
-    for unsharded/host arrays)."""
-    try:
-        shards = x.addressable_shards
-    except Exception:  # noqa: BLE001 — numpy / host leaf
-        return int(x.nbytes)
-    for s in shards:
-        if s.device == dev:
-            return int(s.data.nbytes)
-    return 0
 
 
 def device_footprint(params, dev):
@@ -80,10 +70,10 @@ def device_footprint(params, dev):
     q = f = 0
     for _, leaf in tree_paths(params):
         if isinstance(leaf, LutqState):
-            q += sum(_device_nbytes(t, dev)
+            q += sum(device_nbytes(t, dev)
                      for t in (leaf.d, leaf.a, leaf.sid) if t is not None)
         elif leaf is not None and hasattr(leaf, "nbytes"):
-            f += _device_nbytes(leaf, dev)
+            f += device_nbytes(leaf, dev)
     return q, f
 
 
@@ -115,6 +105,50 @@ def shard_report(params, mesh) -> str:
                      f"{nbytes/2**20:.2f} MiB -> "
                      f"{spec if spec is not None else 'unplaced'}")
     return "\n".join(lines)
+
+
+def check_ckpt_shapes(cfg, trainable) -> None:
+    """Fail loudly when a restored train checkpoint doesn't fit the
+    serve config.
+
+    Without this, a vocab/width mismatch serves garbage silently —
+    out-of-bounds embedding gathers clamp under jit instead of raising.
+    Compares every restored trainable leaf against the config's
+    eval_shape structure and reports the offenders with the flags that
+    usually explain them.
+    """
+    from repro.core.policy import split_trainable
+
+    struct, axes = api.init_struct(cfg)
+    struct = jax.eval_shape(lambda p: api.quantize(p, cfg, axes), struct)
+    t_struct, _ = split_trainable(struct)
+
+    bad = []
+
+    def walk(path, exp, got):
+        if isinstance(exp, dict) or isinstance(got, dict):
+            e_keys = set(exp) if isinstance(exp, dict) else set()
+            g_keys = set(got) if isinstance(got, dict) else set()
+            for k in sorted(e_keys | g_keys):
+                if k not in e_keys or k not in g_keys:
+                    bad.append(f"{'/'.join(path + (k,))}: "
+                               f"{'missing from checkpoint' if k not in g_keys else 'not in model'}")
+                else:
+                    walk(path + (k,), exp[k], got[k])
+            return
+        e_shape = getattr(exp, "shape", None)
+        g_shape = getattr(got, "shape", None)
+        if e_shape != g_shape:
+            bad.append(f"{'/'.join(path)}: model {e_shape} vs "
+                       f"checkpoint {g_shape}")
+
+    walk((), t_struct, trainable)
+    if bad:
+        raise SystemExit(
+            "[serve] checkpoint does not fit the serve config "
+            f"({len(bad)} mismatched leaves, e.g. {bad[:3]}). "
+            "--arch/--reduced/--vocab (and the quant policy, when the "
+            "manifest lacks one) must match the training run.")
 
 
 def run_engine(params, cfg, *, capacity: int, n_requests: int,
@@ -182,13 +216,32 @@ def main(argv=None):
                          "caches on data; see docs/sharding.md). On CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N "
                          "first")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve the (d, A) trained by launch/train.py: "
+                         "restore the latest LUT-Q train checkpoint (solo or "
+                         "sharded — the manifest's quant policy supersedes "
+                         "the --quant flags) instead of initializing from "
+                         "--seed; composes with --mesh for the train->serve "
+                         "handoff (see docs/training.md)")
+    ap.add_argument("--vocab", type=int, default=None,
+                    help="override vocab size (must match the checkpoint's "
+                         "when restoring with --ckpt-dir)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    if args.quant_policy:
+    if args.vocab:
+        cfg = cfg.replace(vocab=args.vocab)
+    ckpt_policy = None
+    if args.ckpt_dir:
+        from repro.checkpoint import ckpt as ckpt_mod
+
+        ckpt_policy = ckpt_mod.load_policy(args.ckpt_dir)
+    if ckpt_policy is not None:
+        cfg = cfg.replace(quant=ckpt_policy, act_bits=8)
+    elif args.quant_policy:
         cfg = cfg.replace(quant=get_policy(args.quant_policy), act_bits=8)
     else:
         cfg = cfg.replace(quant=QuantSpec(bits=args.quant_bits, min_size=1024),
@@ -202,9 +255,25 @@ def main(argv=None):
         dsz, msz = parse_mesh_arg(args.mesh)
         mesh = make_host_mesh(dsz, msz)
 
-    params, axes = api.init(jax.random.PRNGKey(args.seed), cfg)
-    fp_bytes = footprint_bytes(params)
-    qparams = api.quantize(params, cfg, axes)
+    if args.ckpt_dir:
+        from repro.checkpoint import ckpt as ckpt_mod
+        from repro.core.policy import merge_trainable
+
+        # params subtrees only, memory-mapped: optimizer moments/EF
+        # residuals are never read, and serve_view's packing decides
+        # what actually lands on device (no eager full-state host copy)
+        state, step = ckpt_mod.restore_params(args.ckpt_dir)
+        check_ckpt_shapes(cfg, state["trainable"])
+        qparams = merge_trainable(state["trainable"], state["static"])
+        axes = api.init_axes(cfg)
+        fp_bytes = footprint_bytes(state["trainable"])
+        print(f"[serve] restored train checkpoint step {step} from "
+              f"{args.ckpt_dir}"
+              + (" (policy from manifest)" if ckpt_policy is not None else ""))
+    else:
+        params, axes = api.init(jax.random.PRNGKey(args.seed), cfg)
+        fp_bytes = footprint_bytes(params)
+        qparams = api.quantize(params, cfg, axes)
     policy = api.resolved_policy(cfg)
     pack = args.pack4 or args.kernel_backend == "packed4"
     sparams = serve_view(qparams, pack4=pack, policy=policy,

@@ -4,9 +4,20 @@ CPU scale (this container):
     PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
         --reduced --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
 
-At pod scale the same driver runs per-host after
-``jax.distributed.initialize()`` with ``--mesh single|multi`` (the mesh
-axes and shardings are identical to the dry-run's).
+Mesh-parallel SPMD training (see docs/training.md). The same step runs
+over a ("data", "model") mesh with FSDP/DP-sharded masters + optimizer
+moments, shard-local step-4 k-means (per-shard sums/counts combined via
+psum — exact, no gather), and optionally the compressed data-parallel
+gradient exchange:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.train --arch h2o-danube-1.8b --reduced \
+        --steps 50 --mesh 2x4 --grad-compress ef --ckpt-dir /tmp/ckpt
+
+The resulting (sharded) checkpoint restores straight into
+``launch/serve.py --ckpt-dir ... --mesh DxM`` — the PR 4 sharded serving
+path. At pod scale the same driver runs per-host after
+``jax.distributed.initialize()`` with the same mesh axes and shardings.
 """
 from __future__ import annotations
 
@@ -15,13 +26,14 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.core.rules import get_policy
 from repro.core.spec import QuantSpec
 from repro.data.synthetic import MarkovLM
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.distributed.compress import (GRAD_COMPRESS_MODES,
+                                        dp_grad_transform, trainable_pspecs)
+from repro.launch.mesh import make_host_mesh, parse_mesh_arg
 from repro.launch import partition
 from repro.models import api
 from repro.models.reduce import reduced
@@ -30,7 +42,7 @@ from repro.optim.train_state import init_train_state, make_train_step, state_fla
 from repro.runtime.loop import TrainLoop
 
 
-def build(args):
+def _train_cfg(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -48,14 +60,69 @@ def build(args):
         cfg = cfg.replace(quant=None, act_bits=32)
     if args.vocab:
         cfg = cfg.replace(vocab=args.vocab)
+    return cfg
+
+
+def build(args, mesh=None):
+    """(cfg, state, step_fn, shardings) for one training run.
+
+    ``mesh=None`` is the solo path (caller jits the returned step).
+    With a mesh the state is placed onto its train NamedShardings and
+    the step comes back jitted with explicit in/out shardings; with
+    ``args.grad_compress`` the compressed-DP grad_transform is installed
+    and the state carries the error-feedback tree.
+    """
+    cfg = _train_cfg(args)
+    compress = getattr(args, "grad_compress", None)
 
     params, axes = api.init(jax.random.PRNGKey(args.seed), cfg)
     params = api.quantize(params, cfg, axes)
     opt = adamw(cosine_schedule(args.lr, args.warmup, args.steps))
-    state = state_flat(init_train_state(params, opt))
+    state = state_flat(init_train_state(params, opt,
+                                        grad_compress=bool(compress)))
+    shardings = None
+    if mesh is not None:
+        shardings = partition.train_shardings(
+            cfg, mesh, batch=args.batch, seq=args.seq,
+            grad_compress=bool(compress))
+        state = partition.place_state(state, shardings["state"])
+    grad_transform = (dp_grad_transform(
+        mesh, mode=compress,
+        pspecs=None if shardings is None
+        else trainable_pspecs(shardings["state"]))
+        if compress else None)
     step_fn = make_train_step(cfg, api.loss_fn, opt,
-                              microbatches=args.microbatches)
-    return cfg, state, step_fn
+                              microbatches=args.microbatches,
+                              grad_transform=grad_transform,
+                              shardings=shardings)
+    return cfg, state, step_fn, shardings
+
+
+def train_report(state, mesh) -> str:
+    """Per-device master/static bytes + the resolved pspecs of the
+    largest trainable leaves (train-side twin of serve's shard_report)."""
+    from repro.launch.partition import device_nbytes
+    from repro.nn.tree import tree_paths
+
+    dev = mesh.devices.flat[0]
+    t_dev = sum(device_nbytes(l, dev)
+                for _, l in tree_paths(state["trainable"])
+                if l is not None and hasattr(l, "nbytes"))
+    s_dev = sum(device_nbytes(l, dev)
+                for _, l in tree_paths(state["static"])
+                if l is not None and hasattr(l, "nbytes"))
+    rows = sorted(((int(l.nbytes), "/".join(p),
+                    getattr(getattr(l, "sharding", None), "spec", None))
+                   for p, l in tree_paths(state["trainable"])
+                   if l is not None and hasattr(l, "nbytes")), reverse=True)
+    mesh_s = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    lines = [f"[train] mesh {mesh_s} ({','.join(mesh.axis_names)}): "
+             f"per-device masters {t_dev/2**20:.2f} MiB + "
+             f"LUT-Q/static {s_dev/2**20:.2f} MiB"]
+    for nbytes, path, spec in rows[:3]:
+        lines.append(f"[train]   {path}: {nbytes/2**20:.2f} MiB -> "
+                     f"{spec if spec is not None else 'unplaced'}")
+    return "\n".join(lines)
 
 
 def main(argv=None):
@@ -86,10 +153,30 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="train SPMD on a (data, model) host mesh, e.g. 2x4 "
+                         "(FSDP/DP masters+moments, tensor-parallel kernels, "
+                         "shard-local k-means; see docs/training.md). On CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first")
+    ap.add_argument("--grad-compress", default=None,
+                    choices=list(GRAD_COMPRESS_MODES),
+                    help="compressed data-parallel gradient exchange: 'ef' = "
+                         "error-feedback int8 (compressed-collective "
+                         "arithmetic), 'ring' = ef + the explicit f16-payload "
+                         "ppermute ring over the data axis")
     args = ap.parse_args(argv)
 
-    cfg, state, step_fn = build(args)
-    step_fn = jax.jit(step_fn)
+    mesh = None
+    if args.mesh:
+        dsz, msz = parse_mesh_arg(args.mesh)
+        mesh = make_host_mesh(dsz, msz)
+
+    cfg, state, step_fn, shardings = build(args, mesh)
+    if mesh is None:
+        step_fn = jax.jit(step_fn)
+    else:
+        print(train_report(state, mesh))
 
     lm = MarkovLM(cfg.vocab, seed=args.data_seed)
 
@@ -109,7 +196,10 @@ def main(argv=None):
     from repro.models.api import resolved_policy
     loop = TrainLoop(step_fn, make_batch, ckpt_dir=args.ckpt_dir,
                      ckpt_every=args.ckpt_every, log_every=10,
-                     quant_policy=resolved_policy(cfg))
+                     quant_policy=resolved_policy(cfg),
+                     shardings=None if shardings is None
+                     else shardings["state"],
+                     mesh=mesh)
     state, step = loop.run(state, args.steps)
     losses = [h["loss"] for h in loop.history]
     if losses:

@@ -54,6 +54,31 @@ def init(key, cfg: ModelConfig):
     raise ValueError(cfg.family)
 
 
+def init_struct(cfg: ModelConfig):
+    """(params ShapeDtypeStruct tree, logical-axes tree) via eval_shape.
+
+    One pass, no allocation — the shared capture for every consumer
+    that needs structure without values (sharding assembly, checkpoint
+    shape validation).
+    """
+    cap = {}
+
+    def f(key):
+        p, a = init(key, cfg)
+        cap["axes"] = a
+        return p
+
+    struct = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return struct, cap["axes"]
+
+
+def init_axes(cfg: ModelConfig):
+    """Logical-axes tree only (see :func:`init_struct`) — used when
+    params come from a checkpoint rather than :func:`init` but sharding
+    decisions still need the logical names."""
+    return init_struct(cfg)[1]
+
+
 def resolved_policy(cfg: ModelConfig):
     """The effective QuantPolicy for a config (None = fp baseline).
 

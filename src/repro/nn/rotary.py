@@ -1,23 +1,45 @@
-"""Rotary position embeddings (GPT-NeoX convention, half-split)."""
+"""Rotary position embeddings (GPT-NeoX convention, half-split).
+
+Sharding note: the obvious half-split implementation (split the Dh dim,
+rotate, concatenate) miscompiles under the SPMD partitioner when Dh is
+sharded — concatenating *computed* tensors along a dim the consumer
+shards produces wrong values (not an error) on the CPU backend, and at
+head-granular tensor parallelism Dh does get sharded whenever the
+mesh's model axis exceeds the head count (e.g. a 1-KV-head GQA k
+projection on a 4-way model axis). The implementation below therefore
+keeps every traced op elementwise on the full-width tensor: the
+frequency/sign tables are built full-width as *host* (numpy) constants,
+and the rotate-half is a ``roll`` + sign mask. Per-element arithmetic is
+unchanged — bit-identical to the half-split form on a single device.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+@functools.lru_cache(maxsize=64)
+def _rope_tables(head_dim: int, theta: float):
+    """(inv_freq doubled, rotate-half sign mask) as host constants."""
     half = head_dim // 2
-    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    inv2 = np.concatenate([inv, inv])
+    sign = np.concatenate([-np.ones(half, np.float32),
+                           np.ones(half, np.float32)])
+    return inv2, sign
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
     """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
     dh = x.shape[-1]
-    inv = rope_freqs(dh, theta)  # (dh/2,)
-    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, dh/2)
+    half = dh // 2
+    inv2, sign = _rope_tables(dh, float(theta))
+    ang = positions[..., None].astype(jnp.float32) * inv2  # (..., S, dh)
     if x.ndim == ang.ndim + 1:  # head axis present
         ang = ang[..., None, :]
-    cos, sin = jnp.cos(ang), jnp.sin(ang)
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    rot = jnp.roll(xf, half, axis=-1) * sign  # (-x2, x1)
+    return (xf * jnp.cos(ang) + rot * jnp.sin(ang)).astype(x.dtype)

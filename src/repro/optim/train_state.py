@@ -27,27 +27,41 @@ class TrainState:
     static: Any             # LUT-Q (d, A) + integer buffers
     opt_state: Any
     step: jax.Array
+    ef: Any = None          # error-feedback residuals (grad compression)
 
     def params(self):
         return merge_trainable(self.trainable, self.static)
 
 
 def state_flat(state: TrainState):
-    return {"trainable": state.trainable, "static": state.static,
-            "opt_state": state.opt_state, "step": state.step}
+    out = {"trainable": state.trainable, "static": state.static,
+           "opt_state": state.opt_state, "step": state.step}
+    if state.ef is not None:
+        out["ef"] = state.ef
+    return out
 
 
 def state_unflat(d) -> TrainState:
-    return TrainState(d["trainable"], d["static"], d["opt_state"], d["step"])
+    return TrainState(d["trainable"], d["static"], d["opt_state"], d["step"],
+                      ef=d.get("ef"))
 
 
-def init_train_state(params, optimizer: Optimizer) -> TrainState:
+def init_train_state(params, optimizer: Optimizer, *,
+                     grad_compress: bool = False) -> TrainState:
+    """``grad_compress=True`` adds the error-feedback residual tree
+    (zeros shaped like the trainable masters) that the compressed-DP
+    ``grad_transform`` carries across steps."""
     trainable, static = split_trainable(params)
+    ef = None
+    if grad_compress:
+        from repro.distributed.compress import init_ef_state
+        ef = init_ef_state(trainable)
     return TrainState(
         trainable=trainable,
         static=static,
         opt_state=optimizer.init(trainable),
         step=jnp.zeros((), jnp.int32),
+        ef=ef,
     )
 
 
@@ -59,12 +73,24 @@ def make_train_step(
     microbatches: int = 1,
     clip_norm: Optional[float] = 1.0,
     grad_transform: Optional[Callable] = None,
+    shardings: Optional[Dict[str, Any]] = None,
+    kmeans_impl: Optional[str] = None,
 ):
-    """Build the jit-able train step.
+    """Build the train step; jit-able, or already jitted when meshed.
 
     loss_fn(params, cfg, batch) -> (loss, metrics).
-    grad_transform: optional hook (grads -> grads), e.g. compressed
-    all-reduce installed by the distributed layer.
+    grad_transform: optional hook ``(grads, ef) -> (grads, ef)`` — the
+    compressed-DP gradient exchange built by
+    ``repro.distributed.compress.dp_grad_transform`` (``ef`` is the
+    state-carried error-feedback tree, ``None`` when compression is
+    off).
+    shardings: the dict from ``repro.launch.partition.train_shardings``
+    ({"state": ..., "batch": ...} NamedSharding trees). When given, the
+    returned function is jitted with explicit in/out shardings — the
+    mesh-parallel SPMD train step; otherwise the caller jits (solo
+    path, unchanged).
+    kmeans_impl: force the step-4 implementation per
+    ``repro.core.lutq.resolve_kmeans_impl`` (None = structural).
     """
 
     def split_micro(batch):
@@ -103,8 +129,9 @@ def make_train_step(
             (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
                 trainable, batch)
 
+        new_ef = state.get("ef")
         if grad_transform is not None:
-            grads = grad_transform(grads)
+            grads, new_ef = grad_transform(grads, new_ef)
 
         gn = jnp.zeros((), jnp.float32)
         if clip_norm is not None:
@@ -116,18 +143,29 @@ def make_train_step(
 
         # step 4: k-means refresh of every (d, A), per-leaf spec via the
         # config's resolved policy (rule ids must line up with the ones
-        # stamped at quantize time, hence resolved_policy not cfg.quant)
+        # stamped at quantize time, hence resolved_policy not cfg.quant).
+        # Under a mesh the segsum/stats formulations keep every op
+        # elementwise-or-full-reduction, so the partitioner runs them on
+        # the master's shards and combines per-shard sums/counts with one
+        # psum — the dictionary update is exact with no gather.
         new_static = static
         if cfg.quant is not None:
             from repro.models.api import resolved_policy
             merged = merge_trainable(new_trainable, static)
-            merged = kmeans_tree(merged, resolved_policy(cfg))
+            merged = kmeans_tree(merged, resolved_policy(cfg),
+                                 impl=kmeans_impl)
             _, new_static = split_trainable(merged)
 
         new_state = {"trainable": new_trainable, "static": new_static,
                      "opt_state": new_opt, "step": state["step"] + 1}
+        if "ef" in state:
+            new_state["ef"] = new_ef
         out_metrics = {"loss": loss, "grad_norm": gn, **{k: v for k, v in
                        (metrics.items() if isinstance(metrics, dict) else [])}}
         return new_state, out_metrics
 
+    if shardings is not None:
+        return jax.jit(train_step,
+                       in_shardings=(shardings["state"], shardings["batch"]),
+                       out_shardings=(shardings["state"], None))
     return train_step

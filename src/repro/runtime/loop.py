@@ -7,9 +7,12 @@ fault-tolerance mechanisms are real and tested:
   * auto-resume: restores the latest complete checkpoint on start;
   * preemption: SIGTERM/SIGINT triggers a final synchronous checkpoint
     before exit (TPU preemption notice pattern);
-  * straggler watchdog: a monitor thread flags steps slower than
+  * straggler watchdog: flags sync windows whose per-step time exceeds
     `straggler_factor` x the trailing median — on a real pod this feeds
     the controller's slow-host eviction; here it logs and counts.
+    (Observation granularity is the metrics sync cadence — log_every /
+    checkpoint — since the loop keeps metrics as pending device handles
+    between syncs rather than blocking every step.)
 """
 from __future__ import annotations
 
@@ -22,7 +25,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
+                                   prune_shardings, restore)
 
 
 class StragglerWatchdog:
@@ -55,15 +59,24 @@ class TrainLoop:
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
         quant_policy=None,
+        shardings=None,
+        mesh=None,
     ):
+        """``shardings``: optional NamedSharding tree matching the train
+        state (``partition.train_shardings(...)["state"]``) — resume then
+        restores each checkpoint leaf straight onto its device placement
+        (elastic: the mesh may differ from the one recorded at save
+        time). ``mesh`` is recorded in checkpoint manifests."""
         self.train_step = train_step
         self.make_batch = make_batch
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.log = log_fn
+        self.shardings = shardings
         self.watchdog = StragglerWatchdog()
-        self.ckpt = (AsyncCheckpointer(ckpt_dir, keep_n, policy=quant_policy)
+        self.ckpt = (AsyncCheckpointer(ckpt_dir, keep_n, policy=quant_policy,
+                                       mesh=mesh)
                      if ckpt_dir else None)
         self._preempted = threading.Event()
         self.history: List[Dict[str, float]] = []
@@ -79,19 +92,39 @@ class TrainLoop:
             pass  # not main thread (tests)
 
     def maybe_resume(self, state):
-        """Restore latest checkpoint if present; returns (state, start_step)."""
+        """Restore latest checkpoint if present; returns (state, start_step).
+
+        With ``shardings`` set, every stored leaf is mmap-loaded and
+        ``device_put`` directly onto its NamedSharding inside
+        :func:`repro.checkpoint.ckpt.restore` — the restored tree keeps
+        (or acquires, on an elastic re-mesh) the caller's device
+        placement instead of being pulled to host. Leaves absent from
+        the checkpoint (e.g. fresh EF state after turning compression
+        on) keep their live value.
+        """
         if not self.ckpt_dir:
             return state, 0
         last = latest_step(self.ckpt_dir)
         if last is None:
             return state, 0
-        restored, step = restore(self.ckpt_dir)
-        # graft restored arrays into the live state tree (keeps shardings
-        # decided by the caller — elastic restore)
-        state = jax.tree.map(
-            lambda cur, new: cur if new is None else
-            (np.asarray(new) if cur is None else jax.numpy.asarray(new, dtype=cur.dtype)),
-            state, restored, is_leaf=lambda x: x is None)
+        shardings = self.shardings
+        if shardings is not None:
+            # drop shardings for leaves the checkpoint predates (e.g. EF
+            # residuals after enabling grad compression mid-run) — those
+            # keep their live value via the graft below
+            shardings = prune_shardings(self.ckpt_dir, shardings)
+        restored, step = restore(self.ckpt_dir, shardings=shardings)
+
+        def graft(cur, new):
+            if new is None:
+                return cur
+            if isinstance(cur, dict):
+                return {k: graft(cur[k],
+                                 new.get(k) if isinstance(new, dict) else None)
+                        for k in cur}
+            return new
+
+        state = graft(state, restored)
         self.log(f"[loop] resumed from step {step}")
         return state, int(step)
 
@@ -100,26 +133,49 @@ class TrainLoop:
             self._install_signal_handlers()
         state, start = self.maybe_resume(state)
         step = start
+        # Metrics stay pending device handles between sync points (the
+        # log/checkpoint cadence + loop exit): dispatching step N+1 while
+        # N still computes is what keeps the device busy. A per-step
+        # block_until_ready would serialize host and device (the PR 3
+        # engine fix, applied to training).
+        pending: List[tuple] = []
+        t_mark = time.perf_counter()
+
+        def drain():
+            nonlocal t_mark
+            if not pending:
+                return
+            jax.block_until_ready(pending[-1][1])
+            dt = (time.perf_counter() - t_mark) / len(pending)
+            t_mark = time.perf_counter()
+            slow = self.watchdog.observe(dt)
+            for s, metrics in pending:
+                self.history.append(
+                    {"step": s, "dt": dt,
+                     **{k: float(v) for k, v in metrics.items()
+                        if np.ndim(v) == 0}})
+            if slow:
+                self.log(f"[watchdog] window at step {pending[-1][0]} "
+                         f"straggled: {dt*1e3:.1f} ms/step (median "
+                         f"{statistics.median(self.watchdog.times[-32:])*1e3:.1f} ms)")
+            pending.clear()
+
         while step < num_steps and not self._preempted.is_set():
             batch = self.make_batch(step)
-            t0 = time.perf_counter()
             state, metrics = self.train_step(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
-            slow = self.watchdog.observe(dt)
-            rec = {"step": step, "dt": dt,
-                   **{k: float(v) for k, v in metrics.items()
-                      if np.ndim(v) == 0}}
-            self.history.append(rec)
-            if slow:
-                self.log(f"[watchdog] step {step} straggled: {dt*1e3:.1f} ms "
-                         f"(median {statistics.median(self.watchdog.times[-32:])*1e3:.1f} ms)")
-            if step % self.log_every == 0:
-                self.log(f"[train] step {step} loss {rec.get('loss', float('nan')):.4f} "
-                         f"{dt*1e3:.1f} ms")
+            pending.append((step, metrics))
             step += 1
-            if self.ckpt and (step % self.ckpt_every == 0):
+            due_ckpt = self.ckpt and (step % self.ckpt_every == 0)
+            if (step % self.log_every == 0) or due_ckpt:
+                drain()
+            if step % self.log_every == 0 and self.history:
+                rec = self.history[-1]
+                self.log(f"[train] step {rec['step']} "
+                         f"loss {rec.get('loss', float('nan')):.4f} "
+                         f"{rec['dt']*1e3:.1f} ms")
+            if due_ckpt:
                 self.ckpt.save(state, step)
+        drain()
         if self.ckpt and (self._preempted.is_set() or step >= num_steps):
             self.ckpt.save(state, step)
             self.ckpt.wait()

@@ -1,0 +1,446 @@
+"""SPMD LUT-Q training: mesh-parallel train step end-to-end.
+
+Pins the PR-5 acceptance contract on the forced 8-device host platform
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the CI
+``tier1-sharded`` job):
+
+  * the 2x4 ("data", "model") train step matches the solo loss
+    trajectory — near-bitwise on the first step, bounded tracking over
+    50 steps (backward psums over sharded weight dims make strict
+    bitwise impossible; their ~1e-7 reduction-order noise is amplified
+    by training chaos, so the trajectory contract is initial
+    near-exactness + tight tracking + matched convergence);
+  * masters/moments/EF state genuinely FSDP/TP-shard (real shards, not
+    replicas) while LUT-Q dictionaries replicate, so the step-4 recenter
+    is exact on shards;
+  * compressed-DP gradients (ef / explicit ring) converge with the
+    uncompressed run, and the ring mode ships real ppermute traffic;
+  * TrainLoop syncs metrics only on the log/checkpoint cadence and
+    resumes through ckpt.restore(shardings=) — including elastic resume
+    onto a different mesh;
+  * a sharded train checkpoint restores straight into the PR 4 sharded
+    serving path with token-identical generation vs the solo-trained
+    checkpoint.
+
+Everything here skips on a single-device process (plain tier-1 runs).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.lutq import LutqState
+from repro.core.spec import QuantSpec
+from repro.data.synthetic import MarkovLM
+from repro.distributed.compress import (dp_grad_transform, dp_wire_bytes,
+                                        trainable_pspecs)
+from repro.launch import partition
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.models.reduce import reduced
+from repro.optim.optimizers import adamw
+from repro.optim.train_state import init_train_state, make_train_step, state_flat
+from repro.runtime.loop import TrainLoop
+
+pytestmark = [
+    pytest.mark.sharded,
+    pytest.mark.slow,
+    pytest.mark.skipif(
+        len(jax.devices()) < 8,
+        reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8"),
+]
+
+ARCH = "h2o-danube-1.8b"
+B, S = 4, 16
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh(d=2, m=4):
+    return make_host_mesh(d, m)
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg(arch=ARCH):
+    return reduced(get_config(arch)).replace(
+        vocab=48, act_bits=8,
+        quant=QuantSpec(bits=4, kmeans_iters=1, min_size=4096,
+                        constraint="pow2"))
+
+
+@functools.lru_cache(maxsize=None)
+def _init_params(arch=ARCH):
+    cfg = _cfg(arch)
+    params, axes = api.init(jax.random.PRNGKey(0), cfg)
+    return api.quantize(params, cfg, axes), axes
+
+
+def _build(mesh=None, *, compress=None, arch=ARCH, lr=1e-3):
+    cfg = _cfg(arch)
+    params, _ = _init_params(arch)
+    opt = adamw(lr)
+    state = state_flat(init_train_state(params, opt,
+                                        grad_compress=bool(compress)))
+    sh = None
+    if mesh is not None:
+        sh = partition.train_shardings(cfg, mesh, batch=B, seq=S,
+                                       grad_compress=bool(compress))
+        state = partition.place_state(state, sh["state"])
+    gt = (dp_grad_transform(mesh, mode=compress,
+                            pspecs=None if sh is None
+                            else trainable_pspecs(sh["state"]))
+          if compress else None)
+    step_fn = make_train_step(cfg, api.loss_fn, opt, grad_transform=gt,
+                              shardings=sh)
+    if mesh is None:
+        step_fn = jax.jit(step_fn)
+    return cfg, state, step_fn, sh
+
+
+def _run(mesh=None, *, steps=20, compress=None, ckpt_dir=None, arch=ARCH):
+    cfg, state, step_fn, sh = _build(mesh, compress=compress, arch=arch)
+    lm = MarkovLM(cfg.vocab, seed=0)
+
+    def make_batch(n):
+        return {k: jnp.asarray(v) for k, v in lm.batch(0, n, B, S).items()}
+
+    loop = TrainLoop(step_fn, make_batch, ckpt_dir=ckpt_dir, ckpt_every=1000,
+                     log_every=10, log_fn=lambda *_: None,
+                     shardings=None if sh is None else sh["state"], mesh=mesh)
+    state, step = loop.run(state, steps, handle_signals=False)
+    return cfg, state, [h["loss"] for h in loop.history], loop
+
+
+# ---------------------------------------------------------------------------
+# acceptance: loss-trajectory parity solo vs 2x4
+# ---------------------------------------------------------------------------
+
+def test_loss_trajectory_parity_solo_vs_mesh():
+    steps = 50
+    _, _, solo, _ = _run(None, steps=steps)
+    _, _, mesh, _ = _run(_mesh(), steps=steps)
+    assert len(solo) == len(mesh) == steps
+    rels = [abs(a - b) / abs(a) for a, b in zip(solo, mesh)]
+    # first step: reduction-order noise only (no chaos amplification yet)
+    assert rels[0] < 1e-5, rels[0]
+    # whole trajectory tracks tightly and converges to the same level
+    assert max(rels) < 0.03, (max(rels), rels)
+    assert sum(rels) / len(rels) < 0.01, rels
+    assert mesh[-1] < mesh[0] * 0.9 and solo[-1] < solo[0] * 0.9
+
+
+def test_state_actually_sharded_and_dicts_replicated():
+    mesh = _mesh()
+    _, state, step_fn, sh = _build(mesh)
+    lm = MarkovLM(48, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in lm.batch(0, 0, B, S).items()}
+    state, _ = step_fn(state, batch)
+
+    def shard_frac(x):
+        return x.addressable_shards[0].data.size / x.size
+
+    from repro.nn.tree import tree_paths
+    sharded_masters = [p for p, l in tree_paths(state["trainable"])
+                       if l is not None and hasattr(l, "addressable_shards")
+                       and shard_frac(l) < 1.0]
+    assert len(sharded_masters) >= 3, sharded_masters
+    # optimizer moments mirror the masters' placement
+    sharded_moments = [p for p, l in tree_paths(state["opt_state"]["m"])
+                       if l is not None and hasattr(l, "addressable_shards")
+                       and shard_frac(l) < 1.0]
+    assert len(sharded_moments) >= 3
+    # every LUT-Q dictionary (and sid) is fully replicated after step 4
+    for p, l in tree_paths(state["static"]):
+        if l is None or not hasattr(l, "sharding"):
+            continue
+        name = p[-1]
+        if name in ("__lutq_d", "__lutq_sid"):
+            assert shard_frac(l) == 1.0, (p, l.sharding)
+
+
+def test_kmeans_exact_on_shards():
+    """segsum step 4 on a sharded master == the solo dense result: the
+    per-shard sums/counts are combined by the partitioner's psum, so the
+    dictionary update is exact (clusters partition elements)."""
+    from repro.core.lutq import kmeans_update, kmeans_update_segsum
+    from repro.core import init_dictionary
+
+    mesh = _mesh()
+    spec = QuantSpec(bits=4, kmeans_iters=2)
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    d0 = init_dictionary(w, spec)
+    d_ref, a_ref = kmeans_update(w, d0, spec)
+    ws = jax.device_put(w, NamedSharding(mesh, P("data", "model")))
+    d_sh, a_sh = jax.jit(lambda w, d: kmeans_update_segsum(w, d, spec))(ws, d0)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_sh),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_sh))
+
+
+def test_train_shardings_lru_cache_and_fsdp():
+    mesh = _mesh()
+    cfg = _cfg()
+    sh1 = partition.train_shardings(cfg, mesh, batch=B, seq=S)
+    sh2 = partition.train_shardings(cfg, mesh, batch=B, seq=S)
+    assert sh1 is sh2  # cached per (cfg, mesh, batch geometry)
+    assert partition.train_shardings(cfg, mesh, batch=B, seq=S,
+                                     grad_compress=True) is not sh1
+    assert "ef" not in sh1["state"]
+    # at least one master sharded over the FSDP "data" axis
+    specs = [s.spec for s in jax.tree.leaves(
+        sh1["state"]["trainable"], is_leaf=lambda x: x is None)
+        if s is not None]
+    assert any("data" in jax.tree.leaves(tuple(sp)) for sp in specs)
+
+
+# ---------------------------------------------------------------------------
+# compressed-DP gradients
+# ---------------------------------------------------------------------------
+
+def test_compressed_mesh_tracks_uncompressed():
+    steps = 40
+    _, _, base, _ = _run(_mesh(), steps=steps)
+    _, _, comp, _ = _run(_mesh(), steps=steps, compress="ef")
+    assert comp[-1] < comp[0] * 0.8, comp[::10]
+    assert abs(comp[-1] - base[-1]) / base[-1] < 0.15, (base[-1], comp[-1])
+
+
+def test_ring_mode_ships_ppermute_and_tracks_ef():
+    mesh = _mesh()
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (48, 32)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (32,)),
+             "none": None}
+    from repro.distributed.compress import init_ef_state
+    ef = init_ef_state(grads)
+    t_ef = dp_grad_transform(mesh, mode="ef")
+    t_ring = dp_grad_transform(mesh, mode="ring")
+    g_ef, e_ef = jax.jit(t_ef)(grads, ef)
+    g_ring, e_ring = jax.jit(t_ring)(grads, ef)
+    for a, b in zip(jax.tree.leaves(g_ef), jax.tree.leaves(g_ring)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+    hlo = jax.jit(t_ring).lower(grads, ef).compile().as_text()
+    assert "collective-permute" in hlo  # the explicit ring is on the wire
+    assert "collective-permute" not in jax.jit(t_ef).lower(
+        grads, ef).compile().as_text()
+
+
+def test_ring_mode_gather_free_on_shards():
+    """With pspecs threaded, the ring operates on local shards: FSDP
+    (data-sharded) leaves take the EF path, model-sharded leaves ring
+    as-is — the compiled exchange inserts no all-gather of gradients."""
+    from repro.distributed.compress import init_ef_state
+
+    mesh = _mesh()
+    grads = {"fsdp": jax.device_put(
+                 jax.random.normal(jax.random.PRNGKey(0), (64, 32)),
+                 NamedSharding(mesh, P("data", "model"))),
+             "tp": jax.device_put(
+                 jax.random.normal(jax.random.PRNGKey(1), (48, 32)),
+                 NamedSharding(mesh, P(None, "model")))}
+    ef = jax.device_put(init_ef_state(grads),
+                        {"fsdp": NamedSharding(mesh, P("data", "model")),
+                         "tp": NamedSharding(mesh, P(None, "model"))})
+    pspecs = {"fsdp": P("data", "model"), "tp": P(None, "model")}
+    t = dp_grad_transform(mesh, mode="ring", pspecs=pspecs)
+    g, e = jax.jit(t)(grads, ef)
+    hlo = jax.jit(t).lower(grads, ef).compile().as_text()
+    assert "collective-permute" in hlo  # tp leaf rings
+    assert "all-gather" not in hlo      # nothing replicated to ring
+    # every leaf stays within int8-quantization distance of the input
+    # (the sharded ring quantizes per *shard* scale — finer than ef's
+    # per-tensor scale, so not bitwise-comparable to it)
+    for k in ("fsdp", "tp"):
+        raw, out = np.asarray(grads[k]), np.asarray(g[k])
+        bound = 1.5 * np.abs(raw).max() / 127.0
+        np.testing.assert_allclose(out, raw, atol=bound)
+        assert float(np.abs(np.asarray(e[k])).sum()) > 0  # EF carries
+
+
+def test_ring_mode_trains():
+    _, _, losses, _ = _run(_mesh(), steps=20, compress="ring")
+    assert losses[-1] < losses[0], losses
+
+
+def test_dp_wire_bytes_model():
+    grads = {"w": jnp.zeros((1000, 100), jnp.float32), "n": None}
+    un = dp_wire_bytes(grads, 2, None)
+    ef = dp_wire_bytes(grads, 2, "ef")
+    ring = dp_wire_bytes(grads, 2, "ring")
+    assert un == 100000 * 4  # 2*(n-1)/n == 1 at n=2
+    assert ef < ring < un
+    assert dp_wire_bytes(grads, 1, "ef") == 0
+
+
+def test_grad_compress_requires_ef_state():
+    t = dp_grad_transform(_mesh(), mode="ef")
+    with pytest.raises(ValueError, match="error-feedback"):
+        t({"w": jnp.zeros((4,))}, None)
+    with pytest.raises(ValueError, match="unknown grad-compress"):
+        dp_grad_transform(_mesh(), mode="zip")
+
+
+# ---------------------------------------------------------------------------
+# TrainLoop: deferred metric sync + sharded/elastic resume
+# ---------------------------------------------------------------------------
+
+def test_trainloop_syncs_only_on_cadence(monkeypatch):
+    calls = []
+    real = jax.block_until_ready
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", counting)
+    cfg, state, step_fn, _ = _build(None)
+    lm = MarkovLM(cfg.vocab, seed=0)
+    loop = TrainLoop(step_fn, lambda n: {k: jnp.asarray(v) for k, v in
+                                         lm.batch(0, n, B, S).items()},
+                     log_every=10, log_fn=lambda *_: None)
+    loop.run(state, 30, handle_signals=False)
+    # 30 steps / log_every=10 -> 3 cadence syncs (+1 final drain at most)
+    assert len(calls) <= 4, len(calls)
+    assert len(loop.history) == 30
+    assert all(np.isfinite(h["loss"]) for h in loop.history)
+
+
+def test_sharded_ckpt_resume_in_place(tmp_path):
+    mesh = _mesh()
+    _, state, _, _ = _run(mesh, steps=6, ckpt_dir=str(tmp_path))
+    from repro.checkpoint.ckpt import load_mesh
+    assert load_mesh(str(tmp_path)) == {"axes": ["data", "model"],
+                                        "shape": [2, 4]}
+    cfg, state2, step_fn, sh = _build(mesh)
+    loop = TrainLoop(step_fn, lambda n: None, ckpt_dir=str(tmp_path),
+                     log_fn=lambda *_: None, shardings=sh["state"], mesh=mesh)
+    resumed, start = loop.maybe_resume(state2)
+    assert start == 6
+    # leaves land already committed to their NamedShardings, not host
+    leaf = resumed["step"]
+    assert int(leaf) == 6
+    for l, s in zip(jax.tree.leaves(resumed["trainable"]),
+                    jax.tree.leaves(sh["state"]["trainable"],
+                                    is_leaf=lambda x: x is None)):
+        if s is not None:
+            assert isinstance(l.sharding, NamedSharding)
+    # grafted values equal the trained state's
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_resume_with_newly_enabled_compression(tmp_path):
+    """Turning --grad-compress on mid-run: the checkpoint predates the
+    EF residuals, so their shardings are pruned before restore and the
+    fresh zero residuals keep their live (placed) value."""
+    mesh = _mesh()
+    _run(mesh, steps=6, ckpt_dir=str(tmp_path))  # saved WITHOUT ef
+    cfg, state, step_fn, sh = _build(mesh, compress="ef")
+    assert "ef" in state
+    loop = TrainLoop(step_fn, lambda n: None, ckpt_dir=str(tmp_path),
+                     log_fn=lambda *_: None, shardings=sh["state"], mesh=mesh)
+    resumed, start = loop.maybe_resume(state)  # must not raise
+    assert start == 6 and "ef" in resumed
+    for l in jax.tree.leaves(resumed["ef"], is_leaf=lambda x: x is None):
+        if l is not None:
+            assert float(jnp.sum(jnp.abs(l))) == 0.0  # fresh residuals
+
+
+def test_elastic_resume_onto_different_mesh(tmp_path):
+    """Train on 2x4, resume on 8x1 (and solo) — the stored global arrays
+    land on whatever mesh the new job runs with."""
+    _, state, losses, _ = _run(_mesh(), steps=6, ckpt_dir=str(tmp_path))
+    mesh81 = _mesh(8, 1)
+    cfg, state2, step_fn, sh = _build(mesh81)
+    lm = MarkovLM(cfg.vocab, seed=0)
+    loop = TrainLoop(step_fn, lambda n: {k: jnp.asarray(v) for k, v in
+                                         lm.batch(0, n, B, S).items()},
+                     ckpt_dir=str(tmp_path), log_fn=lambda *_: None,
+                     shardings=sh["state"], mesh=mesh81)
+    state3, step = loop.run(state2, 10, handle_signals=False)
+    assert step == 10 and len(loop.history) == 4  # resumed at 6
+    assert all(np.isfinite(h["loss"]) for h in loop.history)
+    # and a solo resume of the same sharded checkpoint
+    cfgs, states, stepfns, _ = _build(None)
+    loops = TrainLoop(stepfns, lambda n: {k: jnp.asarray(v) for k, v in
+                                          lm.batch(0, n, B, S).items()},
+                      ckpt_dir=str(tmp_path), log_fn=lambda *_: None)
+    _, steps_ = loops.run(states, 12, handle_signals=False)
+    assert steps_ == 12 and len(loops.history) == 2  # resumed at 10
+
+
+# ---------------------------------------------------------------------------
+# acceptance: train -> serve handoff (sharded ckpt into sharded serving)
+# ---------------------------------------------------------------------------
+
+def test_train_to_serve_handoff_token_identical(tmp_path):
+    """One mesh-trained checkpoint, served solo and through the PR 4
+    sharded serving path: generation must be token-identical (the serve
+    parity contract, now fed by *trained* (d, A) instead of init)."""
+    from repro.checkpoint.ckpt import restore
+    from repro.core.policy import merge_trainable, serve_view
+    from repro.runtime.serving import generate
+
+    mesh_dir = str(tmp_path / "mesh")
+    cfg, _, _, _ = _run(_mesh(), steps=8, ckpt_dir=mesh_dir)
+
+    scfg = cfg.replace(kernel_backend="fused")
+    _, axes = _init_params()
+    state, step = restore(mesh_dir)
+    assert step == 8
+    params = merge_trainable(state["trainable"], state["static"])
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (4, 8), 0, scfg.vocab)}
+    outs = {}
+    for tag, mesh in [("solo", None), ("mesh", _mesh())]:
+        sv = serve_view(params, policy=api.resolved_policy(scfg),
+                        mesh=mesh, axes=axes)
+        outs[tag] = np.asarray(generate(sv, scfg, batch, steps=6, mesh=mesh))
+    np.testing.assert_array_equal(outs["solo"], outs["mesh"])
+
+
+def test_serve_cli_restores_train_ckpt(tmp_path, capsys):
+    from repro.launch.serve import main as serve_main
+    from repro.launch.train import main as train_main
+
+    rc = train_main(["--arch", ARCH, "--reduced", "--steps", "6",
+                     "--batch", "4", "--seq", "16", "--vocab", "48",
+                     "--mesh", "2x4", "--ckpt-dir", str(tmp_path)])
+    assert rc == 0
+    rc = serve_main(["--arch", ARCH, "--reduced", "--vocab", "48",
+                     "--batch", "2", "--prompt-len", "8", "--gen", "4",
+                     "--kernel-backend", "fused", "--mesh", "2x4",
+                     "--ckpt-dir", str(tmp_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "restored train checkpoint step 6" in out
+    assert "mesh 2x4" in out
+
+
+def test_serve_cli_rejects_mismatched_ckpt(tmp_path):
+    """A checkpoint trained at one vocab served at another must fail
+    loudly — out-of-bounds embedding gathers clamp silently under jit."""
+    from repro.launch.serve import main as serve_main
+    from repro.launch.train import main as train_main
+
+    rc = train_main(["--arch", ARCH, "--reduced", "--steps", "2",
+                     "--batch", "2", "--seq", "8", "--vocab", "48",
+                     "--ckpt-dir", str(tmp_path)])
+    assert rc == 0
+    with pytest.raises(SystemExit, match="does not fit the serve config"):
+        serve_main(["--arch", ARCH, "--reduced", "--vocab", "96",
+                    "--batch", "2", "--prompt-len", "8", "--gen", "2",
+                    "--ckpt-dir", str(tmp_path)])
+
+
+def test_train_cli_mesh_smoke(capsys):
+    from repro.launch.train import main as train_main
+
+    rc = train_main(["--arch", ARCH, "--reduced", "--steps", "8",
+                     "--batch", "4", "--seq", "16", "--vocab", "48",
+                     "--mesh", "2x4", "--grad-compress", "ef"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "mesh 2x4" in out and "per-device masters" in out
