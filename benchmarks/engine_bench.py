@@ -57,7 +57,7 @@ def _pctl(xs, q):
 def serve_static(params, cfg, reqs, *, capacity, max_len):
     """Lock-step batches of ``capacity`` in arrival order (virtual clock)."""
     clock = 0.0
-    lat, n_good = [], 0
+    lat, ttft, n_good = [], [], 0
     batches = [reqs[i:i + capacity] for i in range(0, len(reqs), capacity)]
     for group in batches:
         clock = max(clock, max(r["arrival_s"] for r in group))
@@ -68,11 +68,15 @@ def serve_static(params, cfg, reqs, *, capacity, max_len):
         for i, r in enumerate(group):
             toks[i, :lens[i]] = r["tokens"]
         t0 = time.perf_counter()
-        generate(params, cfg, {"tokens": jnp.asarray(toks)}, steps=steps,
-                 lengths=lens, max_len=max_len)
+        _, gstats = generate(params, cfg, {"tokens": jnp.asarray(toks)},
+                             steps=steps, lengths=lens, max_len=max_len,
+                             return_stats=True)
         clock += time.perf_counter() - t0
+        # every stream's first token lands when the batched prefill ends
+        t_first = clock - (time.perf_counter() - t0) + gstats["t_prefill_s"]
         for r in group:
             lat.append(clock - r["arrival_s"])
+            ttft.append(max(t_first - r["arrival_s"], 0.0))
             n_good += r["max_new"]
     return {
         "discipline": "static",
@@ -81,6 +85,8 @@ def serve_static(params, cfg, reqs, *, capacity, max_len):
         "goodput_tok_s": n_good / max(clock, 1e-9),
         "p50_latency_s": _pctl(lat, 50),
         "p95_latency_s": _pctl(lat, 95),
+        "ttft_p50_s": _pctl(ttft, 50),
+        "ttft_p99_s": _pctl(ttft, 99),
     }
 
 
@@ -98,14 +104,18 @@ def warm_engine_traces(params, cfg, *, capacity, max_len, bucket, vocab):
         eng.run()
 
 
-def serve_continuous(params, cfg, reqs, *, capacity, max_len, bucket=1):
-    """Slot-pool engine fed by the arrival process (virtual clock)."""
+def serve_continuous(params, cfg, reqs, *, capacity, max_len, bucket=1,
+                     kv_pages=None, page_size=64):
+    """Continuous-batching engine fed by the arrival process (virtual
+    clock). ``kv_pages`` runs it on the paged KV cache (block-table
+    pages, prefix sharing, chunked bucketed prefill)."""
     eng = Engine(params, cfg, capacity=capacity, max_len=max_len,
-                 prefill_bucket=bucket)
+                 prefill_bucket=bucket, kv_pages=kv_pages,
+                 page_size=page_size)
     pending = deque(reqs)
     arrival = {}
     clock = 0.0
-    lat, n_good = [], 0
+    lat, ttft, n_good = [], [], 0
     while pending or not eng.idle:
         while pending and pending[0]["arrival_s"] <= clock:
             r = dict(pending.popleft())
@@ -120,15 +130,33 @@ def serve_continuous(params, cfg, reqs, *, capacity, max_len, bucket=1):
         clock += time.perf_counter() - t0
         for res in retired:
             lat.append(clock - arrival[res["rid"]])
+            # submit->first-token is measured compute (the loop's clock
+            # advances only by step() wall time), so the engine's wall
+            # TTFT is the virtual TTFT up to host bookkeeping noise
+            ttft.append(res["t_first_token_s"])
             n_good += res["n_new"]
-    return {
-        "discipline": "continuous",
-        "decode_steps": eng.stats()["decode_steps"],
+    st = eng.stats()
+    out = {
+        "discipline": "paged" if eng.paged else "continuous",
+        "decode_steps": st["decode_steps"],
         "makespan_s": clock,
         "goodput_tok_s": n_good / max(clock, 1e-9),
         "p50_latency_s": _pctl(lat, 50),
         "p95_latency_s": _pctl(lat, 95),
+        "ttft_p50_s": _pctl(ttft, 50),
+        "ttft_p99_s": _pctl(ttft, 99),
     }
+    if eng.paged:
+        bpt = st["kv_bytes_per_token"]
+        per_req = [r["kv_pages"] * st["page_size"] * bpt
+                   for r in eng.results.values()]
+        out.update(
+            kv_pages=st["kv_pages"], page_size=st["page_size"],
+            pages_peak=st["pages_peak"], kv_bytes_per_token=bpt,
+            kv_bytes_per_request_mean=float(np.mean(per_req)) if per_req
+            else 0.0,
+            prefix_hit_rate=st.get("prefix_hit_rate", 0.0))
+    return out
 
 
 def main(argv=None):
@@ -200,6 +228,56 @@ def main(argv=None):
                 for _ in range(3)),
                key=lambda r: r["makespan_s"])
 
+    # ---- paged overload: 10x the request count, all arriving at t=0,
+    # on a page pool holding HALF the slot pool's KV bytes. An equal-
+    # byte slot engine only affords pool_tokens // max_len slots, so
+    # this workload "fits" at full concurrency only under paging. The
+    # requests share a one-page system prompt + unique tails — the
+    # production shape prefix sharing exists for: the shared page is
+    # mapped (not recomputed) for every request after the first, and
+    # ragged per-request reservations pack the pool where fixed
+    # max_len slots fragment it. CI gates the ratios below (see
+    # .github/workflows/ci.yml)
+    page_size = 16
+    n_blocks = -(-max_len // page_size)
+    pool_pages = args.max_batch * n_blocks // 2 + 1  # +1: trash page
+    eq_slots = max(((pool_pages - 1) * page_size) // max_len, 1)
+    n_over = 10 * n
+    orng = np.random.default_rng(args.seed + 1)
+    sys_prompt = orng.integers(0, cfg.vocab,
+                               size=(page_size,)).astype(np.int32)
+    over = []
+    for _ in range(n_over):
+        tail = orng.integers(
+            0, cfg.vocab, size=(int(orng.integers(1, 9)),)).astype(np.int32)
+        over.append({"tokens": np.concatenate([sys_prompt, tail]),
+                     "max_new": int(orng.integers(4, 13)), "arrival_s": 0.0})
+    kw = dict(capacity=args.max_batch, max_len=max_len, bucket=bucket)
+    # warm every engine's traces, then measure best-of-3 (same CPU-noise
+    # rationale as the static-vs-continuous comparison above). The gated
+    # baseline is the STATIC slot pool at the equal byte budget (the
+    # pre-engine discipline paging is sold against); the continuous
+    # equal-byte engine is also reported — against it the structural
+    # win is the decode-step count (concurrency), while CPU wall-clock
+    # goodput is ~parity because a CPU decode step costs linearly in
+    # batch width (on accelerators decode is memory-bound and width is
+    # ~free, which is the regime paging targets)
+    serve_continuous(sparams, cfg, over, kv_pages=pool_pages,
+                     page_size=page_size, **dict(kw, bucket=1))
+    serve_continuous(sparams, cfg, over, **dict(kw, capacity=eq_slots))
+    serve_static(sparams, cfg, over, capacity=eq_slots, max_len=max_len)
+    paged = min((serve_continuous(sparams, cfg, over, kv_pages=pool_pages,
+                                  page_size=page_size, **dict(kw, bucket=1))
+                 for _ in range(3)), key=lambda r: r["makespan_s"])
+    slot_eq = min((serve_continuous(sparams, cfg, over,
+                                    **dict(kw, capacity=eq_slots))
+                   for _ in range(3)), key=lambda r: r["makespan_s"])
+    slot_eq["discipline"] = "slot-equal-bytes"
+    static_eq = min((serve_static(sparams, cfg, over, capacity=eq_slots,
+                                  max_len=max_len) for _ in range(3)),
+                    key=lambda r: r["makespan_s"])
+    static_eq["discipline"] = "static-equal-bytes"
+
     rec = {
         "workload": {
             "arch": cfg.name, "requests": n, "max_batch": args.max_batch,
@@ -213,14 +291,41 @@ def main(argv=None):
                                                        1e-9),
         "p95_latency_ratio": static["p95_latency_s"] / max(
             cont["p95_latency_s"], 1e-9),
+        "paged_overload": {
+            "requests": n_over, "shared_sys_prompt_tokens": page_size,
+            "kv_pool_pages": pool_pages, "page_size": page_size,
+            "equal_bytes_slots": eq_slots,
+            "paged": paged,
+            "slot_baseline": static_eq,
+            "slot_continuous": slot_eq,
+            "goodput_ratio": paged["goodput_tok_s"] / max(
+                static_eq["goodput_tok_s"], 1e-9),
+            "ttft_p99_ratio": paged["ttft_p99_s"] / max(
+                static_eq["ttft_p99_s"], 1e-9),
+            # structural (wall-clock-noise-free) win over the
+            # *continuous* equal-byte engine: decode steps to drain the
+            # same workload — fewer steps = more concurrent requests
+            # per step at the same KV byte budget
+            "concurrency_gain": slot_eq["decode_steps"] / max(
+                paged["decode_steps"], 1),
+        },
     }
-    for row in (static, cont):
-        print(f"{row['discipline']:>10s}: goodput {row['goodput_tok_s']:8.1f} "
+    for row in (static, cont, paged, slot_eq, static_eq):
+        print(f"{row['discipline']:>16s}: goodput {row['goodput_tok_s']:8.1f} "
               f"tok/s | makespan {row['makespan_s']:6.2f} s | "
               f"latency p50 {row['p50_latency_s']*1e3:7.0f} ms "
-              f"p95 {row['p95_latency_s']*1e3:7.0f} ms")
+              f"p95 {row['p95_latency_s']*1e3:7.0f} ms | ttft p99 "
+              f"{row['ttft_p99_s']*1e3:7.0f} ms")
     print(f"continuous/static goodput: {rec['speedup_goodput']:.2f}x | "
           f"static/continuous p95 latency: {rec['p95_latency_ratio']:.2f}x")
+    ov = rec["paged_overload"]
+    print(f"overload x10 ({n_over} reqs, {pool_pages - 1} pages vs "
+          f"{eq_slots} equal-byte slots): paged/static goodput "
+          f"{ov['goodput_ratio']:.2f}x | ttft p99 ratio "
+          f"{ov['ttft_p99_ratio']:.2f}x | concurrency gain vs "
+          f"continuous {ov['concurrency_gain']:.2f}x | prefix hit "
+          f"{paged.get('prefix_hit_rate', 0)*100:.0f}% | per-request KV "
+          f"{paged.get('kv_bytes_per_request_mean', 0)/1024:.1f} KiB")
     Path(args.json_out).write_text(json.dumps(rec, indent=1))
     print(f"wrote {args.json_out}")
     return 0

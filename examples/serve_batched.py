@@ -1,13 +1,17 @@
 """Batched serving with LUT-Q deployment weights (dictionary + packed
 assignments, no fp32 masters) — a ragged queue of prompts served by the
-continuous-batching slot-pool engine with the int8 KV cache.
+continuous-batching engine with the int8 KV cache, on the **paged** KV
+path with a shared system prompt so the prefix cache has something to
+hit.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6-1.6b]
 
-Each request is prefilled at its own length through the real prefill
-path (the fused LUT-Q kernel backends included), spliced into a free
-decode slot, and retired as soon as it finishes — the decode batch
-stays full instead of lock-stepping on the longest prompt. Prints the
+Each request is ``--sys-len`` shared system-prompt tokens plus a unique
+tail. On paged-capable families the engine maps the shared prompt's KV
+pages once and every later request reuses them (prefix-cache hits, no
+recompute); the run prints the hit rate and pages-in-use alongside
+throughput. Families without a growing KV sequence (rwkv, zamba, MLA)
+silently serve the same workload on the slot pool — same Engine API,
 same stats dict as ``python -m repro.launch.serve --engine``.
 """
 import argparse
@@ -17,6 +21,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import jax
+import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.core.policy import serve_view
@@ -26,13 +31,37 @@ from repro.models import api
 from repro.models.reduce import reduced
 
 
+def shared_prefix_requests(cfg, n, *, sys_len, tail_len, gen, seed=0):
+    """``n`` requests = one shared system prompt + per-request tails:
+    the workload shape where prefix sharing pays (every request after
+    the first maps the system prompt's full KV pages instead of
+    recomputing them)."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab, size=(sys_len,)).astype(np.int32)
+    reqs = []
+    for _ in range(n):
+        tail = rng.integers(
+            0, cfg.vocab,
+            size=(int(rng.integers(1, tail_len + 1)),)).astype(np.int32)
+        reqs.append({"tokens": np.concatenate([sys_prompt, tail]),
+                     "max_new": int(rng.integers(max(1, gen // 4), gen + 1))})
+    return reqs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b", choices=list_archs())
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--queue", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--sys-len", type=int, default=16,
+                    help="shared system-prompt tokens (page-aligned at "
+                         "the default --page-size)")
+    ap.add_argument("--tail-len", type=int, default=8,
+                    help="max unique tail tokens per request")
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--kv-pages", type=int, default=24,
+                    help="page-pool size for paged-capable families")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch)).replace(
@@ -49,10 +78,22 @@ def main():
     print(f"[serve] {cfg.name}: deploy {dq/2**20:.2f} MiB "
           f"(fp32 {fp/2**20:.2f} MiB, {fp/dq:.1f}x)")
 
+    reqs = shared_prefix_requests(cfg, args.queue, sys_len=args.sys_len,
+                                  tail_len=args.tail_len, gen=args.gen)
+    prompt_len = args.sys_len + args.tail_len
     stats = run_engine(deploy, cfg, capacity=args.max_batch,
-                       n_requests=args.queue, prompt_len=args.prompt_len,
-                       gen=args.gen)
+                       n_requests=args.queue, prompt_len=prompt_len,
+                       gen=args.gen, kv_pages=args.kv_pages,
+                       page_size=args.page_size, requests=reqs)
     print(format_engine_stats(stats))
+    if stats.get("paged"):
+        print(f"[serve] shared system prompt: {args.sys_len} tokens -> "
+              f"{stats['prefix_hit_rate']*100:.0f}% of queried prompt "
+              f"pages served from the prefix cache")
+    else:
+        print(f"[serve] {cfg.family} keeps its recurrent/latent decode "
+              f"state on the slot pool (paged KV targets growing "
+              f"attention caches)")
 
 
 if __name__ == "__main__":

@@ -258,6 +258,54 @@ def serve_shardings(cfg, mesh: Mesh, *, batch: int, max_len: int,
     }
 
 
+@functools.lru_cache(maxsize=64)
+def paged_serve_shardings(cfg, mesh: Mesh, *, batch: int, n_pages: int,
+                          page_size: int, n_blocks: int, src_len: int = 0):
+    """NamedShardings for the paged-engine jit boundaries.
+
+    The page pool is *replicated over the data axis* — any slot's block
+    row may reference any physical page (that is the whole point of
+    prefix sharing), so pages cannot follow the batch partition — and
+    model-sharded on the KV-head axis when it divides. Block table and
+    length vectors batch-shard on "data" like the slot pool; token/keys/
+    logits reuse the slot-path layout.
+    """
+    from repro.models import api
+    from repro.nn.tree import map_with_path
+
+    dp = _dp_axes(mesh)
+    spec_dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    b_parts = spec_dp if _fits(batch, mesh, spec_dp) else None
+    v_parts = "model" if _fits(cfg.vocab, mesh, "model") else None
+    struct = jax.eval_shape(
+        lambda: api.init_paged_cache(cfg, batch, n_pages, page_size,
+                                     n_blocks, src_len=src_len))
+
+    def walk(path, leaf):
+        name = path[-1]
+        parts = [None] * leaf.ndim
+        if "pool" in path:
+            # (Ls, P, page, Hkv[, dh]) — replicate pages, split KV heads
+            if leaf.ndim >= 4 and _fits(leaf.shape[3], mesh, "model"):
+                parts[3] = "model"
+        elif name in ("xk", "xv"):
+            # (Ls, B, src, Hkv, dh) — per-slot cross KV follows the batch
+            if _fits(leaf.shape[1], mesh, spec_dp):
+                parts[1] = spec_dp
+        elif name == "block":
+            if _fits(leaf.shape[0], mesh, spec_dp):
+                parts[0] = spec_dp
+        # len / src_len replicated
+        return _named(mesh, P(*parts))
+
+    return {
+        "cache": map_with_path(walk, struct),
+        "token": _named(mesh, P(b_parts, None)),
+        "keys": _named(mesh, P(b_parts, None)),
+        "logits": _named(mesh, P(b_parts, None, v_parts)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # training: explicit shardings for the train-step jit boundary
 # ---------------------------------------------------------------------------

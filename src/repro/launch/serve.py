@@ -153,34 +153,59 @@ def check_ckpt_shapes(cfg, trainable) -> None:
 
 def run_engine(params, cfg, *, capacity: int, n_requests: int,
                prompt_len: int, gen: int, seed: int = 0,
-               temperature: float = 0.0, mesh=None):
-    """Serve a deterministic ragged queue through the slot-pool engine
-    and return its stats dict (shared by the CLI and the example, so
-    both report identical fields)."""
+               temperature: float = 0.0, mesh=None,
+               kv_pages=None, page_size: int = 64,
+               prefix_cache: bool = True, requests=None):
+    """Serve a ragged queue through the continuous-batching engine and
+    return its stats dict (shared by the CLI and the example, so both
+    report identical fields).
+
+    ``kv_pages`` switches supported families onto the paged KV cache
+    (block-table pages + prefix sharing; see docs/serving.md).
+    ``requests`` overrides the synthetic workload with an explicit list
+    of ``Engine.submit`` kwargs dicts."""
     from repro.runtime.engine import synthetic_requests
 
     src_len = prompt_len if cfg.family == "encdec" else 0
     eng = Engine(params, cfg, capacity=capacity, max_len=prompt_len + gen,
                  src_len=src_len, temperature=temperature,
-                 rng=jax.random.PRNGKey(seed), mesh=mesh)
-    for req in synthetic_requests(cfg, n_requests, max_prompt=prompt_len,
-                                  max_new=gen, seed=seed, src_len=src_len):
-        req.pop("arrival_s")
+                 rng=jax.random.PRNGKey(seed), mesh=mesh,
+                 kv_pages=kv_pages, page_size=page_size,
+                 prefix_cache=prefix_cache)
+    if requests is None:
+        requests = synthetic_requests(cfg, n_requests, max_prompt=prompt_len,
+                                      max_new=gen, seed=seed, src_len=src_len)
+    for req in requests:
+        req = dict(req)
+        req.pop("arrival_s", None)
         eng.submit(**req)
     eng.run()
     return eng.stats()
 
 
 def format_engine_stats(stats) -> str:
-    return (f"[serve] engine: {stats['completed']}/{stats['admitted']} requests "
-            f"on {stats['capacity']} slots | decode[{stats['backend']}]: "
-            f"{stats['decode_tok_s']:.1f} tok/s | goodput "
-            f"{stats['goodput_tok_s']:.1f} tok/s | latency p50 "
-            f"{stats['p50_latency_s']*1e3:.0f} ms p95 "
-            f"{stats['p95_latency_s']*1e3:.0f} ms | "
-            f"{stats['decode_steps']} decode steps, "
-            f"prefill {stats['t_prefill_s']:.2f} s, "
-            f"decode {stats['t_decode_s']:.2f} s")
+    out = (f"[serve] engine: {stats['completed']}/{stats['admitted']} requests "
+           f"on {stats['capacity']} slots | decode[{stats['backend']}]: "
+           f"{stats['decode_tok_s']:.1f} tok/s | goodput "
+           f"{stats['goodput_tok_s']:.1f} tok/s | latency p50 "
+           f"{stats['p50_latency_s']*1e3:.0f} ms p95 "
+           f"{stats['p95_latency_s']*1e3:.0f} ms | ttft p50 "
+           f"{stats['ttft_p50_s']*1e3:.0f} ms p99 "
+           f"{stats['ttft_p99_s']*1e3:.0f} ms | "
+           f"{stats['decode_steps']} decode steps, "
+           f"prefill {stats['t_prefill_s']:.2f} s, "
+           f"decode {stats['t_decode_s']:.2f} s")
+    if stats.get("paged"):
+        out += (f"\n[serve] paged KV: {stats['pages_in_use']}/"
+                f"{stats['kv_pages'] - 1} pages in use "
+                f"(peak {stats['pages_peak']}) x {stats['page_size']} tokens"
+                f" | {stats['kv_bytes_per_token']} KV bytes/token")
+        if "prefix_hit_rate" in stats:
+            out += (f" | prefix cache: {stats['prefix_hits']}/"
+                    f"{stats['prefix_queries']} page hits "
+                    f"({stats['prefix_hit_rate']*100:.0f}%), "
+                    f"{stats['prefix_evictions']} evictions")
+    return out
 
 
 def main(argv=None):
@@ -210,6 +235,18 @@ def main(argv=None):
                     help="engine slot-pool capacity (decode batch width)")
     ap.add_argument("--queue", type=int, default=16,
                     help="number of ragged requests to enqueue with --engine")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="serve through the paged KV cache with this many "
+                         "pool pages (block-table slots, prefix sharing, "
+                         "chunked prefill; attention/encdec families only — "
+                         "others fall back to the slot pool; see "
+                         "docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (power of two)")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="share identical prompt-prefix pages across "
+                         "requests (--no-prefix-cache disables)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve SPMD on a (data, model) host mesh, e.g. 2x4 "
                          "(indices tensor-parallel on the model axis, batch/"
@@ -295,7 +332,9 @@ def main(argv=None):
     if args.engine:
         stats = run_engine(sparams, cfg, capacity=args.max_batch,
                            n_requests=args.queue, prompt_len=args.prompt_len,
-                           gen=args.gen, seed=args.seed, mesh=mesh)
+                           gen=args.gen, seed=args.seed, mesh=mesh,
+                           kv_pages=args.kv_pages, page_size=args.page_size,
+                           prefix_cache=args.prefix_cache)
         print(format_engine_stats(stats))
         return 0
 

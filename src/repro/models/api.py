@@ -191,6 +191,38 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, src_len: int = 0):
     raise ValueError(cfg.family)
 
 
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Families the paged KV subsystem serves (see runtime/paged_kv.py).
+
+    Dense-attention LMs (GQA/SWA/qk-norm, fp or int8 KV) and encdec page
+    their growing self-attn KV. Everything else — fixed-size recurrent
+    state (ssm/hybrid), MLA's latent cache, MoE/prefix-layer caches —
+    keeps the slot path behind the same Engine API; the engine falls
+    back silently and reports it in ``stats()["paged"]``.
+    """
+    if cfg.family == "encdec":
+        return True
+    return (cfg.family == "dense" and not cfg.use_mla and cfg.n_experts == 0
+            and cfg.first_dense == 0 and cfg.n_prefix_tokens == 0)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, n_blocks: int, *, src_len: int = 0):
+    if cfg.family == "encdec":
+        return m_encdec.init_paged_encdec_cache(cfg, batch, n_pages,
+                                                page_size, n_blocks, src_len)
+    if paged_supported(cfg):
+        return m_lm.init_paged_cache(cfg, batch, n_pages, page_size, n_blocks)
+    raise ValueError(f"paged KV unsupported for family={cfg.family} "
+                     "(use api.paged_supported to gate)")
+
+
+def paged_decode_step(params, cfg: ModelConfig, token, cache):
+    if cfg.family == "encdec":
+        return m_encdec.encdec_paged_decode_step(params, cfg, token, cache)
+    return m_lm.lm_paged_decode_step(params, cfg, token, cache)
+
+
 def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
     """long_500k requires sub-quadratic attention (see DESIGN.md).
 

@@ -13,8 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.lm import attn_decode, attn_forward, attn_init, mlp_apply, mlp_init, _aq
-from repro.nn.attention import decode_attention, flash_attention
+from repro.models.lm import (attn_decode, attn_forward, attn_init, mlp_apply,
+                             mlp_init, _aq, _qkv)
+from repro.nn.attention import (decode_attention, flash_attention,
+                                gather_pages, scatter_token_pages)
 from repro.nn.linear import embedding_apply, embedding_init, embedding_logits, linear_apply, linear_init
 from repro.nn.norms import rmsnorm_apply, rmsnorm_init
 from repro.nn.tree import rng_stream
@@ -228,3 +230,110 @@ def encdec_decode_step(params, cfg: ModelConfig, token, cache):
     if src_len is not None:
         out["src_len"] = src_len
     return logits, out
+
+
+# ---------------------------------------------------------------------------
+# paged serving: self-attn KV in the page pool, cross KV dense per slot
+# ---------------------------------------------------------------------------
+#
+# Cross-attention KV depends on the source frames, so it is never
+# shareable across requests — it stays a (Ls, B, src_len, Hkv, dh)
+# per-slot slab while the growing self-attn KV is paged. Pages hold
+# cfg.dtype values (the encdec slot cache never quantizes either), so
+# paged decode is bitwise-identical to the slot path. Prompts are
+# admitted through one bucket-padded full prefill (the causal decoder
+# makes right-padding exact), then spliced to pages.
+
+
+def init_paged_encdec_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                            page_size: int, n_blocks: int, src_len: int):
+    dh = cfg.resolved_head_dim
+    one_page = jnp.zeros((n_pages, page_size, cfg.n_kv_heads, dh), cfg.dtype)
+    one_x = jnp.zeros((batch, src_len, cfg.n_kv_heads, dh), cfg.dtype)
+    stack = lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape)
+    return {
+        "pool": {"k": stack(one_page), "v": stack(one_page)},
+        "xk": stack(one_x), "xv": stack(one_x),
+        "block": jnp.zeros((batch, n_blocks), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+        "src_len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def encdec_paged_decode_step(params, cfg: ModelConfig, token, cache):
+    h = embedding_apply(params["embed"], token, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
+    cache_len, block, src_len = cache["len"], cache["block"], cache["src_len"]
+    B = token.shape[0]
+
+    def body(h, xs):
+        lp, lpool, xk, xv = xs
+        a_in = rmsnorm_apply(lp["ln1"], h)
+        pos = jnp.broadcast_to(cache_len.reshape(-1), (B,)).reshape(B, 1)
+        q, k, v = _qkv(lp["attn"], cfg, a_in, pos)
+        idx = pos[:, 0]
+        new_pool = {
+            "k": scatter_token_pages(lpool["k"], block, idx, k[:, 0]),
+            "v": scatter_token_pages(lpool["v"], block, idx, v[:, 0]),
+        }
+        kc = gather_pages(new_pool["k"], block)
+        vc = gather_pages(new_pool["v"], block)
+        o = decode_attention(q, kc, vc, idx + 1)
+        a = linear_apply(lp["attn"]["o"], _aq(o.reshape(B, 1, -1), cfg),
+                         backend=cfg.kernel_backend)
+        h = h + a
+        h = h + cross_attn_apply(lp["xattn"], cfg, rmsnorm_apply(lp["ln_x"], h),
+                                 xk, xv, src_len=src_len)
+        h = h + mlp_apply(lp["mlp"], cfg, rmsnorm_apply(lp["ln2"], h))
+        return h, new_pool
+
+    h, new_pools = jax.lax.scan(
+        body, h, (params["decoder"], cache["pool"], cache["xk"], cache["xv"]))
+    logits = embedding_logits(params["embed"],
+                              rmsnorm_apply(params["final_norm"], h),
+                              backend=cfg.kernel_backend)
+    out = dict(cache)
+    out.update(pool=new_pools, len=cache_len + 1)
+    return logits, out
+
+
+def encdec_paged_splice(cfg: ModelConfig, cache, prefill_layers, block_row,
+                        length, slot):
+    """Commit one request's prefill to the paged cache.
+
+    prefill_layers: the (Ls, 1, St, ...) cache leaves from a
+    bucket-padded ``encdec_prefill``; self-attn K/V positions
+    [0, length) scatter through ``block_row`` (padding lands on the
+    trash page), cross KV is right-padded into the slot's row of the
+    dense slab. Returns the updated cache pytree (block/len/src_len rows
+    are installed host-side by the engine)."""
+    pool = cache["pool"]
+    page = pool["k"].shape[2]
+    NB = block_row.shape[0]
+    St = prefill_layers["k"].shape[2]
+    pos = jnp.arange(St)
+    valid = pos < jnp.asarray(length, jnp.int32)
+    phys = jnp.where(valid, block_row[jnp.clip(pos // page, 0, NB - 1)], 0)
+    flat_idx = phys * page + pos % page
+
+    def per_layer(pk, pv, k, v):
+        P = pk.shape[0]
+        def scat(leaf, vals):
+            flat = leaf.reshape((P * page,) + leaf.shape[2:])
+            return flat.at[flat_idx].set(vals.astype(leaf.dtype)).reshape(
+                leaf.shape)
+        return scat(pk, k[0]), scat(pv, v[0])
+
+    nk, nv = jax.vmap(per_layer)(pool["k"], pool["v"],
+                                 prefill_layers["k"], prefill_layers["v"])
+    S_slab = cache["xk"].shape[2]
+    s = prefill_layers["xk"].shape[2]
+    pad = ((0, 0), (0, 0), (0, S_slab - s), (0, 0), (0, 0))
+    xk = jax.lax.dynamic_update_slice(
+        cache["xk"], jnp.pad(prefill_layers["xk"], pad).astype(
+            cache["xk"].dtype), (0, jnp.asarray(slot, jnp.int32), 0, 0, 0))
+    xv = jax.lax.dynamic_update_slice(
+        cache["xv"], jnp.pad(prefill_layers["xv"], pad).astype(
+            cache["xv"].dtype), (0, jnp.asarray(slot, jnp.int32), 0, 0, 0))
+    out = dict(cache)
+    out.update(pool={"k": nk, "v": nv}, xk=xk, xv=xv)
+    return out

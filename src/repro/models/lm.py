@@ -21,7 +21,12 @@ import jax.numpy as jnp
 
 from repro.core.actquant import fake_quant
 from repro.models.config import ModelConfig
-from repro.nn.attention import decode_attention, flash_attention
+from repro.nn.attention import (
+    decode_attention,
+    flash_attention,
+    gather_pages,
+    scatter_token_pages,
+)
 from repro.nn.linear import (
     embedding_apply,
     embedding_init,
@@ -452,3 +457,246 @@ def lm_decode_step(params, cfg: ModelConfig, token, cache):
     if cfg.first_dense:
         out["prefix_layers"] = new_pc
     return logits, out
+
+
+# ---------------------------------------------------------------------------
+# paged serving (block-table KV; see runtime/paged_kv.py + docs/serving.md)
+# ---------------------------------------------------------------------------
+#
+# The paged layout replaces per-slot (B, max_len, ...) caches with a
+# global page pool (P, page, Hkv, dh) per stacked layer plus an int32
+# block table (B, NB). Decode scatters the new K/V entry through the
+# block table and gathers a linear (B, NB*page, ...) view for the same
+# ``decode_attention`` the slot path uses — positions past ``len`` read
+# the trash page and are masked, which on this backend is *bitwise*
+# neutral (masked scores hit -1e30 before the row max, so their exp is
+# exactly 0.0), making paged decode token-identical to the slot path.
+#
+# Chunked prefill never attends quantized pages: chunks write fp K/V
+# into a transient workspace (Ls, 1, Wws, Hkv, dh) and attend that via
+# ``flash_attention(..., q_offset=start)``, so the prompt numerics match
+# solo prefill exactly even with ``kv_cache_bits=8`` — quantization
+# happens once, in ``lm_paged_splice``, exactly where the slot path's
+# ``adapt_prefill_cache`` quantizes.
+
+
+def _paged_quant(cfg: ModelConfig) -> bool:
+    return cfg.kv_cache_bits == 8
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, n_blocks: int):
+    """Paged decode cache: {"pool", "block", "len"}.
+
+    pool leaves are stacked over the scanned layers:
+    (Ls, P, page, Hkv, dh) K/V (+ (Ls, P, page, Hkv) bf16 scales for
+    int8 KV). block: (B, NB) int32, all-zero = every entry points at the
+    trash page. ``paged_supported`` gates the families that reach here
+    (dense attention, no MLA/MoE/prefix layers).
+    """
+    dh = cfg.resolved_head_dim
+    kv_dt = jnp.int8 if _paged_quant(cfg) else cfg.dtype
+    one = {
+        "k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, dh), kv_dt),
+        "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, dh), kv_dt),
+    }
+    if _paged_quant(cfg):
+        one["k_scale"] = jnp.zeros((n_pages, page_size, cfg.n_kv_heads),
+                                   jnp.bfloat16)
+        one["v_scale"] = jnp.zeros((n_pages, page_size, cfg.n_kv_heads),
+                                   jnp.bfloat16)
+    pool = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+    return {
+        "pool": pool,
+        "block": jnp.zeros((batch, n_blocks), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_paged_workspace(cfg: ModelConfig, wws: int):
+    """fp chunk-prefill workspace, one request wide."""
+    dh = cfg.resolved_head_dim
+    z = jnp.zeros((cfg.n_layers, 1, wws, cfg.n_kv_heads, dh), cfg.dtype)
+    return {"k": z, "v": z}
+
+
+def paged_attn_decode(p, cfg: ModelConfig, x, pool, block, cache_len):
+    """One-token decode against the paged pool (one layer).
+
+    Dead slots keep ``cache_len`` pinned at 0 with an all-trash block
+    row, so their scatter lands on the trash page and their (garbage)
+    output is discarded by the engine.
+    """
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1),
+                           (B,)).reshape(B, 1)
+    q, k, v = _qkv(p, cfg, x, pos)
+    idx = pos[:, 0]
+    quant = _paged_quant(cfg)
+    if quant:
+        k, k_s = _kv_quant(k, 8)
+        v, v_s = _kv_quant(v, 8)
+    new_pool = dict(pool)
+    new_pool["k"] = scatter_token_pages(pool["k"], block, idx, k[:, 0])
+    new_pool["v"] = scatter_token_pages(pool["v"], block, idx, v[:, 0])
+    kc = gather_pages(new_pool["k"], block)   # (B, NB*page, Hkv, dh)
+    vc = gather_pages(new_pool["v"], block)
+    if quant:
+        new_pool["k_scale"] = scatter_token_pages(
+            pool["k_scale"], block, idx, k_s[:, 0])
+        new_pool["v_scale"] = scatter_token_pages(
+            pool["v_scale"], block, idx, v_s[:, 0])
+        kc = kc.astype(jnp.bfloat16) * gather_pages(
+            new_pool["k_scale"], block)[..., None]
+        vc = vc.astype(jnp.bfloat16) * gather_pages(
+            new_pool["v_scale"], block)[..., None]
+    o = decode_attention(q, kc, vc, idx + 1, window=cfg.window)
+    out = linear_apply(p["o"], _aq(o.reshape(B, 1, -1), cfg),
+                       backend=cfg.kernel_backend)
+    return out, new_pool
+
+
+def lm_paged_decode_step(params, cfg: ModelConfig, token, cache):
+    """token: (B,1) -> (logits (B,1,V), new paged cache)."""
+    h = _embed_tokens(params, cfg, token)
+    cache_len, block = cache["len"], cache["block"]
+
+    def body(h, xs):
+        layer_p, layer_pool = xs
+        a_in = rmsnorm_apply(layer_p["ln1"], h)
+        a_out, new_pool = paged_attn_decode(layer_p["attn"], cfg, a_in,
+                                            layer_pool, block, cache_len)
+        h = h + a_out
+        m_in = rmsnorm_apply(layer_p["ln2"], h)
+        return h + mlp_apply(layer_p["mlp"], cfg, m_in), new_pool
+
+    h, new_pools = jax.lax.scan(body, h, (params["layers"], cache["pool"]))
+    logits = _readout(params, cfg, h)
+    return logits, {"pool": new_pools, "block": block, "len": cache_len + 1}
+
+
+def lm_paged_prefill_chunk(params, cfg: ModelConfig, tokens, ws, start,
+                           n_real):
+    """One prompt chunk. tokens: (1, C) — C is an AOT-warmed bucket
+    width; ws: fp workspace holding K/V of positions [0, start) (from
+    earlier chunks or a prefix-cache hydrate); ``start`` / ``n_real``
+    are traced int32 scalars, so every chunk of a given width shares one
+    trace.
+
+    Returns (logits (1,1,V) read at chunk row n_real-1 — only the final
+    chunk's logits are consumed — and the workspace now covering
+    [0, start + C)). Padded rows past ``n_real`` compute garbage that is
+    never read: their logits are ignored and the splice masks their
+    workspace entries out.
+    """
+    h = _embed_tokens(params, cfg, tokens)
+    C = tokens.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    n_real = jnp.asarray(n_real, jnp.int32)
+    positions = start + jnp.arange(C)[None, :]
+
+    def body(h, xs):
+        layer_p, wk, wv = xs
+        a_in = rmsnorm_apply(layer_p["ln1"], h)
+        q, k, v = _qkv(layer_p["attn"], cfg, a_in, positions)
+        wk = jax.lax.dynamic_update_slice_in_dim(wk, k.astype(wk.dtype),
+                                                 start, axis=1)
+        wv = jax.lax.dynamic_update_slice_in_dim(wv, v.astype(wv.dtype),
+                                                 start, axis=1)
+        o = flash_attention(q, wk, wv, causal=True, window=cfg.window,
+                            q_offset=start, q_block=cfg.attn_q_block,
+                            kv_block=cfg.attn_kv_block)
+        a_out = linear_apply(layer_p["attn"]["o"],
+                             _aq(o.reshape(1, C, -1), cfg),
+                             backend=cfg.kernel_backend)
+        h = h + a_out
+        m_in = rmsnorm_apply(layer_p["ln2"], h)
+        return h + mlp_apply(layer_p["mlp"], cfg, m_in), (wk, wv)
+
+    h, (wks, wvs) = jax.lax.scan(body, h, (params["layers"], ws["k"],
+                                           ws["v"]))
+    h_last = jax.lax.dynamic_slice_in_dim(h, n_real - 1, 1, axis=1)
+    logits = _readout(params, cfg, h_last)
+    return logits, {"k": wks, "v": wvs}
+
+
+def lm_paged_splice(cfg: ModelConfig, pool, ws, block_row, start, length):
+    """Commit workspace positions [start, length) to the page pool
+    through ``block_row`` (NB,); everything else scatters to the trash
+    page. ``start`` is the prefix-cache hit length: shared hit pages are
+    live for other slots (and already hold the bit-exact content), so
+    the splice never rewrites them. int8 KV quantizes here — per-entry,
+    the same ``_kv_quant`` the slot path's cache adaptation applies, so
+    stored bits match the slot pool.
+    """
+    page = pool["k"].shape[2]
+    NB = block_row.shape[0]
+    wws = ws["k"].shape[2]
+    pos = jnp.arange(wws)
+    valid = ((pos >= jnp.asarray(start, jnp.int32))
+             & (pos < jnp.asarray(length, jnp.int32)))
+    phys = jnp.where(valid, block_row[jnp.clip(pos // page, 0, NB - 1)], 0)
+    flat_idx = phys * page + pos % page
+    quant = _paged_quant(cfg)
+
+    def scatter(p_leaf, vals):
+        P = p_leaf.shape[0]
+        flat = p_leaf.reshape((P * page,) + p_leaf.shape[2:])
+        return flat.at[flat_idx].set(vals.astype(p_leaf.dtype)).reshape(
+            p_leaf.shape)
+
+    def per_layer(*leaves):
+        if quant:
+            pk, pv, pks, pvs, wk, wv = leaves
+            kq, ks = _kv_quant(wk[0], 8)
+            vq, vs = _kv_quant(wv[0], 8)
+            return (scatter(pk, kq), scatter(pv, vq),
+                    scatter(pks, ks), scatter(pvs, vs))
+        pk, pv, wk, wv = leaves
+        return scatter(pk, wk[0]), scatter(pv, wv[0])
+
+    if quant:
+        nk, nv, nks, nvs = jax.vmap(per_layer)(
+            pool["k"], pool["v"], pool["k_scale"], pool["v_scale"],
+            ws["k"], ws["v"])
+        return {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+    nk, nv = jax.vmap(per_layer)(pool["k"], pool["v"], ws["k"], ws["v"])
+    return {"k": nk, "v": nv}
+
+
+def lm_paged_hydrate(cfg: ModelConfig, pool, block_row, hist_len, wws: int):
+    """Rebuild the fp workspace prefix [0, hist_len) from cached pages
+    (prefix-cache hit), zeroed beyond. Exact for fp pools; for int8
+    pools the hydrated prefix is the dequantized cache (the lossy step
+    already paid at splice time) — see docs/serving.md for the numerics
+    note."""
+    page = pool["k"].shape[2]
+    hist_len = jnp.asarray(hist_len, jnp.int32)
+    quant = _paged_quant(cfg)
+
+    def per_layer(*leaves):
+        if quant:
+            pk, pv, pks, pvs = leaves
+        else:
+            pk, pv = leaves
+        kc = gather_pages(pk, block_row[None])    # (1, NB*page, Hkv, dh)
+        vc = gather_pages(pv, block_row[None])
+        if quant:
+            kc = kc.astype(jnp.bfloat16) * gather_pages(
+                pks, block_row[None])[..., None]
+            vc = vc.astype(jnp.bfloat16) * gather_pages(
+                pvs, block_row[None])[..., None]
+        W = kc.shape[1]
+        if W < wws:
+            kc = jnp.pad(kc, ((0, 0), (0, wws - W), (0, 0), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, wws - W), (0, 0), (0, 0)))
+        live = (jnp.arange(wws) < hist_len)[None, :, None, None]
+        zero = jnp.zeros((), cfg.dtype)
+        return (jnp.where(live, kc.astype(cfg.dtype), zero),
+                jnp.where(live, vc.astype(cfg.dtype), zero))
+
+    leaves = ((pool["k"], pool["v"], pool["k_scale"], pool["v_scale"])
+              if quant else (pool["k"], pool["v"]))
+    wk, wv = jax.vmap(per_layer)(*leaves)
+    return {"k": wk, "v": wv}

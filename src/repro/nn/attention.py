@@ -29,8 +29,16 @@ def flash_attention(
     scale: Optional[float] = None,
     q_block: int = 512,
     kv_block: int = 512,
+    q_offset: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """q: (B,S,H,Dh); k,v: (B,Skv,Hkv,Dh[v]) -> (B,S,H,Dv)."""
+    """q: (B,S,H,Dh); k,v: (B,Skv,Hkv,Dh[v]) -> (B,S,H,Dv).
+
+    ``q_offset``: absolute position of q's first row within the KV
+    sequence (traced scalar ok). Chunked prefill attends a chunk of
+    queries against the full workspace with ``q_offset=start`` so the
+    causal/window masks see global positions. Defaults to 0 (prompt
+    prefill, q and kv aligned).
+    """
     B, S, H, Dh = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     Dv = v.shape[-1]
@@ -53,6 +61,9 @@ def flash_attention(
         v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
         Skv += pad_kv
     nq = S // q_block
+    if q_offset is None:
+        q_offset = jnp.array(0, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
 
     qr = q.reshape(B, nq, q_block, Hkv, G, Dh) * scale
 
@@ -68,7 +79,7 @@ def flash_attention(
 
     def per_qblock(qi):
         qblk = qr[:, qi]  # (B, bq, Hkv, G, Dh)
-        q_start = qi * q_block
+        q_start = q_offset + qi * q_block
         if slab < Skv:
             start = jnp.clip(q_start + q_block - slab, 0, Skv - slab)
         else:
@@ -176,3 +187,38 @@ def decode_attention(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(jnp.float32), v_cache.astype(jnp.float32))
     return o.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+def gather_pages(pool: jax.Array, block: jax.Array) -> jax.Array:
+    """Assemble per-slot linear KV views from a paged pool.
+
+    pool: (P, page, ...) physical pages; block: (B, NB) int32 block
+    table rows -> (B, NB*page, ...) where row b's position p reads
+    ``pool[block[b, p // page], p % page]``. Empty block entries point
+    at the trash page (0); its contents are garbage and every consumer
+    masks positions ``>= cache_len``, so no validity branch is needed.
+    """
+    P, page = pool.shape[:2]
+    B, NB = block.shape
+    flat = pool.reshape((P * page,) + pool.shape[2:])
+    idx = (block * page)[:, :, None] + jnp.arange(page, dtype=block.dtype)
+    return flat[idx.reshape(B, NB * page)]
+
+
+def scatter_token_pages(pool: jax.Array, block: jax.Array, idx: jax.Array,
+                        val: jax.Array) -> jax.Array:
+    """Write one token's K or V through the block table.
+
+    pool: (P, page, ...); block: (B, NB); idx: (B,) logical position to
+    write; val: (B, ...) payload. Dead slots keep ``idx`` pinned at 0
+    with an all-trash block row, so their writes land on the trash page.
+    ``idx // page`` is clipped (JAX clamps out-of-range gathers anyway;
+    the clip keeps the intent explicit).
+    """
+    P, page = pool.shape[:2]
+    B, NB = block.shape
+    blk = jnp.take_along_axis(
+        block, jnp.clip(idx[:, None] // page, 0, NB - 1), axis=1)[:, 0]
+    flat_idx = blk * page + idx % page
+    flat = pool.reshape((P * page,) + pool.shape[2:])
+    return flat.at[flat_idx].set(val.astype(pool.dtype)).reshape(pool.shape)

@@ -9,15 +9,38 @@ whole cache every step.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.nn.attention import NEG_INF, flash_attention
 from repro.nn.linear import linear_apply, linear_init, materialize
 from repro.nn.rotary import apply_rope
 from repro.nn.tree import rng_stream
+
+
+@functools.lru_cache(maxsize=16)
+def _assemble_mats(nope: int, rope: int):
+    """Host 0/1 selection matrices placing the nope / rope halves into
+    the combined head dim.
+
+    Sharding note (same hazard as nn/rotary.py): concatenating *computed*
+    tensors along a dim the consumer shards miscompiles under the SPMD
+    partitioner on the CPU backend whenever head-granular tensor
+    parallelism shards the head dim. Assembling the combined q/k via
+    matmuls against host constants keeps every traced op a contraction
+    the partitioner handles, and stays bitwise identical to the concat:
+    each output element is exactly one ``1 * value`` plus exact float
+    zeros."""
+    d = nope + rope
+    en = np.zeros((nope, d), np.float32)
+    en[:, :nope] = np.eye(nope)
+    er = np.zeros((rope, d), np.float32)
+    er[:, nope:] = np.eye(rope)
+    return en, er
 
 
 def mla_init(
@@ -77,9 +100,14 @@ def mla_forward(
     v = linear_apply(params["uv"], c_kv, backend=backend).reshape(
         B, S, n_heads, v_head)
 
-    # combined key = [k_nope ; k_rope broadcast to all heads]
-    k = jnp.concatenate([kn, jnp.broadcast_to(k_rope, (B, S, n_heads, qk_rope))], -1)
-    q = jnp.concatenate([qn, qr], -1)
+    # combined key = [k_nope ; k_rope broadcast to all heads], assembled
+    # concat-free (see _assemble_mats; bitwise identical to the concat)
+    en, er = _assemble_mats(qk_nope, qk_rope)
+    en = jnp.asarray(en, x.dtype)
+    er = jnp.asarray(er, x.dtype)
+    k = (jnp.einsum("bshn,nd->bshd", kn, en)
+         + jnp.einsum("bsr,rd->bsd", k_rope[..., 0, :], er)[:, :, None, :])
+    q = jnp.einsum("bshn,nd->bshd", qn, en) + jnp.einsum("bshr,rd->bshd", qr, er)
     scale = (qk_nope + qk_rope) ** -0.5
     o = flash_attention(q, k, v, causal=True, scale=scale)
     out = linear_apply(params["o"], o.reshape(B, S, n_heads * v_head),

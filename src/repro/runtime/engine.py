@@ -44,7 +44,10 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
-from repro.runtime.serving import adapt_prefill_cache, prefill_fn
+from repro.runtime import paged_kv
+from repro.runtime.serving import (adapt_prefill_cache, paged_chunk_fn,
+                                   paged_encdec_splice_fn, paged_hydrate_fn,
+                                   paged_splice_fn, prefill_fn)
 
 
 def _batch_axes(cfg: ModelConfig, max_len: int, src_len: int):
@@ -143,6 +146,34 @@ def _step_fn(cfg: ModelConfig, greedy: bool, mesh=None, capacity: int = 0,
         out_shardings=(sh["token"], sh["cache"], sh["keys"]))
 
 
+@functools.lru_cache(maxsize=64)
+def _paged_step_fn(cfg: ModelConfig, greedy: bool, mesh=None,
+                   capacity: int = 0, n_pages: int = 0, page_size: int = 0,
+                   n_blocks: int = 0, src_len: int = 0):
+    """Paged twin of ``_step_fn``: paged decode_step + per-slot sampling.
+
+    The page-pool geometry is part of the lru key (it sizes the cache
+    shardings under a mesh and keeps engines with different pools from
+    sharing a trace)."""
+
+    def step(params, tok, cache, keys, temp):
+        logits, cache = api.paged_decode_step(params, cfg, tok, cache)
+        tok, keys = _sample(logits, keys, temp, greedy)
+        return tok, cache, keys
+
+    if mesh is None:
+        return jax.jit(step)
+    from repro.launch.partition import paged_serve_shardings
+
+    sh = paged_serve_shardings(cfg, mesh, batch=capacity, n_pages=n_pages,
+                               page_size=page_size, n_blocks=n_blocks,
+                               src_len=src_len)
+    return jax.jit(
+        step,
+        in_shardings=(None, sh["token"], sh["cache"], sh["keys"], None),
+        out_shardings=(sh["token"], sh["cache"], sh["keys"]))
+
+
 def synthetic_requests(cfg: ModelConfig, n: int, *, max_prompt: int,
                        max_new: int, seed: int = 0, src_len: int = 0,
                        rate: float = 0.0):
@@ -189,6 +220,7 @@ class Request:
     prefix_embeds: Optional[np.ndarray] = None  # vlm prefix (P, D)
     out: List[int] = dataclasses.field(default_factory=list)
     pstart: int = 0   # index into the engine's pending-token ring
+    kv_pages: int = 0  # pages reserved at admission (paged engines)
     finish: str = ""
     t_submit: float = 0.0
     t_admit: float = 0.0
@@ -227,7 +259,9 @@ class Engine:
                  max_len: int = 128, src_len: int = 0,
                  temperature: float = 0.0, rng: Optional[jax.Array] = None,
                  backend: Optional[str] = None, prefill_bucket: int = 1,
-                 mesh=None):
+                 mesh=None, kv_pages: Optional[int] = None,
+                 page_size: int = 64, prefix_cache: bool = True,
+                 max_chunk: int = 256, warmup: bool = True):
         if backend is not None:
             cfg = cfg.replace(kernel_backend=backend)
         self.cfg = cfg
@@ -246,17 +280,59 @@ class Engine:
             self.prefill_bucket = 1
         self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
 
-        self.cache = api.init_cache(cfg, self.capacity, self.max_len,
-                                    src_len=self.src_len)
-        self._axes = _batch_axes(cfg, self.max_len, self.src_len)
+        # paged KV (runtime/paged_kv.py): slot caches become block-table
+        # rows over a global page pool. Families the paged layout does
+        # not support (fixed-size recurrent state, MLA latents, MoE /
+        # prefix-layer caches) silently keep the slot path behind the
+        # same API — `stats()["paged"]` reports which path ran.
+        self.paged = kv_pages is not None and api.paged_supported(cfg)
+        self._chunking: Optional[Dict[str, Any]] = None
+        if self.paged:
+            self.page_size = int(page_size)
+            self.n_blocks = -(-self.max_len // self.page_size)
+            self.n_pages = int(kv_pages)
+            self.pkv = paged_kv.PagedKV(
+                self.n_pages, self.page_size, self.n_blocks, self.capacity,
+                # encdec KV depends on the source frames — never shareable
+                prefix_cache=prefix_cache and cfg.family != "encdec")
+            self.cache = api.init_paged_cache(
+                cfg, self.capacity, self.n_pages, self.page_size,
+                self.n_blocks, src_len=self.src_len)
+            if cfg.family == "encdec":
+                # encdec prefills whole prompts in one shot (the decoder
+                # attends the full source anyway), padded onto pow2
+                # buckets up to the context width
+                self.max_chunk = paged_kv.next_pow2(self.max_len)
+            else:
+                self.max_chunk = min(int(max_chunk),
+                                     paged_kv.next_pow2(self.max_len))
+                self.wws = paged_kv.workspace_len(
+                    self.max_len, self.n_blocks, self.page_size)
+                from repro.models.lm import init_paged_workspace
+
+                self.ws = init_paged_workspace(cfg, self.wws)
+            self.buckets = paged_kv.prefill_buckets(self.max_chunk)
+            self.prefill_chunks_per_step = 1
+        else:
+            self.cache = api.init_cache(cfg, self.capacity, self.max_len,
+                                        src_len=self.src_len)
+            self._axes = _batch_axes(cfg, self.max_len, self.src_len)
         self.tok = jnp.zeros((self.capacity, 1), jnp.int32)
         self.keys = jnp.stack([jax.random.fold_in(self._base_rng, i)
                                for i in range(self.capacity)])
         if mesh is not None:
-            from repro.launch.partition import serve_shardings
+            from repro.launch.partition import (paged_serve_shardings,
+                                                serve_shardings)
 
-            sh = serve_shardings(cfg, mesh, batch=self.capacity,
-                                 max_len=self.max_len, src_len=self.src_len)
+            if self.paged:
+                sh = paged_serve_shardings(
+                    cfg, mesh, batch=self.capacity, n_pages=self.n_pages,
+                    page_size=self.page_size, n_blocks=self.n_blocks,
+                    src_len=self.src_len)
+            else:
+                sh = serve_shardings(cfg, mesh, batch=self.capacity,
+                                     max_len=self.max_len,
+                                     src_len=self.src_len)
             self.cache = jax.device_put(self.cache, sh["cache"])
             self.tok = jax.device_put(self.tok, sh["token"])
             self.keys = jax.device_put(self.keys, sh["keys"])
@@ -269,7 +345,10 @@ class Engine:
         self.n_admitted = 0
         self.t_prefill = 0.0
         self.t_decode = 0.0
+        self.t_warmup = 0.0
         self._t_start: Optional[float] = None
+        if self.paged and warmup:
+            self._warm_paged()
 
     # ------------------------------------------------------------- queue
 
@@ -298,6 +377,12 @@ class Engine:
                 raise ValueError(
                     f"frames {frames.shape[0]} exceed engine src_len "
                     f"{self.src_len}")
+        if self.paged:
+            n_need = self.pkv.n_pages_for(len(prompt) + int(max_new))
+            if n_need > self.n_pages - 1:
+                raise ValueError(
+                    f"request needs {n_need} KV pages but the pool only has "
+                    f"{self.n_pages - 1} allocatable pages")
         rid = self._next_rid
         self._next_rid += 1
         key = rng if rng is not None else jax.random.fold_in(self._base_rng, rid)
@@ -391,6 +476,12 @@ class Engine:
         self.cache = dict(self.cache)
         self.cache["len"] = self.cache["len"].at[slot].set(0)
         self.tok = self.tok.at[slot].set(0)
+        if self.paged and self.pkv.rows[slot] is not None:
+            # release the refcounts AND zero the device block row: the
+            # freed pages may be reallocated immediately, and a stale
+            # row would let this dead slot's trash-writes corrupt them
+            self.pkv.release_slot(slot)
+            self.cache["block"] = self.cache["block"].at[slot].set(0)
         self.results[req.rid] = {
             "rid": req.rid,
             "tokens": np.asarray(req.out, np.int32),
@@ -400,7 +491,234 @@ class Engine:
             "t_queue_s": req.t_admit - req.t_submit,
             "t_first_token_s": req.t_first - req.t_submit,
             "t_total_s": req.t_done - req.t_submit,
+            "kv_pages": req.kv_pages,
         }
+
+    # ---------------------------------------------------- paged admission
+
+    def _paged_admit(self):
+        """Paged-mode admission: advance the in-flight chunked prefill
+        (one chunk per engine step — decode slots keep stepping between
+        chunks, which is the point of chunking), then FIFO-admit queue
+        heads into free slots while pages hold out. A page shortfall
+        defers the queue head (FIFO preserved) until retirements or
+        prefix-cache eviction free pages."""
+        budget = self.prefill_chunks_per_step
+        while budget > 0:
+            if self._chunking is not None:
+                self._chunk_step()
+                budget -= 1
+                continue
+            if not self.queue or None not in self.slots:
+                return
+            req = self.queue[0]
+            slot = self.slots.index(None)
+            if self.cfg.family == "encdec":
+                if not self._admit_paged_encdec(slot, req):
+                    return
+                budget -= 1
+                continue
+            got = self.pkv.admit(slot, req.tokens,
+                                 len(req.tokens) + req.max_new)
+            if got is None:
+                return  # deferred: not enough pages even after eviction
+            self.queue.popleft()
+            row, hit = got
+            req.t_admit = time.perf_counter()
+            req.kv_pages = len(self.pkv.rows[slot])
+            self._start_chunking(slot, req, row, hit)
+
+    def _start_chunking(self, slot: int, req: Request, row: np.ndarray,
+                        hit_tokens: int):
+        """Begin a chunked prefill. The device block row stays all-trash
+        until the prefill finishes (``_finish_chunking`` installs it), so
+        the slot's dead decode writes land in the trash page meanwhile.
+
+        The workspace is ALWAYS hydrated — from cached pages on a prefix
+        hit, and to zeros otherwise — so chunk inputs never depend on a
+        previous request's leftovers (masked garbage is a numeric no-op,
+        but a deterministic workspace keeps replays bit-stable)."""
+        t0 = time.perf_counter()
+        row_j = jnp.asarray(row)
+        self.ws = paged_hydrate_fn(self.cfg, self.wws)(
+            self.cache["pool"], row_j, jnp.int32(hit_tokens))
+        self._chunking = {
+            "req": req, "slot": slot, "row": row_j, "hit": hit_tokens,
+            "plan": paged_kv.chunk_plan(len(req.tokens), hit_tokens,
+                                        self.max_chunk),
+            "i": 0,
+        }
+        self.t_prefill += time.perf_counter() - t0
+
+    def _chunk_step(self):
+        st = self._chunking
+        t0 = time.perf_counter()
+        start, width, n_real = st["plan"][st["i"]]
+        req = st["req"]
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :n_real] = req.tokens[start:start + n_real]
+        logits, self.ws = paged_chunk_fn(self.cfg)(
+            self.params, jnp.asarray(toks), self.ws, jnp.int32(start),
+            jnp.int32(n_real))
+        st["i"] += 1
+        self.t_prefill += time.perf_counter() - t0
+        if st["i"] == len(st["plan"]):
+            self._finish_chunking(logits)
+
+    def _finish_chunking(self, logits):
+        """Commit the finished prefill: splice workspace KV [hit, L) to
+        the pages (never rewriting shared prefix-hit pages), install the
+        block row + length, publish the prompt to the prefix cache, and
+        sample the first token."""
+        st, self._chunking = self._chunking, None
+        req, slot, row_j = st["req"], st["slot"], st["row"]
+        t0 = time.perf_counter()
+        L = len(req.tokens)
+        self.cache = dict(self.cache)
+        self.cache["pool"] = paged_splice_fn(self.cfg)(
+            self.cache["pool"], self.ws, row_j, jnp.int32(st["hit"]),
+            jnp.int32(L))
+        self.cache["block"] = self.cache["block"].at[slot].set(row_j)
+        self.cache["len"] = self.cache["len"].at[slot].set(L)
+        self.pkv.insert_prefix(slot, req.tokens)
+        self._install_first_token(slot, req, logits, L, t0)
+
+    def _admit_paged_encdec(self, slot: int, req: Request) -> bool:
+        """encdec admission: reserve pages, run ONE bucket-padded prefill
+        (per-stream ``lengths`` keeps the causal decoder exact under
+        right-padding), splice self-attn KV to the pages and park the
+        cross-attn memory in the slot's dense lane. Returns False on a
+        page shortfall (head-of-line waits)."""
+        total = len(req.tokens) + req.max_new
+        got = self.pkv.admit(slot, None, total)
+        if got is None:
+            return False
+        self.queue.popleft()
+        row, _ = got
+        req.t_admit = time.perf_counter()
+        req.kv_pages = len(self.pkv.rows[slot])
+        t0 = time.perf_counter()
+        L = len(req.tokens)
+        Lb = paged_kv.next_pow2(max(L, self.buckets[0]))
+        toks = np.zeros((1, Lb), np.int32)
+        toks[0, :L] = req.tokens
+        batch = {"tokens": jnp.asarray(toks),
+                 "frames": jnp.asarray(req.frames)[None]}
+        logits, pcache = prefill_fn(self.cfg, self.max_len, self.mesh)(
+            self.params, batch, jnp.asarray([L], jnp.int32))
+        row_j = jnp.asarray(row)
+        self.cache = dict(paged_encdec_splice_fn(self.cfg)(
+            self.cache, pcache["layers"], row_j, jnp.int32(L),
+            jnp.int32(slot)))
+        self.cache["block"] = self.cache["block"].at[slot].set(row_j)
+        self.cache["len"] = self.cache["len"].at[slot].set(L)
+        self.cache["src_len"] = self.cache["src_len"].at[slot].set(
+            req.frames.shape[0])
+        self._install_first_token(slot, req, logits, L, t0)
+        return True
+
+    def _install_first_token(self, slot: int, req: Request, logits,
+                             length: int, t0: float):
+        """Shared admission tail: sample token 1, arm the slot, retire
+        immediately if max_new == 1 or the first token is EOS."""
+        tok1, keys1 = _sample_fn(self.greedy)(
+            logits, req.key[None], jnp.float32(self.temperature))
+        self.tok = self.tok.at[slot].set(tok1[0])
+        self.keys = self.keys.at[slot].set(keys1[0])
+        first = int(np.asarray(jax.device_get(tok1))[0, 0])
+        now = time.perf_counter()
+        req.t_first = now
+        req.out = [first]
+        req.pstart = len(self._pending)
+        self.slots[slot] = req
+        self.n_admitted += 1
+        self.pkv.lens[slot] = length
+        self._maybe_retire(slot)
+        self.t_prefill += now - t0
+
+    def _release_window_pages(self):
+        """Sliding-window decode never reads KV behind ``len - window``:
+        free those pages (refcount-aware — shared prefix pages stay) and
+        zero their device block entries so the freed physical pages
+        can't be read or written through stale rows."""
+        updates = []
+        for slot, r in enumerate(self.slots):
+            if r is None:
+                continue
+            for j in self.pkv.release_behind_window(slot, self.cfg.window):
+                updates.append((slot, j))
+        if updates:
+            rows = jnp.asarray([u[0] for u in updates], jnp.int32)
+            cols = jnp.asarray([u[1] for u in updates], jnp.int32)
+            self.cache = dict(self.cache)
+            self.cache["block"] = self.cache["block"].at[rows, cols].set(0)
+
+    def _warm_paged(self):
+        """AOT-warm every jit the paged engine can hit, closing the trace
+        set at startup: all prefill bucket widths, hydrate, splice, the
+        sampler, and the decode step. All calls are functional and their
+        outputs are discarded — the engine cache stays zeroed. Serving
+        must add no traces after this (``paged_trace_counts`` lets tests
+        assert exactly that)."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        temp = jnp.float32(self.temperature)
+        zrow = jnp.zeros((self.n_blocks,), jnp.int32)
+        lg = None
+        if cfg.family == "encdec":
+            frames = jnp.zeros((1, self.src_len, cfg.d_model), cfg.dtype)
+            for width in self.buckets:
+                lg, pc = prefill_fn(cfg, self.max_len, self.mesh)(
+                    self.params,
+                    {"tokens": jnp.zeros((1, width), jnp.int32),
+                     "frames": frames},
+                    jnp.asarray([1], jnp.int32))
+                paged_encdec_splice_fn(cfg)(
+                    self.cache, pc["layers"], zrow, jnp.int32(0),
+                    jnp.int32(0))
+            # NOTE: source widths re-trace per width — warmup covers the
+            # full src_len; ragged-source workloads trace on first use
+        else:
+            ws = paged_hydrate_fn(cfg, self.wws)(
+                self.cache["pool"], zrow, jnp.int32(0))
+            for width in self.buckets:
+                lg, ws = paged_chunk_fn(cfg)(
+                    self.params, jnp.zeros((1, width), jnp.int32), ws,
+                    jnp.int32(0), jnp.int32(width))
+            paged_splice_fn(cfg)(self.cache["pool"], ws, zrow,
+                               jnp.int32(0), jnp.int32(0))
+        _sample_fn(self.greedy)(lg, self.keys[:1], temp)
+        out = _paged_step_fn(cfg, self.greedy, self.mesh, self.capacity,
+                             self.n_pages, self.page_size, self.n_blocks,
+                             self.src_len)(
+            self.params, self.tok, self.cache, self.keys, temp)
+        jax.block_until_ready(out)
+        self.t_warmup = time.perf_counter() - t0
+
+    def paged_trace_counts(self) -> Dict[str, int]:
+        """Jit-cache entry counts for every paged entry point this
+        engine drives. The warmup closes the trace set, so serving must
+        not grow these — the paged test-suite asserts the dict is
+        unchanged across a full serve. NOTE: the underlying jits are
+        lru-shared process-wide per config, so tests comparing engines
+        that share a config should assert deltas, not absolutes."""
+        cfg = self.cfg
+        out = {
+            "decode": _paged_step_fn(
+                cfg, self.greedy, self.mesh, self.capacity, self.n_pages,
+                self.page_size, self.n_blocks, self.src_len)._cache_size(),
+            "sample": _sample_fn(self.greedy)._cache_size(),
+        }
+        if cfg.family == "encdec":
+            pf = prefill_fn(cfg, self.max_len, self.mesh)
+            if hasattr(pf, "_cache_size"):
+                out["prefill"] = pf._cache_size()
+            out["splice"] = paged_encdec_splice_fn(cfg)._cache_size()
+        else:
+            out["chunk"] = paged_chunk_fn(cfg)._cache_size()
+            out["splice"] = paged_splice_fn(cfg)._cache_size()
+            out["hydrate"] = paged_hydrate_fn(cfg, self.wws)._cache_size()
+        return out
 
     # ------------------------------------------------------ static batch
 
@@ -417,6 +735,9 @@ class Engine:
         """
         if self.queue or any(s is not None for s in self.slots):
             raise RuntimeError("preload requires an idle engine")
+        if self.paged:
+            raise RuntimeError("preload is a slot-pool fast path; submit "
+                               "requests individually on a paged engine")
         toks = batch["tokens"]
         B, P = toks.shape
         if B != self.capacity:
@@ -496,7 +817,9 @@ class Engine:
         if self._t_start is None:
             self._t_start = time.perf_counter()
         before = set(self.results)
-        if self.queue and None in self.slots:
+        if self.paged:
+            self._paged_admit()
+        elif self.queue and None in self.slots:
             free = [i for i, s in enumerate(self.slots) if s is None]
             take = [self.queue.popleft()
                     for _ in range(min(len(free), len(self.queue)))]
@@ -509,12 +832,24 @@ class Engine:
         active = [r for r in self.slots if r is not None]
         if active:
             t0 = time.perf_counter()
-            self.tok, self.cache, self.keys = _step_fn(
-                self.cfg, self.greedy, self.mesh, self.capacity,
-                self.max_len, self.src_len)(
-                    self.params, self.tok, self.cache, self.keys,
-                    jnp.float32(self.temperature))
+            if self.paged:
+                fn = _paged_step_fn(self.cfg, self.greedy, self.mesh,
+                                    self.capacity, self.n_pages,
+                                    self.page_size, self.n_blocks,
+                                    self.src_len)
+            else:
+                fn = _step_fn(self.cfg, self.greedy, self.mesh,
+                              self.capacity, self.max_len, self.src_len)
+            self.tok, self.cache, self.keys = fn(
+                self.params, self.tok, self.cache, self.keys,
+                jnp.float32(self.temperature))
             self._pending.append(self.tok[:, 0])
+            if self.paged:
+                for i, r in enumerate(self.slots):
+                    if r is not None:
+                        self.pkv.lens[i] += 1
+                if self.cfg.window is not None:
+                    self._release_window_pages()
             n_pend = len(self._pending)
             if (any(r.eos_id is not None for r in active)
                     or any(len(r.out) + n_pend - r.pstart >= r.max_new
@@ -526,7 +861,8 @@ class Engine:
 
     @property
     def idle(self) -> bool:
-        return not self.queue and all(s is None for s in self.slots)
+        return (not self.queue and self._chunking is None
+                and all(s is None for s in self.slots))
 
     def run(self, stream: bool = False):
         """Drive the engine until every request retires.
@@ -553,9 +889,10 @@ class Engine:
         # first tokens come from prefill; decode produced the rest
         decoded = sum(max(r["n_new"] - 1, 0) for r in done)
         lat = sorted(r["t_total_s"] for r in done) or [0.0]
+        ttft = sorted(r["t_first_token_s"] for r in done) or [0.0]
         wall = ((time.perf_counter() - self._t_start)
                 if self._t_start is not None else 0.0)
-        return {
+        out = {
             "capacity": self.capacity,
             "max_len": self.max_len,
             "backend": self.cfg.kernel_backend,
@@ -572,4 +909,12 @@ class Engine:
             "goodput_tok_s": new_toks / max(wall, 1e-9),
             "p50_latency_s": float(np.percentile(lat, 50)),
             "p95_latency_s": float(np.percentile(lat, 95)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "paged": self.paged,
         }
+        if self.paged:
+            out.update(self.pkv.stats())
+            out["kv_bytes_per_token"] = paged_kv.kv_bytes_per_token(self.cfg)
+            out["t_warmup_s"] = self.t_warmup
+        return out

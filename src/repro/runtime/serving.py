@@ -179,6 +179,75 @@ def prefill_fn(cfg: ModelConfig, max_len: int, mesh=None):
     return sharded
 
 
+# ---------------------------------------------------------------------------
+# paged entry points (block-table KV; see runtime/paged_kv.py)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_step(cfg: ModelConfig, params, token, cache):
+    return api.paged_decode_step(params, cfg, token, cache)
+
+
+@functools.lru_cache(maxsize=64)
+def paged_decode_fn(cfg: ModelConfig, mesh=None, batch: Optional[int] = None,
+                    n_pages: Optional[int] = None,
+                    page_size: Optional[int] = None,
+                    n_blocks: Optional[int] = None, src_len: int = 0):
+    """Jit-cached paged decode step (same contract as ``decode_fn``).
+
+    With ``mesh`` the jit pins the paged-cache NamedShardings from
+    ``partition.paged_serve_shardings``: the page pool is model-sharded
+    on the KV-head axis and replicated over data (any slot's block row
+    may reference any page), block table/lengths batch-sharded on data.
+    """
+    if mesh is None:
+        return jax.jit(functools.partial(_paged_decode_step, cfg))
+    if batch is None or n_pages is None or page_size is None or n_blocks is None:
+        raise ValueError("paged_decode_fn(cfg, mesh) needs the pool "
+                         "geometry: batch=, n_pages=, page_size=, n_blocks=")
+    from repro.launch.partition import paged_serve_shardings
+
+    sh = paged_serve_shardings(cfg, mesh, batch=batch, n_pages=n_pages,
+                               page_size=page_size, n_blocks=n_blocks,
+                               src_len=src_len)
+    return jax.jit(functools.partial(_paged_decode_step, cfg),
+                   in_shardings=(None, sh["token"], sh["cache"]),
+                   out_shardings=(sh["logits"], sh["cache"]))
+
+
+@functools.lru_cache(maxsize=64)
+def paged_chunk_fn(cfg: ModelConfig):
+    """One jit for every chunk width: jax re-traces per (1, C) token
+    shape, so ``_cache_size()`` counts exactly the bucket widths hit —
+    the engine's no-new-traces-after-warmup assertion keys on this."""
+    from repro.models import lm as m_lm
+
+    return jax.jit(lambda params, tokens, ws, start, n_real:
+                   m_lm.lm_paged_prefill_chunk(params, cfg, tokens, ws,
+                                               start, n_real))
+
+
+@functools.lru_cache(maxsize=64)
+def paged_splice_fn(cfg: ModelConfig):
+    from repro.models import lm as m_lm
+
+    return jax.jit(functools.partial(m_lm.lm_paged_splice, cfg))
+
+
+@functools.lru_cache(maxsize=64)
+def paged_hydrate_fn(cfg: ModelConfig, wws: int):
+    from repro.models import lm as m_lm
+
+    return jax.jit(lambda pool, row, hist:
+                   m_lm.lm_paged_hydrate(cfg, pool, row, hist, wws))
+
+
+@functools.lru_cache(maxsize=64)
+def paged_encdec_splice_fn(cfg: ModelConfig):
+    from repro.models import encdec as m_encdec
+
+    return jax.jit(functools.partial(m_encdec.encdec_paged_splice, cfg))
+
+
 def generate(
     params,
     cfg: ModelConfig,

@@ -4,11 +4,40 @@ Ensures ``src`` is importable when pytest is run without PYTHONPATH, and
 makes the sibling ``hypothesis_compat`` shim importable from any rootdir
 (property-based tests degrade to skips when hypothesis is absent instead
 of dying at collection).
+
+Also drops compiled executables between test modules: one pytest
+process compiles thousands of XLA CPU programs across the suite, and
+the LLVM JIT eventually segfaults inside ``backend_compile`` if they
+all stay resident (observed at ~300 tests in; the crashing test passes
+in isolation). Clearing the repo's jit lru caches plus
+``jax.clear_caches()`` at module boundaries bounds resident executables
+at the cost of recompiling shared traces per module — correctness is
+unaffected because every module builds its own engines/jits, and the
+paged trace-closure assertions only compare counts within one module.
 """
+import gc
 import sys
 from pathlib import Path
+
+import pytest
 
 _ROOT = Path(__file__).resolve().parent.parent
 for p in (str(_ROOT / "src"), str(Path(__file__).resolve().parent)):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables_per_module():
+    yield
+    import jax
+
+    from repro.launch import partition
+    from repro.runtime import engine, serving
+
+    for mod in (serving, engine, partition):
+        for obj in vars(mod).values():
+            if hasattr(obj, "cache_clear"):
+                obj.cache_clear()
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,442 @@
+"""Paged KV subsystem: allocator / prefix-trie properties + paged parity.
+
+Two layers (see runtime/paged_kv.py and docs/serving.md):
+
+  * host bookkeeping properties (hypothesis): the PageAllocator never
+    double-frees and keeps refcounts balanced through random
+    admit/retire interleavings; prefix-cache eviction never frees a
+    page a live slot still references; copy-on-write ``fork_page``
+    diverges shared pages and no-ops for sole holders.
+  * the serving contract: requests through a paged engine — chunked
+    bucketed prefill, block-table decode, prefix sharing, deferred
+    admission under page pressure — produce tokens **identical** to a
+    solo batch=1 ``generate``, across dense/SWA/GQA and encdec and the
+    decode|fused|packed4 kernel backends; and serving hits only
+    AOT-warmed jit traces (the trace set is closed at engine start).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.policy import serve_view
+from repro.core.spec import QuantSpec
+from repro.models import api
+from repro.models.reduce import reduced
+from repro.runtime import paged_kv
+from repro.runtime.engine import Engine
+from repro.runtime.serving import generate
+
+# ---------------------------------------------------------------------------
+# chunk schedule
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 400), st.integers(0, 399),
+       st.sampled_from([16, 32, 64, 128]))
+@settings(max_examples=200, deadline=None)
+def test_chunk_plan_covers_exactly(length, start, max_chunk):
+    if start >= length:
+        start = 0
+    plan = paged_kv.chunk_plan(length, start, max_chunk)
+    buckets = set(paged_kv.prefill_buckets(max_chunk))
+    pos = start
+    for s, width, n_real in plan:
+        assert s == pos and 1 <= n_real <= width
+        assert width in buckets, (width, buckets)
+        pos += n_real
+    assert pos == length
+    # every chunk fits the workspace envelope regardless of geometry
+    for s, width, _ in plan:
+        assert s + width <= 2 * paged_kv.next_pow2(length)
+
+
+def test_workspace_len_covers_padded_tail():
+    # regression: start=32, rem=90 pads to 128 -> start+width=160 > 128,
+    # so a single next_pow2(max_len) workspace would overflow
+    plan = paged_kv.chunk_plan(122, 32, 32)
+    wws = paged_kv.workspace_len(122, -(-122 // 16), 16)
+    assert all(s + w <= wws for s, w, _ in plan)
+
+
+# ---------------------------------------------------------------------------
+# allocator properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7)),
+                min_size=1, max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_allocator_refcount_balance(ops):
+    """Random alloc/retain/release interleavings keep the free-list and
+    refcounts consistent, and releasing everything returns every page."""
+    alloc = paged_kv.PageAllocator(16)
+    held = []  # one entry per outstanding reference
+    for op, arg in ops:
+        if op == 0:
+            got = alloc.alloc(arg % 4)
+            if got is not None:
+                held.extend(got)
+        elif op == 1 and held:
+            p = held[arg % len(held)]
+            alloc.retain(p)
+            held.append(p)
+        elif op == 2 and held:
+            alloc.release(held.pop(arg % len(held)))
+        alloc.check()
+    for p in held:
+        alloc.release(p)
+    alloc.check()
+    assert alloc.n_free == 15 and alloc.pages_in_use == 0
+
+
+def test_allocator_double_free_and_trash_pinned():
+    alloc = paged_kv.PageAllocator(4)
+    (p,) = alloc.alloc(1)
+    assert alloc.release(p) is True
+    with pytest.raises(AssertionError):
+        alloc.release(p)  # double free
+    assert alloc.release(paged_kv.TRASH_PAGE) is False  # pinned forever
+    assert alloc.alloc(99) is None  # all-or-nothing, no partial grab
+    alloc.check()
+
+
+def test_fork_page_cow_semantics():
+    alloc = paged_kv.PageAllocator(8)
+    (p,) = alloc.alloc(1)
+    # sole holder: no copy needed, same page comes back
+    assert alloc.fork_page(p) == p
+    alloc.retain(p)  # second holder -> fork must diverge
+    q = alloc.fork_page(p)
+    assert q != p and alloc.refs[q] == 1 and alloc.refs[p] == 1
+    alloc.check()
+    # shortfall: fork fails cleanly without dropping the shared ref
+    alloc2 = paged_kv.PageAllocator(2)
+    (r,) = alloc2.alloc(1)
+    alloc2.retain(r)
+    assert alloc2.fork_page(r) is None
+    assert alloc2.refs[r] == 2
+    alloc2.check()
+
+
+# ---------------------------------------------------------------------------
+# prefix cache + PagedKV bookkeeping properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 99)),
+                min_size=1, max_size=60), st.integers(6, 14))
+@settings(max_examples=60, deadline=None)
+def test_pagedkv_admit_retire_balance(ops, n_pages):
+    """Random admit/retire interleavings with prefix sharing: refcounts
+    stay consistent throughout; releasing every slot and clearing the
+    cache returns the whole pool."""
+    rng = np.random.default_rng(0)
+    pkv = paged_kv.PagedKV(n_pages, 4, 8, capacity=4)
+    prompts = [list(rng.integers(0, 3, size=rng.integers(2, 14)))
+               for _ in range(6)]
+    for op, arg in ops:
+        slot = arg % 4
+        if op == 0 and pkv.rows[slot] is None:
+            toks = prompts[arg % len(prompts)]
+            got = pkv.admit(slot, toks, len(toks) + 2)
+            if got is not None:
+                pkv.insert_prefix(slot, toks)
+        elif op == 1:
+            pkv.release_slot(slot)
+        pkv.alloc.check()
+        # eviction (inside admit) must never free a page a slot holds
+        for row in pkv.rows:
+            for p in row or []:
+                assert pkv.alloc.refs[p] > 0
+    for slot in range(4):
+        pkv.release_slot(slot)
+    if pkv.prefix is not None:
+        pkv.prefix.clear()
+    pkv.alloc.check()
+    assert pkv.alloc.pages_in_use == 0
+
+
+def test_fuzz_admit_retire_sweep_without_hypothesis():
+    """Deterministic randomized sweep of the same invariants the
+    hypothesis properties pin, so they are exercised even where
+    hypothesis is not installed (see tests/hypothesis_compat.py)."""
+    rng = np.random.default_rng(42)
+    for trial in range(20):
+        n_pages = int(rng.integers(6, 15))
+        pkv = paged_kv.PagedKV(n_pages, 4, 8, capacity=4)
+        prompts = [list(rng.integers(0, 3, size=int(rng.integers(2, 14))))
+                   for _ in range(6)]
+        for _ in range(40):
+            op, slot = int(rng.integers(0, 2)), int(rng.integers(0, 4))
+            if op == 0 and pkv.rows[slot] is None:
+                toks = prompts[int(rng.integers(0, len(prompts)))]
+                if pkv.admit(slot, toks, len(toks) + 2) is not None:
+                    pkv.insert_prefix(slot, toks)
+            else:
+                pkv.release_slot(slot)
+            pkv.alloc.check()
+            for row in pkv.rows:
+                for p in row or []:
+                    assert pkv.alloc.refs[p] > 0
+        for slot in range(4):
+            pkv.release_slot(slot)
+        pkv.prefix.clear()
+        pkv.alloc.check()
+        assert pkv.alloc.pages_in_use == 0, trial
+
+
+def test_eviction_never_frees_referenced_page():
+    """A slot holds pages the prefix cache also holds; evicting the
+    whole trie must only drop the cache's share — the slot's pages stay
+    allocated and intact."""
+    pkv = paged_kv.PagedKV(8, 4, 4, capacity=2)
+    toks = list(range(8))  # two full pages
+    row, hit = pkv.admit(0, toks, 8)
+    assert hit == 0
+    pkv.insert_prefix(0, toks)
+    held = list(pkv.rows[0])
+    pkv.prefix.evict(10 ** 9)  # force-evict everything evictable
+    for p in held:
+        assert pkv.alloc.refs[p] > 0  # slot's refs survived
+    pkv.release_slot(0)
+    pkv.alloc.check()
+
+
+def test_prefix_match_never_serves_last_prompt_page():
+    """The page holding the last prompt token must be recomputed (its
+    logits seed sampling), so a full-prompt cache hit is capped."""
+    pkv = paged_kv.PagedKV(16, 4, 4, capacity=2)
+    toks = list(range(8))
+    pkv.admit(0, toks, 8)
+    pkv.insert_prefix(0, toks)
+    _, hit = pkv.admit(1, toks, 8)  # identical prompt
+    # 8 tokens / page 4 -> 2 full pages, but the hit stops at page 1
+    assert hit == 4
+    pkv.release_slot(0), pkv.release_slot(1)
+    pkv.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# paged-vs-slot serving parity
+# ---------------------------------------------------------------------------
+
+
+def _fp_setup(arch):
+    cfg = reduced(get_config(arch)).replace(quant=None, act_bits=32,
+                                            remat=False)
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _solo(params, cfg, toks, steps, max_len, **kw):
+    return np.asarray(
+        generate(params, cfg, {"tokens": jnp.asarray(toks[None])},
+                 steps=steps, max_len=max_len, **kw))[0]
+
+
+LENS = [6, 14, 9, 11]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b",    # GQA + SWA
+                                  "mistral-nemo-12b"])  # GQA, no window
+def test_paged_parity_and_trace_closure(arch):
+    """Paged engine == solo generate, token-identical, with slot churn
+    and mid-flight admission — and serving compiles nothing after the
+    AOT warmup (all prefill shapes land on warmed buckets)."""
+    cfg, params = _fp_setup(arch)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (4, 14),
+                                         0, cfg.vocab), np.int32)
+    G, max_len = 4, 20
+    eng = Engine(params, cfg, capacity=2, max_len=max_len,
+                 kv_pages=12, page_size=16)
+    assert eng.paged
+    traces = eng.paged_trace_counts()
+    for i, L in enumerate(LENS):
+        eng.submit(toks[i, :L], max_new=G)
+    res = eng.run()
+    assert eng.paged_trace_counts() == traces, "serving added jit traces"
+    for i, L in enumerate(LENS):
+        want = _solo(params, cfg, toks[i, :L], G, max_len)
+        np.testing.assert_array_equal(res[i]["tokens"], want,
+                                      err_msg=f"{arch} request {i}")
+    eng.pkv.alloc.check()
+
+
+@pytest.mark.slow
+def test_paged_parity_int8_kv():
+    """int8 KV pages: chunked prefill runs in an fp workspace and
+    quantizes at the splice — exactly where the slot path quantizes —
+    so int8 paged serving stays token-identical to int8 solo."""
+    cfg, params = _fp_setup("mistral-nemo-12b")
+    cfg = cfg.replace(kv_cache_bits=8)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (4, 14),
+                                         0, cfg.vocab), np.int32)
+    G, max_len = 4, 20
+    eng = Engine(params, cfg, capacity=2, max_len=max_len,
+                 kv_pages=12, page_size=16)
+    for i, L in enumerate(LENS):
+        eng.submit(toks[i, :L], max_new=G)
+    res = eng.run()
+    for i, L in enumerate(LENS):
+        want = _solo(params, cfg, toks[i, :L], G, max_len)
+        np.testing.assert_array_equal(res[i]["tokens"], want,
+                                      err_msg=f"int8 request {i}")
+
+
+@pytest.mark.slow
+def test_paged_parity_encdec():
+    """encdec pages its growing self-attn KV (fp pages — the slot path
+    never quantizes encdec); cross-attn memory stays dense per slot."""
+    cfg, params = _fp_setup("seamless-m4t-medium")
+    rng = jax.random.PRNGKey(7)
+    frames = [np.asarray(jax.random.normal(jax.random.fold_in(rng, i),
+                                           (13, cfg.d_model)), np.float32)
+              for i in range(3)]
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (3, 12),
+                                         0, cfg.vocab), np.int32)
+    lens, G, max_len = [5, 12, 8], 4, 18
+    eng = Engine(params, cfg, capacity=2, max_len=max_len, src_len=13,
+                 kv_pages=12, page_size=16)
+    assert eng.paged
+    traces = eng.paged_trace_counts()
+    for i, L in enumerate(lens):
+        eng.submit(toks[i, :L], max_new=G, frames=frames[i])
+    res = eng.run()
+    assert eng.paged_trace_counts() == traces
+    for i, L in enumerate(lens):
+        want = np.asarray(generate(
+            params, cfg, {"tokens": jnp.asarray(toks[i:i + 1, :L]),
+                          "frames": jnp.asarray(frames[i][None])},
+            steps=G, max_len=max_len))[0]
+        np.testing.assert_array_equal(res[i]["tokens"], want,
+                                      err_msg=f"encdec request {i}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["decode", "fused", "packed4"])
+def test_paged_parity_kernel_backends(backend):
+    """Parity holds on serve-form LUT-Q weights through every kernel
+    execution backend — the deployment configuration."""
+    cfg = reduced(get_config("h2o-danube-1.8b")).replace(
+        quant=QuantSpec(bits=4, min_size=256), act_bits=8, remat=False)
+    params, axes = api.init(jax.random.PRNGKey(0), cfg)
+    sv = serve_view(api.quantize(params, cfg, axes), pack4=backend == "packed4",
+                    policy=api.resolved_policy(cfg))
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (3, 14),
+                                         0, cfg.vocab), np.int32)
+    lens, G, max_len = [6, 14, 9], 4, 20
+    eng = Engine(sv, cfg, capacity=2, max_len=max_len, backend=backend,
+                 kv_pages=12, page_size=16)
+    assert eng.paged and eng.stats()["backend"] == backend
+    for i, L in enumerate(lens):
+        eng.submit(toks[i, :L], max_new=G)
+    res = eng.run()
+    for i, L in enumerate(lens):
+        want = _solo(sv, cfg, toks[i, :L], G, max_len, backend=backend)
+        np.testing.assert_array_equal(res[i]["tokens"], want,
+                                      err_msg=f"{backend} request {i}")
+
+
+@pytest.mark.slow
+def test_paged_overbudget_demand_completes_exactly():
+    """The ISSUE acceptance workload: summed prompt+max_new KV demand
+    exceeds what capacity x max_len slot caches could ever hold at once
+    relative to the pool — requests defer under page pressure and every
+    one still completes token-identical to solo."""
+    cfg, params = _fp_setup("mistral-nemo-12b")
+    G, max_len = 6, 32
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (8, 20),
+                                         0, cfg.vocab), np.int32)
+    lens = [18, 9, 14, 20, 7, 16, 11, 13]
+    # 7 allocatable pages x 8 tokens vs ~150 tokens of summed demand
+    eng = Engine(params, cfg, capacity=4, max_len=max_len,
+                 kv_pages=8, page_size=8)
+    assert sum(L + G for L in lens) > (eng.n_pages - 1) * eng.page_size
+    for i, L in enumerate(lens):
+        eng.submit(toks[i, :L], max_new=G)
+    res = eng.run()
+    assert [r["rid"] for r in res] == list(range(8))  # FIFO preserved
+    for i, L in enumerate(lens):
+        want = _solo(params, cfg, toks[i, :L], G, max_len)
+        np.testing.assert_array_equal(res[i]["tokens"], want,
+                                      err_msg=f"deferred request {i}")
+    eng.pkv.alloc.check()
+    assert eng.stats()["pages_peak"] <= eng.n_pages - 1
+
+
+@pytest.mark.slow
+def test_paged_prefix_sharing_parity_and_hits():
+    """Shared system prompts map the same physical pages: the second+
+    requests hit the prefix cache (hit rate > 0) and still decode
+    token-identical to solo runs."""
+    cfg, params = _fp_setup("mistral-nemo-12b")
+    G = 4
+    sys_p = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (18,),
+                                          0, cfg.vocab), np.int32)
+    prompts = [np.concatenate([sys_p, np.asarray(
+        jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(4), i),
+                           (4,), 0, cfg.vocab), np.int32)]) for i in range(3)]
+    eng = Engine(params, cfg, capacity=2, max_len=32,
+                 kv_pages=16, page_size=8)
+    for p in prompts:
+        eng.submit(p, max_new=G)
+    res = eng.run()
+    st = eng.stats()
+    assert st["prefix_hits"] > 0 and st["prefix_hit_rate"] > 0
+    for i, p in enumerate(prompts):
+        want = _solo(params, cfg, p, G, 32)
+        np.testing.assert_array_equal(res[i]["tokens"], want,
+                                      err_msg=f"shared-prefix request {i}")
+
+
+@pytest.mark.slow
+def test_paged_swa_behind_window_release():
+    """Sliding-window decode frees pages behind the window; the
+    allocator stays consistent and generation runs to completion."""
+    cfg, params = _fp_setup("h2o-danube-1.8b")
+    assert cfg.window is not None
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 30),
+                                         0, cfg.vocab), np.int32)
+    eng = Engine(params, cfg, capacity=2, max_len=48, kv_pages=20,
+                 page_size=8)
+    for i in range(2):
+        eng.submit(toks[i], max_new=12)
+    saw_freed = False
+    while not eng.idle:
+        eng.step()
+        eng.pkv.alloc.check()
+        # a live slot's early blocks turn into trash entries once its
+        # length passes window + page_size (lengths reach 42 > 24+8)
+        saw_freed = saw_freed or any(
+            row is not None and paged_kv.TRASH_PAGE in row
+            for row in eng.pkv.rows)
+    assert saw_freed, "no page was released behind the window"
+    res = [eng.results[rid] for rid in sorted(eng.results)]
+    assert all(r["n_new"] == 12 for r in res)
+    eng.pkv.alloc.check()
+
+
+def test_unsupported_family_falls_back_to_slot_path():
+    """ssm/hybrid/MLA keep the slot pool behind the same Engine API."""
+    cfg, params = _fp_setup("rwkv6-1.6b")
+    eng = Engine(params, cfg, capacity=2, max_len=16, kv_pages=8)
+    assert not eng.paged and not eng.stats()["paged"]
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (1, 6),
+                                         0, cfg.vocab), np.int32)
+    eng.submit(toks[0], max_new=3)
+    res = eng.run()
+    want = _solo(params, cfg, toks[0], 3, 16)
+    np.testing.assert_array_equal(res[0]["tokens"], want)
+
+
+def test_paged_submit_rejects_impossible_reservation():
+    cfg, params = _fp_setup("mistral-nemo-12b")
+    eng = Engine(params, cfg, capacity=2, max_len=32, kv_pages=3,
+                 page_size=8, warmup=False)
+    with pytest.raises(ValueError):
+        # needs 3 pages; pool only has 2 allocatable (page 0 is trash)
+        eng.submit(np.arange(20, dtype=np.int32), max_new=4)

@@ -118,10 +118,17 @@ def _run(mesh=None, *, steps=20, compress=None, ckpt_dir=None, arch=ARCH):
 # acceptance: loss-trajectory parity solo vs 2x4
 # ---------------------------------------------------------------------------
 
-def test_loss_trajectory_parity_solo_vs_mesh():
+@pytest.mark.parametrize("arch", [
+    ARCH,
+    # deepseek exercises MLA under the 4-way model axis: its rope-half
+    # q/k assembly is the concat-along-sharded-dim partitioner hazard
+    # fixed in nn/mla.py (host 0/1 einsum assembly) — this param pins it
+    "deepseek-v2-lite-16b",
+])
+def test_loss_trajectory_parity_solo_vs_mesh(arch):
     steps = 50
-    _, _, solo, _ = _run(None, steps=steps)
-    _, _, mesh, _ = _run(_mesh(), steps=steps)
+    _, _, solo, _ = _run(None, steps=steps, arch=arch)
+    _, _, mesh, _ = _run(_mesh(), steps=steps, arch=arch)
     assert len(solo) == len(mesh) == steps
     rels = [abs(a - b) / abs(a) for a, b in zip(solo, mesh)]
     # first step: reduction-order noise only (no chaos amplification yet)
