@@ -6,10 +6,20 @@ bytes each variant moves (the paper's memory-traffic claim).
 
 The backend section times ``kernels.ops.lutq_dot`` end-to-end per
 execution backend (decode vs fused vs packed4) on one serve-form
-LutqState and emits ``BENCH_kernels.json`` at the repo root —
-weight-GB/s + ms per backend, next to the analytic v5e roofline each
-would be bound by — so the perf trajectory is recorded per commit and
-``benchmarks/roofline.py`` can cross-check measured vs modeled.
+LutqState — first with the default tiles, then after a
+``kernels.autotune`` search — and emits ``BENCH_kernels.json`` at the
+repo root. Every record carries ``platform``/``interpret`` honestly
+(interpret-mode numbers can never masquerade as TPU ones), the rep
+count the median was taken over, and ``measured_over_model`` — the
+measured/modeled ratio bench-smoke gates per backend so a timing-path
+regression fails CI instead of drifting silently. The tuned tiles are
+written alongside as a tuning-cache JSON artifact that
+``launch/serve.py --autotune cache`` consumes directly.
+
+Timing discipline (uniform across every row): one compile call plus
+``warmup`` synced warmup calls are excluded, then each of ``reps``
+timed calls is individually fenced with ``block_until_ready`` and the
+median is reported (see ``kernels.autotune.measure_call``).
 """
 from __future__ import annotations
 
@@ -17,7 +27,6 @@ import argparse
 import functools
 import json
 import sys
-import time
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
@@ -27,7 +36,8 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core.lutq import LutqState  # noqa: E402
-from repro.kernels import ops  # noqa: E402
+from repro.kernels import autotune, ops  # noqa: E402
+from repro.kernels.autotune import measure_call  # noqa: E402
 from repro.kernels.ref import (  # noqa: E402
     kmeans_stats_ref,
     lutq_gemv_packed_ref,
@@ -39,25 +49,22 @@ from repro.kernels.ref import (  # noqa: E402
 HBM_BW = 819e9
 
 
-def _time(fn, *args, reps=5):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
-
-
-def bench_backends(quick: bool = False, reps: int = 5):
+def bench_backends(quick: bool = False, reps: int = 5, warmup: int = 2,
+                   tune: bool = True):
     """Time lutq_dot per backend on one serve-form leaf.
 
-    Returns {backend: {us, ms, weight_bytes, gbps, v5e_model_us}}:
+    Returns {backend: {us, ms, weight_bytes, gbps, v5e_model_us,
+    measured_over_model[, tuned_us, tuned_tile, tuned_over_default]}}:
     ``weight_bytes`` is the weight traffic each backend moves per call
     (f32 dense for decode after materialization, int8 indices for
     fused, packed nibbles for packed4) — the quantity the paper's
     memory-roofline argument is about; ``gbps`` the implied bandwidth at
     the measured time; ``v5e_model_us`` the analytic HBM-bound time at
-    v5e bandwidth for those bytes.
+    v5e bandwidth for those bytes; ``measured_over_model`` their ratio
+    (the bench-smoke gate: ~1-10 on real TPU, O(1e2-1e4) in interpret
+    mode). With ``tune=True`` the fused/packed4 rows are re-timed after
+    an autotune search over the same shape; the default-tile timings
+    are taken *first*, while the process tuning cache is still empty.
     """
     B = 8
     Kin, N = (512, 512) if quick else (2048, 2048)
@@ -79,20 +86,39 @@ def bench_backends(quick: bool = False, reps: int = 5):
         # constant lets XLA fold the d[A] decode at compile time, which
         # would erase exactly the per-call decode cost being measured.
         fn = jax.jit(functools.partial(ops.lutq_dot, backend=name))
-        us = _time(fn, x, state, reps=reps)
+        us = measure_call(fn, x, state, reps=reps, warmup=warmup)
+        model_us = wbytes / HBM_BW * 1e6
         out[name] = {
             "us": us,
             "ms": us / 1e3,
             "weight_bytes": wbytes,
             "gbps": wbytes / (us * 1e-6) / 1e9,
-            "v5e_model_us": wbytes / HBM_BW * 1e6,
+            "v5e_model_us": model_us,
+            "measured_over_model": us / model_us,
         }
+    if tune:
+        # defaults are timed above with an empty cache; now search and
+        # re-time through the same lutq_dot entry point, which consults
+        # the freshly tuned tiles at trace time
+        tc = ops.tuning_cache()
+        for name in ("fused", "packed4"):
+            state = cases[name][0]
+            _, tile, _ = autotune.tune(
+                autotune.KERNEL_OF_BACKEND[name], M=B, N=N, Kin=Kin, K=16,
+                backend=name, reps=max(reps - 2, 2), warmup=warmup, cache=tc)
+            fn = jax.jit(functools.partial(ops.lutq_dot, backend=name))
+            tuned_us = measure_call(fn, x, state, reps=reps, warmup=warmup)
+            out[name]["tuned_tile"] = tile.to_json_dict()
+            out[name]["tuned_us"] = tuned_us
+            out[name]["tuned_over_default"] = tuned_us / out[name]["us"]
     return {"shape": {"B": B, "Kin": Kin, "N": N, "K": 16},
-            "interpret": jax.default_backend() != "tpu",
+            "platform": autotune.platform(),
+            "interpret": autotune.default_interpret(),
+            "reps": reps, "warmup": warmup,
             "backends": out}
 
 
-def run(emit=print, quick: bool = False):
+def run(emit=print, quick: bool = False, reps: int = 5, warmup: int = 2):
     rows = []
     key = jax.random.PRNGKey(0)
     B, Kin, N = (8, 512, 512) if quick else (8, 2048, 2048)
@@ -100,6 +126,8 @@ def run(emit=print, quick: bool = False):
     a = jax.random.randint(key, (Kin, N), 0, 16, jnp.int8)
     packed = pack4(a)
     d = jnp.sort(jax.random.normal(key, (16,)))
+
+    _time = functools.partial(measure_call, reps=reps, warmup=warmup)
 
     # modeled v5e HBM-bound decode times (weight bytes / bw)
     t_bf16 = Kin * N * 2 / HBM_BW * 1e6
@@ -137,13 +165,21 @@ def run(emit=print, quick: bool = False):
     us = _time(lambda: dense_attention(q[:, :, None], kk[:, :, None],
                                        vv[:, :, None], causal=True))
     rows.append(("causal_attn_dense_jnp", us, f"S={S},full_S2_flops"))
-    us = _time(lambda: flash_attention_tpu(q, kk, vv, causal=True,
-                                           interpret=True))
-    rows.append(("causal_flash_pallas_interp", us,
-                 f"S={S},block_skipped=~S2/2_flops"))
+    if quick and autotune.default_interpret():
+        # interpret-mode flash is a per-element Python emulation — even
+        # at S=128 it dominates the whole smoke run by ~100x while
+        # measuring nothing the S=512 full bench doesn't. Record the
+        # skip explicitly instead of leaving a hole in the schema.
+        rows.append(("causal_flash_pallas_interp", None,
+                     f"S={S},skipped=interpret_quick"))
+    else:
+        us = _time(lambda: flash_attention_tpu(
+            q, kk, vv, causal=True, interpret=autotune.default_interpret()))
+        rows.append(("causal_flash_pallas_interp", us,
+                     f"S={S},block_skipped=~S2/2_flops"))
 
     for name, us, derived in rows:
-        emit(f"{name},{us:.1f},{derived}")
+        emit(f"{name},{'skipped' if us is None else f'{us:.1f}'},{derived}")
     return rows
 
 
@@ -153,25 +189,48 @@ def main(argv=None):
                     help="small shapes / CI smoke (interpret mode)")
     ap.add_argument("--json-out", default=str(ROOT / "BENCH_kernels.json"),
                     help="where to write the backend comparison record")
+    ap.add_argument("--tuning-out",
+                    default=str(ROOT / "BENCH_tuning_cache.json"),
+                    help="where to write the tuned-tile cache artifact "
+                         "(consumed by launch/serve.py --autotune cache)")
+    ap.add_argument("--no-tune", action="store_true",
+                    help="skip the autotune search / tuned columns")
     args = ap.parse_args(argv)
 
-    rows = run(quick=args.quick)
-    rec = bench_backends(quick=args.quick, reps=3 if args.quick else 5)
+    reps, warmup = (3, 1) if args.quick else (5, 2)
+    rows = run(quick=args.quick, reps=reps, warmup=warmup)
+    rec = bench_backends(quick=args.quick, reps=reps, warmup=warmup,
+                         tune=not args.no_tune)
     rec["kernels"] = [
-        {"name": n, "us": round(us, 1), "derived": d} for n, us, d in rows]
+        {"name": n,
+         "us": None if us is None else round(us, 1),
+         "skipped": us is None,
+         "derived": d} for n, us, d in rows]
     dec, fus, pk = (rec["backends"][k] for k in ("decode", "fused", "packed4"))
     print(f"lutq_dot decode vs fused vs packed4 "
           f"(B={rec['shape']['B']}, {rec['shape']['Kin']}x{rec['shape']['N']}, "
-          f"interpret={rec['interpret']}):")
+          f"platform={rec['platform']}, interpret={rec['interpret']}, "
+          f"median of {rec['reps']}):")
     for name in ("decode", "fused", "packed4"):
         b = rec["backends"][name]
+        tuned = ""
+        if "tuned_us" in b:
+            t = b["tuned_tile"]
+            tuned = (f"   tuned {b['tuned_us']/1e3:.3f} ms "
+                     f"({b['tuned_over_default']:.2f}x default, "
+                     f"{t['bm']}x{t['bn']}x{t['bk']}/{t['strategy']})")
         print(f"  {name:8s} {b['ms']:10.3f} ms   "
               f"{b['gbps']:8.3f} GB/s weight traffic   "
-              f"(v5e HBM-bound model {b['v5e_model_us']:.2f} us)")
+              f"(v5e HBM-bound model {b['v5e_model_us']:.2f} us, "
+              f"measured/model {b['measured_over_model']:.0f}x){tuned}")
     print(f"  weight-byte reduction: fused {dec['weight_bytes']/fus['weight_bytes']:.0f}x, "
           f"packed4 {dec['weight_bytes']/pk['weight_bytes']:.0f}x vs f32 decode")
     Path(args.json_out).write_text(json.dumps(rec, indent=1))
     print(f"wrote {args.json_out}")
+    if not args.no_tune and len(ops.tuning_cache()):
+        ops.tuning_cache().save(args.tuning_out)
+        print(f"wrote {args.tuning_out} "
+              f"({len(ops.tuning_cache())} tuned tiles)")
     return 0
 
 

@@ -459,14 +459,32 @@ def kernel_bench_comparison(bench_path: Path):
         return None
     rec = json.loads(bench_path.read_text())
     lines = [f"kernel backends measured vs modeled "
-             f"({bench_path.name}, interpret={rec.get('interpret')}):"]
+             f"({bench_path.name}, platform={rec.get('platform', '?')}, "
+             f"interpret={rec.get('interpret')}, "
+             f"median of {rec.get('reps', '?')}):"]
     base = rec["backends"].get("decode", {}).get("weight_bytes")
     for name, b in rec["backends"].items():
         ratio = base / b["weight_bytes"] if base else float("nan")
+        # measured_over_model is the roofline fraction on real TPU (and
+        # the bench-smoke gate everywhere); older records predate it
+        mom = b.get("measured_over_model",
+                    b["us"] / b["v5e_model_us"] if "us" in b else float("nan"))
+        tuned = ""
+        if "tuned_us" in b:
+            t = b.get("tuned_tile", {})
+            tuned = (f" | tuned {b['tuned_us']/1e3:.3f} ms "
+                     f"({b.get('tuned_over_default', float('nan')):.2f}x, "
+                     f"{t.get('bm')}x{t.get('bn')}x{t.get('bk')}"
+                     f"/{t.get('strategy')})")
         lines.append(
             f"  {name:8s} measured {b['ms']:9.3f} ms | weight bytes "
             f"{b['weight_bytes']/2**20:7.2f} MiB ({ratio:.1f}x less than f32) "
-            f"| v5e HBM-bound {b['v5e_model_us']:.2f} us")
+            f"| v5e HBM-bound {b['v5e_model_us']:.2f} us "
+            f"| measured/model {mom:.0f}x{tuned}")
+    skipped = [k["name"] for k in rec.get("kernels", [])
+               if k.get("skipped")]
+    if skipped:
+        lines.append(f"  (skipped rows: {', '.join(skipped)})")
     return "\n".join(lines)
 
 

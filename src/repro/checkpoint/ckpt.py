@@ -76,7 +76,8 @@ def _unflatten(items: Dict[str, Any]):
 
 
 def save(tree, directory: str, step: int, *, keep_n: int = 3,
-         policy: Optional[QuantPolicy] = None, mesh=None) -> str:
+         policy: Optional[QuantPolicy] = None, mesh=None,
+         tuning=None) -> str:
     """Synchronous checkpoint write. Returns the final path.
 
     ``policy``: the QuantPolicy governing any LutqState leaves; stored
@@ -87,6 +88,11 @@ def save(tree, directory: str, step: int, *, keep_n: int = 3,
     recorded in the manifest (axis names + sizes) so a restore job can
     tell whether it is re-sharding onto a different topology (elastic
     restore) or resuming in place. See :func:`load_mesh`.
+
+    ``tuning``: a ``kernels.autotune.TuningCache`` (or its json dict);
+    stored in the manifest so a tuned deployment restores its kernel
+    tile choices with the weights and never re-searches. See
+    :func:`load_tuning`.
     """
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
@@ -99,6 +105,9 @@ def save(tree, directory: str, step: int, *, keep_n: int = 3,
     manifest = {"step": step, "leaves": []}
     if policy is not None:
         manifest["quant_policy"] = policy.to_json_dict()
+    if tuning is not None and len(tuning):
+        manifest["tuning_cache"] = (tuning if isinstance(tuning, dict)
+                                    else tuning.to_json_dict())
     if mesh is not None:
         manifest["mesh"] = {
             "axes": list(mesh.axis_names),
@@ -130,11 +139,13 @@ class AsyncCheckpointer:
     """Snapshot-to-host synchronously, write on a background thread."""
 
     def __init__(self, directory: str, keep_n: int = 3,
-                 policy: Optional[QuantPolicy] = None, mesh=None):
+                 policy: Optional[QuantPolicy] = None, mesh=None,
+                 tuning=None):
         self.directory = directory
         self.keep_n = keep_n
         self.policy = policy
         self.mesh = mesh
+        self.tuning = tuning
         self._thread: Optional[threading.Thread] = None
         self.last_path: Optional[str] = None
 
@@ -143,11 +154,16 @@ class AsyncCheckpointer:
         host_tree = jax.tree.map(
             lambda x: np.asarray(jax.device_get(x)) if x is not None else None,
             tree, is_leaf=lambda x: x is None)
+        # snapshot now: the cache may mutate while the writer runs
+        tuning = (self.tuning.to_json_dict()
+                  if self.tuning is not None and not isinstance(self.tuning,
+                                                                dict)
+                  else self.tuning)
 
         def _write():
             self.last_path = save(host_tree, self.directory, step,
                                   keep_n=self.keep_n, policy=self.policy,
-                                  mesh=self.mesh)
+                                  mesh=self.mesh, tuning=tuning)
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -189,6 +205,21 @@ def load_mesh(directory: str, step: Optional[int] = None) -> Optional[Dict]:
     """Mesh record ({"axes", "shape"}) stored with a checkpoint, or None
     (unsharded / legacy save)."""
     return _manifest(directory, step)[1].get("mesh")
+
+
+def load_tuning(directory: str, step: Optional[int] = None):
+    """TuningCache stored with a checkpoint, or None (untuned / legacy).
+
+    Returns a ``kernels.autotune.TuningCache``; callers typically merge
+    it into the process cache:
+    ``ops.tuning_cache().update(load_tuning(dir))``.
+    """
+    tc = _manifest(directory, step)[1].get("tuning_cache")
+    if tc is None:
+        return None
+    from repro.kernels.autotune import TuningCache
+
+    return TuningCache.from_json_dict(tc)
 
 
 def prune_shardings(directory: str, shardings, step: Optional[int] = None):

@@ -300,7 +300,17 @@ def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = Non
         from repro.distributed.sharding import shard_serve_params
 
         tree, _ = shard_serve_params(tree, axes, mesh)
-    return (tree, manifest) if with_manifest else tree
+    if with_manifest:
+        # carry the process tuning cache alongside the backend records
+        # (reserved "__"-prefixed key, only when tuned — per-leaf
+        # entries stay exactly the set of quantized paths otherwise)
+        from repro.kernels.ops import tuning_cache
+
+        tc = tuning_cache()
+        if len(tc):
+            manifest["__tuning_cache__"] = tc.to_json_dict()
+        return tree, manifest
+    return tree
 
 
 def backend_manifest(params, policy: Optional[QuantLike] = None,

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, p_ref, d_ref, o_ref, *, n_dict: int):
+def _kernel(x_ref, p_ref, d_ref, o_ref, *, n_dict: int, decode_onehot: bool):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -32,9 +32,12 @@ def _kernel(x_ref, p_ref, d_ref, o_ref, *, n_dict: int):
     bk2, bn = packed.shape
     idx = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)
     d = d_ref[...]
-    onehot = (idx.reshape(-1, 1) ==
-              jnp.arange(n_dict, dtype=jnp.int32)[None, :]).astype(d.dtype)
-    w = (onehot @ d.reshape(n_dict, 1)).reshape(bk2 * 2, bn)
+    if decode_onehot:
+        onehot = (idx.reshape(-1, 1) ==
+                  jnp.arange(n_dict, dtype=jnp.int32)[None, :]).astype(d.dtype)
+        w = (onehot @ d.reshape(n_dict, 1)).reshape(bk2 * 2, bn)
+    else:
+        w = jnp.take(d, idx, axis=0)        # Mosaic-friendly gather
     x = x_ref[...]                          # (B, bk)
     o_ref[...] += jax.lax.dot_general(
         x, w.astype(x.dtype),
@@ -49,19 +52,24 @@ def lutq_gemv_packed(
     *,
     bn: int = 256,
     bk: int = 512,
+    decode_onehot: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
     B, Kin = x.shape
     Kin2, N = packed.shape
     assert Kin == Kin2 * 2
     n_dict = d.shape[0]
-    assert n_dict <= 16, "packed layout is 4-bit (K <= 16)"
+    # 4-bit packing caps the *live* dictionary at 16 entries; compiled
+    # mode may lane-pad d to a 128 multiple (nibbles never index the pad)
+    assert n_dict <= 16 or n_dict % 128 == 0, \
+        "packed layout is 4-bit (K <= 16, or 128-lane-padded)"
     bn, bk = min(bn, N), min(bk, Kin)
     assert N % bn == 0 and Kin % bk == 0 and bk % 2 == 0
 
     grid = (N // bn, Kin // bk)
     return pl.pallas_call(
-        functools.partial(_kernel, n_dict=n_dict),
+        functools.partial(_kernel, n_dict=n_dict,
+                          decode_onehot=decode_onehot),
         grid=grid,
         in_specs=[
             pl.BlockSpec((B, bk), lambda j, k: (0, k)),

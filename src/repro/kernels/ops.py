@@ -31,6 +31,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lutq import LutqState, decode_any, quantize_ste_any
+from repro.kernels.autotune import (
+    KERNEL_OF_BACKEND,
+    TileConfig,
+    TuningCache,
+    make_key,
+    platform_key,
+)
 from repro.kernels.kmeans_tpu import kmeans_stats as _kmeans_stats
 from repro.kernels.lutq_gemv_packed import lutq_gemv_packed as _gemv_packed
 from repro.kernels.lutq_matmul import lutq_matmul as _lutq_matmul
@@ -44,21 +51,49 @@ from repro.kernels.ref import (  # noqa: F401  (re-export for callers)
 #: Backend names accepted by ``lutq_dot`` / policy rules / CLI flags.
 BACKENDS = ("auto", "decode", "fused", "packed4")
 
+#: Default tiles when the tuning cache has no entry for a shape.
+DEFAULT_TILE = TileConfig(bm=256, bn=256, bk=512, strategy="onehot")
+
+# process-level tuning cache: ``lutq_dot`` consults it at trace time,
+# ``--autotune cache|search`` fills it, ``serve_view`` / checkpoints
+# persist it. Its monotonic version feeds the serving-jit lru keys (via
+# :func:`tuning_fingerprint`) so late-arriving tiles force a re-trace.
+_TUNING_CACHE = TuningCache()
+
+
+def tuning_cache() -> TuningCache:
+    """The process-level :class:`TuningCache` instance."""
+    return _TUNING_CACHE
+
+
+def tuning_fingerprint() -> int:
+    """Monotonic version of the process tuning cache — salt this into
+    any lru key whose cached trace bakes in tuned tile choices."""
+    return _TUNING_CACHE.version
+
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def lutq_matmul(x, a, d, *, bm=256, bn=256, bk=512, interpret=None):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "strategy", "interpret"))
+def lutq_matmul(x, a, d, *, bm=256, bn=256, bk=512, strategy="onehot",
+                interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
-    return _lutq_matmul(x, a, d, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return _lutq_matmul(x, a, d, bm=bm, bn=bn, bk=bk,
+                        decode_onehot=(strategy == "onehot"),
+                        interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
-def lutq_gemv_packed(x, packed, d, *, bn=256, bk=512, interpret=None):
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "strategy", "interpret"))
+def lutq_gemv_packed(x, packed, d, *, bn=256, bk=512, strategy="onehot",
+                     interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
-    return _gemv_packed(x, packed, d, bn=bn, bk=bk, interpret=interpret)
+    return _gemv_packed(x, packed, d, bn=bn, bk=bk,
+                        decode_onehot=(strategy == "onehot"),
+                        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -144,6 +179,14 @@ def _tile(dim: int, block: int, base: int):
     return t, _round_up(dim, t)
 
 
+def _tuned_tile(be: str, M: int, N: int, Kin: int, K: int, dtype,
+                interpret: bool) -> TileConfig:
+    """Cache lookup for one kernel shape; defaults when absent."""
+    key = make_key(KERNEL_OF_BACKEND[be], M, N, Kin, K, dtype, be,
+                   platform_key(interpret))
+    return _TUNING_CACHE.get(key) or DEFAULT_TILE
+
+
 def lutq_dot(
     x: jax.Array,
     state: LutqState,
@@ -151,9 +194,10 @@ def lutq_dot(
     backend: str = "auto",
     transpose_rhs: bool = False,
     out_dtype=None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
+    strategy: str = None,
     interpret: bool = None,
 ) -> jax.Array:
     """``x @ d[A]`` (or ``x @ d[A].T``) through the resolved backend.
@@ -164,11 +208,19 @@ def lutq_dot(
     (those fall back to the dense decode path, which also carries the
     training STE). Returns (..., N) in ``out_dtype`` (default x.dtype).
 
+    Tile sizes and decode strategy default to the process
+    :class:`TuningCache` entry for this (kernel, shape, dtype, platform)
+    key — :data:`DEFAULT_TILE` when untuned. Explicit ``bm/bn/bk/
+    strategy`` arguments override the cache field-by-field. Callers that
+    jit around ``lutq_dot`` must salt their jit/lru keys with
+    :func:`tuning_fingerprint` or a tile tuned after the first trace
+    would be silently ignored.
+
     Fused backends never materialize the decoded weight matrix in HBM:
     non-tile-multiple shapes are zero-padded onto the kernel grid
     (padded x rows/K-columns are zero, padded assignment entries index
-    dictionary slot 0 against zero activations), and the pad is sliced
-    off the f32 kernel output.
+    dictionary slot 0 against zero activations, padded dictionary lanes
+    are never indexed), and the pad is sliced off the f32 kernel output.
     """
     be = resolve_backend(state, backend, transpose_rhs=transpose_rhs)
     out_dtype = out_dtype or x.dtype
@@ -191,6 +243,7 @@ def lutq_dot(
     x2 = x.reshape(-1, Kin)
     M = x2.shape[0]
     d = state.d
+    K = d.shape[-1]
     base_m = 1 if interpret else 8
     base_l = 1 if interpret else 128
 
@@ -198,6 +251,11 @@ def lutq_dot(
         a = state.a.T if transpose_rhs else state.a  # (Kin, N) int8
         assert a.shape[0] == Kin, (a.shape, x.shape)
         N = a.shape[1]
+        tile = _tuned_tile(be, M, N, Kin, K, x.dtype, interpret)
+        bm = tile.bm if bm is None else bm
+        bn = tile.bn if bn is None else bn
+        bk = tile.bk if bk is None else bk
+        strategy = tile.strategy if strategy is None else strategy
         tm, Mp = _tile(M, bm, base_m)
         tn, Np = _tile(N, bn, base_l)
         tk, Kp = _tile(Kin, bk, base_l)
@@ -205,20 +263,34 @@ def lutq_dot(
             x2 = jnp.pad(x2, ((0, Mp - M), (0, Kp - Kin)))
         if Kp != Kin or Np != N:
             a = jnp.pad(a, ((0, Kp - Kin), (0, Np - N)))
-        y = lutq_matmul(x2, a, d, bm=tm, bn=tn, bk=tk, interpret=interpret)
+        if not interpret and K % base_l:
+            # compiled 1-D VMEM blocks want lane-multiple extents; the
+            # padded entries are never indexed (assignments < K), so
+            # decode stays exact
+            d = jnp.pad(d, (0, _round_up(K, base_l) - K))
+        y = lutq_matmul(x2, a, d, bm=tm, bn=tn, bk=tk, strategy=strategy,
+                        interpret=interpret)
         y = y[:M, :N]
     else:  # packed4: x (M, Kin) @ unpack(packed (Kin/2, N))
         p = state.a
         assert p.shape[0] * 2 == Kin, (p.shape, x.shape)
         N = p.shape[1]
+        tile = _tuned_tile(be, M, N, Kin, K, x.dtype, interpret)
+        bn = tile.bn if bn is None else bn
+        bk = tile.bk if bk is None else bk
+        strategy = tile.strategy if strategy is None else strategy
+        Mp = _round_up(M, base_m)  # sublane-pad M for the compiled MXU
         tn, Np = _tile(N, bn, base_l)
         tk, Kp = _tile(Kin, bk, 2 if interpret else 2 * base_l)
-        if Kp != Kin:
-            x2 = jnp.pad(x2, ((0, 0), (0, Kp - Kin)))
+        if Mp != M or Kp != Kin:
+            x2 = jnp.pad(x2, ((0, Mp - M), (0, Kp - Kin)))
         if Kp != Kin or Np != N:
             p = jnp.pad(p, ((0, (Kp - Kin) // 2), (0, Np - N)))
-        y = lutq_gemv_packed(x2, p, d, bn=tn, bk=tk, interpret=interpret)
-        y = y[:, :N]
+        if not interpret and K % base_l:
+            d = jnp.pad(d, (0, _round_up(K, base_l) - K))
+        y = lutq_gemv_packed(x2, p, d, bn=tn, bk=tk, strategy=strategy,
+                             interpret=interpret)
+        y = y[:M, :N]
     return y.reshape(*lead, N).astype(out_dtype)
 
 
@@ -314,3 +386,125 @@ def lutq_dot_spmd(
                      in_specs=(P(*xparts), d_spec, P(*aparts)),
                      out_specs=out_spec, check_rep=False)(
                          x, state.d, state.a)
+
+
+# ---------------------------------------------------------------------------
+# SPMD annotation: route model-layer dots to lutq_dot_spmd inside a jit
+# ---------------------------------------------------------------------------
+
+class SpmdLutqState:
+    """A :class:`LutqState` tagged with its mesh + assignment sharding.
+
+    Trace-local wrapper: the meshed serving jits call
+    :func:`annotate_spmd` on their *tracer* params, so model-layer code
+    (``nn/linear.dot_kernel``, ``nn/moe._expert_dot``) can dispatch the
+    leaf to :func:`lutq_dot_spmd` — running each ``pallas_call`` on its
+    local index shard — instead of letting GSPMD gather the assignments
+    around the custom call. The wrapper never escapes the trace, so
+    checkpointing, manifests and tests always see plain LutqStates.
+
+    Registered as a pytree with (mesh, a_spec) static so scan/vmap/remat
+    transparently slice the inner state while the annotation rides along.
+    """
+
+    __slots__ = ("state", "mesh", "a_spec")
+
+    def __init__(self, state: LutqState, mesh, a_spec):
+        self.state = state
+        self.mesh = mesh
+        self.a_spec = a_spec
+
+    # convenience passthroughs so shape probes keep working
+    @property
+    def w(self):
+        return self.state.w
+
+    @property
+    def d(self):
+        return self.state.d
+
+    @property
+    def a(self):
+        return self.state.a
+
+    @property
+    def sid(self):
+        return self.state.sid
+
+    def tree_flatten(self):
+        return (self.state,), (self.mesh, self.a_spec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+jax.tree_util.register_pytree_node(
+    SpmdLutqState,
+    lambda s: s.tree_flatten(),
+    SpmdLutqState.tree_unflatten,
+)
+
+
+def annotate_spmd(params, axes, mesh):
+    """Wrap serve-form LutqState leaves with their serve PartitionSpecs.
+
+    Call *inside* a meshed jit on the params tracers. Only leaves whose
+    assignment spec actually names a mesh axis are wrapped — replicated
+    leaves (and train-form / non-LutqState leaves) pass through, so the
+    decode fallback and unsharded paths are byte-identical to before.
+    """
+    if mesh is None:
+        return params
+    from repro.distributed.sharding import serve_pspecs
+
+    pspecs = serve_pspecs(axes, mesh, params)
+
+    def wrap(leaf, spec):
+        if not isinstance(leaf, LutqState) or leaf.w is not None:
+            return leaf
+        a_spec = getattr(spec, "a", None)
+        if a_spec is None or not any(e is not None for e in tuple(a_spec)):
+            return leaf
+        return SpmdLutqState(leaf, mesh, a_spec)
+
+    return jax.tree_util.tree_map(
+        wrap, params, pspecs,
+        is_leaf=lambda n: isinstance(n, LutqState))
+
+
+def lutq_dot_sharded(
+    x: jax.Array,
+    leaf: "SpmdLutqState",
+    *,
+    backend: str = "auto",
+    transpose_rhs: bool = False,
+    out_dtype=None,
+):
+    """Dispatch an annotated leaf: shard-local kernels when they apply.
+
+    scan-over-layers slices leading stack axes off the *arrays* but not
+    off the recorded spec, so the spec's trailing entries are
+    right-aligned to the runtime assignment rank. Leaves that resolve to
+    ``decode``, or whose live spec entries are all None, take the plain
+    :func:`lutq_dot` path (GSPMD shards dense decode fine on its own).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    state = leaf.state
+    # right-align to the runtime rank: scan/vmap slicing removed leading
+    # stack axes from a but specs were recorded on the full stacked leaf
+    ndim = state.a.ndim
+    parts = list(tuple(leaf.a_spec))[-ndim:] if leaf.a_spec else []
+    parts = [None] * (ndim - len(parts)) + parts
+    nstack = state.a.ndim - 2
+    be = resolve_backend(state, backend, transpose_rhs=transpose_rhs,
+                         sliced=True)
+    live = any(e is not None for e in parts)
+    if (be == "decode" or not live or nstack not in (0, 1)
+            or (nstack and transpose_rhs)):
+        return lutq_dot(x, state, backend=backend,
+                        transpose_rhs=transpose_rhs, out_dtype=out_dtype)
+    return lutq_dot_spmd(x, state, leaf.mesh, a_spec=P(*parts),
+                         backend=backend, transpose_rhs=transpose_rhs,
+                         out_dtype=out_dtype)

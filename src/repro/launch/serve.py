@@ -263,6 +263,16 @@ def main(argv=None):
     ap.add_argument("--vocab", type=int, default=None,
                     help="override vocab size (must match the checkpoint's "
                          "when restoring with --ckpt-dir)")
+    ap.add_argument("--autotune", default="off",
+                    choices=("off", "cache", "search"),
+                    help="kernel tile autotuning: 'cache' loads tuned tiles "
+                         "(--tuning-cache file, else the checkpoint "
+                         "manifest); 'search' times the pruned candidate "
+                         "grid per distinct kernel shape of this serve tree "
+                         "and reports the winners (see docs/kernels.md)")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="tuning-cache JSON: read by --autotune cache, "
+                         "written by --autotune search")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -317,6 +327,51 @@ def main(argv=None):
                          mesh=mesh, axes=axes)
     manifest = backend_manifest(sparams, policy,
                                 override=args.kernel_backend)
+
+    if args.autotune != "off":
+        from repro.kernels import autotune, ops
+
+        tc = ops.tuning_cache()
+        if args.autotune == "cache":
+            if args.tuning_cache:
+                tc.update(autotune.TuningCache.load(args.tuning_cache))
+                print(f"[serve] autotune: loaded {len(tc)} tuned tiles from "
+                      f"{args.tuning_cache}")
+            elif args.ckpt_dir:
+                from repro.checkpoint import ckpt as ckpt_mod
+
+                stored = ckpt_mod.load_tuning(args.ckpt_dir)
+                if stored is not None:
+                    tc.update(stored)
+                    print(f"[serve] autotune: loaded {len(tc)} tuned tiles "
+                          f"from the checkpoint manifest")
+                else:
+                    print("[serve] autotune: checkpoint manifest carries no "
+                          "tuning cache (run --autotune search)")
+            else:
+                print("[serve] autotune cache: nothing to load "
+                      "(--tuning-cache or --ckpt-dir required)")
+        else:  # search
+            batch_m = args.max_batch if args.engine else args.batch
+            autotune.tune_tree(sparams, batch_m=batch_m, dtype=cfg.dtype,
+                               cache=tc, emit=print)
+            if args.tuning_cache:
+                tc.save(args.tuning_cache)
+                print(f"[serve] autotune: saved {len(tc)} tuned tiles to "
+                      f"{args.tuning_cache}")
+        # per-leaf report: the tile each quantized leaf's decode matmul hits
+        batch_m = args.max_batch if args.engine else args.batch
+        for rec in autotune.leaf_shapes_for_tree(sparams, batch_m=batch_m):
+            key = autotune.make_key(
+                rec["kernel"], rec["M"], rec["N"], rec["Kin"], rec["K"],
+                cfg.dtype, rec["backend"],
+                autotune.platform_key(ops._default_interpret()))
+            tile = tc.get(key) or ops.DEFAULT_TILE
+            for path in rec["paths"]:
+                print(f"[serve]   tile {path}: {rec['backend']} "
+                      f"bm={tile.bm} bn={tile.bn} bk={tile.bk} "
+                      f"{tile.strategy}"
+                      + ("" if tc.get(key) else " (default, untuned)"))
     q_bytes = footprint_bytes(sparams)
     print(f"[serve] {cfg.name}: weights fp32 {fp_bytes/2**20:.2f} MiB -> "
           f"LUT-Q {q_bytes/2**20:.2f} MiB ({fp_bytes/max(q_bytes,1):.2f}x) | "

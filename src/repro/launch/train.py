@@ -165,6 +165,20 @@ def main(argv=None):
                          "error-feedback int8 (compressed-collective "
                          "arithmetic), 'ring' = ef + the explicit f16-payload "
                          "ppermute ring over the data axis")
+    ap.add_argument("--autotune", default="off",
+                    choices=("off", "cache", "search"),
+                    help="kernel tile autotuning for the train->serve "
+                         "handoff: 'cache' loads tuned tiles from "
+                         "--tuning-cache; 'search' tunes this config's "
+                         "serve-form kernel shapes before training. Either "
+                         "way the cache rides in every checkpoint manifest "
+                         "(serve --autotune cache picks it up)")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="tuning-cache JSON: read by --autotune cache, "
+                         "written by --autotune search")
+    ap.add_argument("--autotune-batch", type=int, default=8,
+                    help="decode batch M the --autotune search tunes for "
+                         "(match the serve engine's --max-batch)")
     args = ap.parse_args(argv)
 
     mesh = None
@@ -177,6 +191,33 @@ def main(argv=None):
         step_fn = jax.jit(step_fn)
     else:
         print(train_report(state, mesh))
+
+    tuning = None
+    if args.autotune != "off":
+        from repro.core.policy import serve_view
+        from repro.kernels import autotune, ops
+
+        tuning = ops.tuning_cache()
+        if args.autotune == "cache":
+            if args.tuning_cache:
+                tuning.update(autotune.TuningCache.load(args.tuning_cache))
+                print(f"[train] autotune: loaded {len(tuning)} tuned tiles "
+                      f"from {args.tuning_cache}")
+            else:
+                print("[train] autotune cache: --tuning-cache required")
+        else:  # search the serve-form shapes this run will deploy as
+            from repro.core.policy import merge_trainable
+
+            sv = serve_view(merge_trainable(state["trainable"],
+                                            state["static"]),
+                            policy=api.resolved_policy(cfg))
+            autotune.tune_tree(sv, batch_m=args.autotune_batch,
+                               dtype=cfg.dtype, cache=tuning, emit=print)
+            if args.tuning_cache:
+                tuning.save(args.tuning_cache)
+                print(f"[train] autotune: saved {len(tuning)} tuned tiles "
+                      f"to {args.tuning_cache}")
+            del sv
 
     lm = MarkovLM(cfg.vocab, seed=args.data_seed)
 
@@ -199,7 +240,7 @@ def main(argv=None):
                      quant_policy=resolved_policy(cfg),
                      shardings=None if shardings is None
                      else shardings["state"],
-                     mesh=mesh)
+                     mesh=mesh, tuning=tuning)
     state, step = loop.run(state, args.steps)
     losses = [h["loss"] for h in loop.history]
     if losses:

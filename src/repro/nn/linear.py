@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lutq import LutqState, decode_any, quantize_ste_any
-from repro.kernels.ops import lutq_dot
+from repro.kernels.ops import SpmdLutqState, lutq_dot, lutq_dot_sharded
 from repro.kernels.ref import unpack4_kin
 
 
@@ -30,6 +30,8 @@ def materialize(kernel, dtype=None) -> jax.Array:
     Gather-style consumers only — matmuls go through :func:`dot_kernel`
     / :func:`repro.kernels.ops.lutq_dot` instead.
     """
+    if isinstance(kernel, SpmdLutqState):  # annotation is matmul-only
+        kernel = kernel.state
     if isinstance(kernel, LutqState):
         a = kernel.a
         if a.dtype == jnp.uint8:  # packed 4-bit pairs (serve_view pack4)
@@ -49,8 +51,15 @@ def dot_kernel(x: jax.Array, kernel, *, dtype=None, backend: str = "auto",
 
     LutqState leaves route through the backend layer (train-form keeps
     the dense STE path inside ``lutq_dot``; serve-form hits the fused
-    kernels). Plain arrays are a plain matmul.
+    kernels). Leaves annotated by ``ops.annotate_spmd`` inside a meshed
+    serving jit dispatch to the shard_map path so each device runs the
+    Pallas kernel on its local index shard. Plain arrays are a plain
+    matmul.
     """
+    if isinstance(kernel, SpmdLutqState):
+        return lutq_dot_sharded(x, kernel, backend=backend,
+                                transpose_rhs=transpose_rhs,
+                                out_dtype=dtype or x.dtype)
     if isinstance(kernel, LutqState):
         return lutq_dot(x, kernel, backend=backend,
                         transpose_rhs=transpose_rhs,

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lutq import LutqState
-from repro.kernels.ops import lutq_dot
+from repro.kernels.ops import SpmdLutqState, lutq_dot, lutq_dot_sharded
 from repro.nn.linear import dot_kernel, materialize
 from repro.nn.tree import rng_stream
 
@@ -31,9 +31,14 @@ def _expert_dot(buf: jax.Array, leaf, cdt, backend: str = "auto") -> jax.Array:
     Serve-form LUT-Q experts (stacked per-expert dictionaries) vmap the
     kernel backend layer over E, so each expert's fused Pallas kernel
     streams its own int8/packed assignments — the decoded expert weights
-    (the bulk of MoE parameters) are never materialized in HBM. Train
-    form / plain arrays keep the dense einsum.
+    (the bulk of MoE parameters) are never materialized in HBM. Leaves
+    annotated by ``ops.annotate_spmd`` run expert-parallel through the
+    shard_map path (each device computes its local experts' kernels).
+    Train form / plain arrays keep the dense einsum.
     """
+    if (isinstance(leaf, SpmdLutqState) and leaf.w is None
+            and leaf.d.ndim == 2 and leaf.a.ndim == 3):
+        return lutq_dot_sharded(buf, leaf, backend=backend, out_dtype=cdt)
     if (isinstance(leaf, LutqState) and leaf.w is None
             and leaf.d.ndim == 2 and leaf.a.ndim == 3):
         return jax.vmap(

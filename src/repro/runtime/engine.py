@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
 from repro.models import api
 from repro.models.config import ModelConfig
 from repro.runtime import paged_kv
@@ -119,17 +120,14 @@ def _sample_fn(greedy: bool):
 
 
 @functools.lru_cache(maxsize=64)
-def _step_fn(cfg: ModelConfig, greedy: bool, mesh=None, capacity: int = 0,
-             max_len: int = 0, src_len: int = 0):
-    """One fused engine step: decode_step + per-slot sampling.
-
-    With a mesh, the step takes explicit in/out NamedShardings
-    (``partition.serve_shardings``): tok/cache/keys batch-sharded on
-    the data axis, params at their committed placement. The mesh is in
-    the lru key, so one process can serve several meshes without trace
-    reuse."""
+def _step_fn_cached(cfg: ModelConfig, greedy: bool, mesh, capacity: int,
+                    max_len: int, src_len: int, tuning: int):
+    del tuning  # lru salt: tuned tiles are baked into the trace
+    axes = api.init_axes(cfg) if mesh is not None else None
 
     def step(params, tok, cache, keys, temp):
+        if mesh is not None:
+            params = ops.annotate_spmd(params, axes, mesh)
         logits, cache = api.decode_step(params, cfg, tok, cache)
         tok, keys = _sample(logits, keys, temp, greedy)
         return tok, cache, keys
@@ -146,17 +144,31 @@ def _step_fn(cfg: ModelConfig, greedy: bool, mesh=None, capacity: int = 0,
         out_shardings=(sh["token"], sh["cache"], sh["keys"]))
 
 
-@functools.lru_cache(maxsize=64)
-def _paged_step_fn(cfg: ModelConfig, greedy: bool, mesh=None,
-                   capacity: int = 0, n_pages: int = 0, page_size: int = 0,
-                   n_blocks: int = 0, src_len: int = 0):
-    """Paged twin of ``_step_fn``: paged decode_step + per-slot sampling.
+def _step_fn(cfg: ModelConfig, greedy: bool, mesh=None, capacity: int = 0,
+             max_len: int = 0, src_len: int = 0):
+    """One fused engine step: decode_step + per-slot sampling.
 
-    The page-pool geometry is part of the lru key (it sizes the cache
-    shardings under a mesh and keeps engines with different pools from
-    sharing a trace)."""
+    With a mesh, the step takes explicit in/out NamedShardings
+    (``partition.serve_shardings``): tok/cache/keys batch-sharded on
+    the data axis, params at their committed placement and annotated
+    in-trace (``ops.annotate_spmd``) so fused LUT-Q dots run on local
+    index shards. The mesh is in the lru key, so one process can serve
+    several meshes without trace reuse; the tuning-cache fingerprint is
+    too, so ``--autotune`` invalidates traces with stale tiles."""
+    return _step_fn_cached(cfg, greedy, mesh, capacity, max_len, src_len,
+                           ops.tuning_fingerprint())
+
+
+@functools.lru_cache(maxsize=64)
+def _paged_step_fn_cached(cfg: ModelConfig, greedy: bool, mesh,
+                          capacity: int, n_pages: int, page_size: int,
+                          n_blocks: int, src_len: int, tuning: int):
+    del tuning
+    axes = api.init_axes(cfg) if mesh is not None else None
 
     def step(params, tok, cache, keys, temp):
+        if mesh is not None:
+            params = ops.annotate_spmd(params, axes, mesh)
         logits, cache = api.paged_decode_step(params, cfg, tok, cache)
         tok, keys = _sample(logits, keys, temp, greedy)
         return tok, cache, keys
@@ -172,6 +184,19 @@ def _paged_step_fn(cfg: ModelConfig, greedy: bool, mesh=None,
         step,
         in_shardings=(None, sh["token"], sh["cache"], sh["keys"], None),
         out_shardings=(sh["token"], sh["cache"], sh["keys"]))
+
+
+def _paged_step_fn(cfg: ModelConfig, greedy: bool, mesh=None,
+                   capacity: int = 0, n_pages: int = 0, page_size: int = 0,
+                   n_blocks: int = 0, src_len: int = 0):
+    """Paged twin of ``_step_fn``: paged decode_step + per-slot sampling.
+
+    The page-pool geometry is part of the lru key (it sizes the cache
+    shardings under a mesh and keeps engines with different pools from
+    sharing a trace)."""
+    return _paged_step_fn_cached(cfg, greedy, mesh, capacity, n_pages,
+                                 page_size, n_blocks, src_len,
+                                 ops.tuning_fingerprint())
 
 
 def synthetic_requests(cfg: ModelConfig, n: int, *, max_prompt: int,

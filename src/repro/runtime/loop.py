@@ -61,12 +61,15 @@ class TrainLoop:
         quant_policy=None,
         shardings=None,
         mesh=None,
+        tuning=None,
     ):
         """``shardings``: optional NamedSharding tree matching the train
         state (``partition.train_shardings(...)["state"]``) — resume then
         restores each checkpoint leaf straight onto its device placement
         (elastic: the mesh may differ from the one recorded at save
-        time). ``mesh`` is recorded in checkpoint manifests."""
+        time). ``mesh`` is recorded in checkpoint manifests, as is
+        ``tuning`` (a live ``kernels.autotune.TuningCache``) so the
+        train->serve loop hands tuned kernel tiles to deployment."""
         self.train_step = train_step
         self.make_batch = make_batch
         self.ckpt_dir = ckpt_dir
@@ -76,7 +79,7 @@ class TrainLoop:
         self.shardings = shardings
         self.watchdog = StragglerWatchdog()
         self.ckpt = (AsyncCheckpointer(ckpt_dir, keep_n, policy=quant_policy,
-                                       mesh=mesh)
+                                       mesh=mesh, tuning=tuning)
                      if ckpt_dir else None)
         self._preempted = threading.Event()
         self.history: List[Dict[str, float]] = []

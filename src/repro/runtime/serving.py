@@ -21,6 +21,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models import api
 from repro.models.config import ModelConfig
 
@@ -117,58 +118,77 @@ def _decode_step(cfg: ModelConfig, params, token, cache):
     return api.decode_step(params, cfg, token, cache)
 
 
+def _decode_step_meshed(cfg: ModelConfig, axes, mesh, params, token, cache):
+    # annotate inside the trace: serve-form LutqState leaves gain their
+    # mesh + assignment spec so nn-layer dots run shard-local Pallas
+    # kernels instead of GSPMD's gather-around-the-custom-call fallback
+    params = ops.annotate_spmd(params, axes, mesh)
+    return api.decode_step(params, cfg, token, cache)
+
+
 def _prefill(cfg: ModelConfig, max_len: int, params, batch, lengths=None):
     return api.prefill(params, cfg, batch, max_len=max_len, lengths=lengths)
 
 
+def _prefill_meshed(cfg: ModelConfig, max_len: int, axes, mesh, params,
+                    batch, lengths=None):
+    params = ops.annotate_spmd(params, axes, mesh)
+    return api.prefill(params, cfg, batch, max_len=max_len, lengths=lengths)
+
+
 @functools.lru_cache(maxsize=64)
+def _decode_fn_cached(cfg: ModelConfig, mesh, batch, max_len, src_len,
+                      tuning):
+    del tuning  # lru salt only: tuned tiles are baked into the trace
+    if mesh is None:
+        return jax.jit(functools.partial(_decode_step, cfg))
+    from repro.launch.partition import serve_shardings
+
+    axes = api.init_axes(cfg)
+    sh = serve_shardings(cfg, mesh, batch=batch, max_len=max_len,
+                         src_len=src_len)
+    return jax.jit(functools.partial(_decode_step_meshed, cfg, axes, mesh),
+                   in_shardings=(None, sh["token"], sh["cache"]),
+                   out_shardings=(sh["logits"], sh["cache"]))
+
+
 def decode_fn(cfg: ModelConfig, mesh=None, batch: Optional[int] = None,
               max_len: Optional[int] = None, src_len: int = 0):
     """Jit-cached one-token decode for a config (and optionally a mesh).
 
     ModelConfig is a frozen (hashable) dataclass, so repeated ``generate``
     calls — and the serving CLI — share one compiled decode per config
-    instead of re-wrapping (and re-tracing) a fresh lambda per call.
+    instead of re-wrapping (and re-tracing) a fresh lambda per call. The
+    lru key carries :func:`repro.kernels.ops.tuning_fingerprint`, so a
+    tuning-cache update (``--autotune``) invalidates traces that baked
+    in stale tile choices.
 
     With ``mesh`` (a hashable ``jax.sharding.Mesh`` — it is part of the
     cache key, so switching meshes in one process never reuses a stale
     trace) the jit takes explicit in/out NamedShardings from
     ``partition.serve_shardings``: token + cache batch-sharded on the
     data axis, cache layout preserved through the step, params left to
-    their committed placement (``shard_serve_params``).
+    their committed placement (``shard_serve_params``) and annotated
+    in-trace (``ops.annotate_spmd``) so fused LUT-Q dots run on local
+    index shards.
     """
-    if mesh is None:
-        return jax.jit(functools.partial(_decode_step, cfg))
-    if batch is None or max_len is None:
+    if mesh is not None and (batch is None or max_len is None):
         raise ValueError("decode_fn(cfg, mesh) needs the pool geometry: "
                          "pass batch= and max_len= (they size the cache "
                          "shardings)")
-    from repro.launch.partition import serve_shardings
-
-    sh = serve_shardings(cfg, mesh, batch=batch, max_len=max_len,
-                         src_len=src_len)
-    return jax.jit(functools.partial(_decode_step, cfg),
-                   in_shardings=(None, sh["token"], sh["cache"]),
-                   out_shardings=(sh["logits"], sh["cache"]))
+    return _decode_fn_cached(cfg, mesh, batch, max_len, src_len,
+                             ops.tuning_fingerprint())
 
 
 @functools.lru_cache(maxsize=64)
-def prefill_fn(cfg: ModelConfig, max_len: int, mesh=None):
-    """Jit-cached prefill for (config, max_len[, mesh]).
-
-    The mesh variant places batch inputs onto their data-parallel
-    NamedShardings before the call (prefill's cache output is re-laid by
-    the admission splice, whose jit pins the pool shardings). It wraps
-    the *same* cached jit as the meshless path — the jit pins no
-    explicit shardings here, and jax keys executables on input
-    shardings itself, so solo and meshed serving share one trace per
-    distinct placement instead of recompiling per mesh.
-    """
+def _prefill_fn_cached(cfg: ModelConfig, max_len: int, mesh, tuning):
+    del tuning
     if mesh is None:
         return jax.jit(functools.partial(_prefill, cfg, max_len))
     from repro.launch.partition import data_batch_shardings
 
-    fn = prefill_fn(cfg, max_len)
+    axes = api.init_axes(cfg)
+    fn = jax.jit(functools.partial(_prefill_meshed, cfg, max_len, axes, mesh))
 
     def sharded(params, batch, lengths=None):
         batch = jax.device_put(batch, data_batch_shardings(batch, mesh))
@@ -179,6 +199,18 @@ def prefill_fn(cfg: ModelConfig, max_len: int, mesh=None):
     return sharded
 
 
+def prefill_fn(cfg: ModelConfig, max_len: int, mesh=None):
+    """Jit-cached prefill for (config, max_len[, mesh]).
+
+    The mesh variant places batch inputs onto their data-parallel
+    NamedShardings before the call (prefill's cache output is re-laid by
+    the admission splice, whose jit pins the pool shardings) and
+    annotates params in-trace so fused LUT-Q dots run shard-local. Like
+    ``decode_fn``, the lru key carries the tuning-cache fingerprint.
+    """
+    return _prefill_fn_cached(cfg, max_len, mesh, ops.tuning_fingerprint())
+
+
 # ---------------------------------------------------------------------------
 # paged entry points (block-table KV; see runtime/paged_kv.py)
 # ---------------------------------------------------------------------------
@@ -187,7 +219,30 @@ def _paged_decode_step(cfg: ModelConfig, params, token, cache):
     return api.paged_decode_step(params, cfg, token, cache)
 
 
+def _paged_decode_step_meshed(cfg: ModelConfig, axes, mesh, params, token,
+                              cache):
+    params = ops.annotate_spmd(params, axes, mesh)
+    return api.paged_decode_step(params, cfg, token, cache)
+
+
 @functools.lru_cache(maxsize=64)
+def _paged_decode_fn_cached(cfg: ModelConfig, mesh, batch, n_pages,
+                            page_size, n_blocks, src_len, tuning):
+    del tuning
+    if mesh is None:
+        return jax.jit(functools.partial(_paged_decode_step, cfg))
+    from repro.launch.partition import paged_serve_shardings
+
+    axes = api.init_axes(cfg)
+    sh = paged_serve_shardings(cfg, mesh, batch=batch, n_pages=n_pages,
+                               page_size=page_size, n_blocks=n_blocks,
+                               src_len=src_len)
+    return jax.jit(
+        functools.partial(_paged_decode_step_meshed, cfg, axes, mesh),
+        in_shardings=(None, sh["token"], sh["cache"]),
+        out_shardings=(sh["logits"], sh["cache"]))
+
+
 def paged_decode_fn(cfg: ModelConfig, mesh=None, batch: Optional[int] = None,
                     n_pages: Optional[int] = None,
                     page_size: Optional[int] = None,
@@ -199,31 +254,30 @@ def paged_decode_fn(cfg: ModelConfig, mesh=None, batch: Optional[int] = None,
     on the KV-head axis and replicated over data (any slot's block row
     may reference any page), block table/lengths batch-sharded on data.
     """
-    if mesh is None:
-        return jax.jit(functools.partial(_paged_decode_step, cfg))
-    if batch is None or n_pages is None or page_size is None or n_blocks is None:
+    if mesh is not None and (batch is None or n_pages is None
+                             or page_size is None or n_blocks is None):
         raise ValueError("paged_decode_fn(cfg, mesh) needs the pool "
                          "geometry: batch=, n_pages=, page_size=, n_blocks=")
-    from repro.launch.partition import paged_serve_shardings
-
-    sh = paged_serve_shardings(cfg, mesh, batch=batch, n_pages=n_pages,
-                               page_size=page_size, n_blocks=n_blocks,
-                               src_len=src_len)
-    return jax.jit(functools.partial(_paged_decode_step, cfg),
-                   in_shardings=(None, sh["token"], sh["cache"]),
-                   out_shardings=(sh["logits"], sh["cache"]))
+    return _paged_decode_fn_cached(cfg, mesh, batch, n_pages, page_size,
+                                   n_blocks, src_len,
+                                   ops.tuning_fingerprint())
 
 
 @functools.lru_cache(maxsize=64)
-def paged_chunk_fn(cfg: ModelConfig):
-    """One jit for every chunk width: jax re-traces per (1, C) token
-    shape, so ``_cache_size()`` counts exactly the bucket widths hit —
-    the engine's no-new-traces-after-warmup assertion keys on this."""
+def _paged_chunk_fn_cached(cfg: ModelConfig, tuning):
+    del tuning
     from repro.models import lm as m_lm
 
     return jax.jit(lambda params, tokens, ws, start, n_real:
                    m_lm.lm_paged_prefill_chunk(params, cfg, tokens, ws,
                                                start, n_real))
+
+
+def paged_chunk_fn(cfg: ModelConfig):
+    """One jit for every chunk width: jax re-traces per (1, C) token
+    shape, so ``_cache_size()`` counts exactly the bucket widths hit —
+    the engine's no-new-traces-after-warmup assertion keys on this."""
+    return _paged_chunk_fn_cached(cfg, ops.tuning_fingerprint())
 
 
 @functools.lru_cache(maxsize=64)

@@ -39,5 +39,10 @@ def _release_compiled_executables_per_module():
         for obj in vars(mod).values():
             if hasattr(obj, "cache_clear"):
                 obj.cache_clear()
+    # drop tuned tiles too: a module that autotunes must not leak tile
+    # choices (or manifest "__tuning_cache__" entries) into the next
+    from repro.kernels import ops as _ops
+
+    _ops.tuning_cache().clear()
     jax.clear_caches()
     gc.collect()

@@ -399,6 +399,49 @@ def test_ckpt_sharded_restore(tmp_path):
                   shardings={"nonexistent": NamedSharding(mesh, P())})
 
 
+def test_hlo_no_all_gather_of_index_leaves(monkeypatch):
+    """The compiled meshed decode must not all-gather quantized index
+    tensors (s8/u8): assignments stay shard-local and the shard_map
+    kernel path computes on local index shards.
+
+    The HLO assertion alone would be vacuous on CPU — interpret-mode
+    Pallas lowers to plain HLO that GSPMD partitions natively, so even
+    an unannotated trace shows no index all-gathers. The dispatch count
+    is the non-vacuous half: it proves ``annotate_spmd`` routed the
+    nn-layer dots through ``lutq_dot_spmd`` during this trace.
+    """
+    import repro.kernels.ops as ops_mod
+    from repro.runtime import serving
+
+    calls = []
+    real = ops_mod.lutq_dot_spmd
+
+    def counting(*a, **kw):
+        calls.append(kw.get("backend", a[4] if len(a) > 4 else None))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops_mod, "lutq_dot_spmd", counting)
+
+    cfg, _, sh, _, _ = _sharded(ARCHS["lm"], False)
+    cfg = cfg.replace(kernel_backend="fused")
+    B, L = 4, 16
+    token = jnp.zeros((B, 1), jnp.int32)
+    cache = api.init_cache(cfg, B, L)
+    fn = serving.decode_fn(cfg, _mesh(), batch=B, max_len=L)
+    lowered = fn.lower(sh, token, cache)
+    assert len(calls) >= cfg.n_layers, (
+        f"lutq_dot_spmd dispatched {len(calls)} times during the meshed "
+        f"decode trace; expected at least one per layer — annotate_spmd "
+        f"is not routing sharded index leaves to the shard_map path")
+
+    hlo = lowered.compile().as_text()
+    bad = [ln.strip() for ln in hlo.splitlines()
+           if "all-gather(" in ln and ("s8[" in ln or "u8[" in ln)]
+    assert not bad, (
+        "compiled decode all-gathers quantized index leaves:\n"
+        + "\n".join(bad[:5]))
+
+
 def test_serve_cli_mesh_smoke(capsys):
     from repro.launch.serve import main
 
