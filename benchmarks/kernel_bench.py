@@ -74,11 +74,18 @@ def bench_backends(quick: bool = False, reps: int = 5, warmup: int = 2,
     d = jnp.sort(jax.random.normal(key, (16,)))
     serve = LutqState(w=None, d=d, a=a)
     packed = LutqState(w=None, d=d, a=pack4_kin(a))
+    # pow2 leaf: sign+exponent dictionary plane + frozen int8 act pair
+    from repro.core.lutq import pow2_encode
+    d_p2 = jnp.sort(jnp.float32([-8, -2, -0.5, -0.125, 0.0, 0.03125, 0.0625,
+                                 0.125, 0.25, 0.5, 1, 2, 4, 8, 16, 32]))
+    shift = LutqState(w=None, d=pow2_encode(d_p2), a=a,
+                      act=jnp.float32([0.03, 127.0]))
 
     cases = {
         "decode": (serve, Kin * N * 4),   # materialized f32 dense weights
         "fused": (serve, Kin * N),        # int8 assignments, decoded in VMEM
         "packed4": (packed, Kin * N // 2),  # 4-bit pairs stay packed in HBM
+        "pow2": (shift, Kin * N + 16 + 8),  # int8 indices + int8 dict + act
     }
     out = {}
     for name, (state, wbytes) in cases.items():
@@ -101,7 +108,7 @@ def bench_backends(quick: bool = False, reps: int = 5, warmup: int = 2,
         # re-time through the same lutq_dot entry point, which consults
         # the freshly tuned tiles at trace time
         tc = ops.tuning_cache()
-        for name in ("fused", "packed4"):
+        for name in ("fused", "packed4", "pow2"):
             state = cases[name][0]
             _, tile, _ = autotune.tune(
                 autotune.KERNEL_OF_BACKEND[name], M=B, N=N, Kin=Kin, K=16,
@@ -207,11 +214,11 @@ def main(argv=None):
          "skipped": us is None,
          "derived": d} for n, us, d in rows]
     dec, fus, pk = (rec["backends"][k] for k in ("decode", "fused", "packed4"))
-    print(f"lutq_dot decode vs fused vs packed4 "
+    print(f"lutq_dot decode vs fused vs packed4 vs pow2 "
           f"(B={rec['shape']['B']}, {rec['shape']['Kin']}x{rec['shape']['N']}, "
           f"platform={rec['platform']}, interpret={rec['interpret']}, "
           f"median of {rec['reps']}):")
-    for name in ("decode", "fused", "packed4"):
+    for name in ("decode", "fused", "packed4", "pow2"):
         b = rec["backends"][name]
         tuned = ""
         if "tuned_us" in b:

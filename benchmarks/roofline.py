@@ -218,7 +218,9 @@ def group_bits(cfg) -> Dict[str, Optional[int]]:
 def weight_store_bytes(cfg, *, pack: bool = False) -> float:
     """Served weight bytes, policy-resolved per group: bf16 when a group
     is fp/excluded, int8 indices when quantized, packed 4-bit when
-    ``pack`` and the group's spec fits in 4 index bits."""
+    ``pack`` and the group's spec fits in 4 index bits. Dictionary bytes
+    are counted per group: f32 entries normally, a 1-byte sign+exponent
+    plane (plus the frozen 8-byte activation pair) for ``pow2`` groups."""
     total = 0.0
     for g, n in param_groups(cfg).items():
         if g in _NON_STORAGE_GROUPS:
@@ -231,7 +233,38 @@ def weight_store_bytes(cfg, *, pack: bool = False) -> float:
         else:
             b = 1.0
         total += n * b
+        if spec is not None:
+            total += spec.K * (1.0 if spec.backend == "pow2" else 4.0)
+            if spec.backend == "pow2":
+                total += 8.0  # frozen [scale, qmax] f32 pair
     return total
+
+
+def shift_add_ops(cfg) -> Dict[str, float]:
+    """Serving op budget split MAC vs multiplier-less, per decoded token.
+
+    Groups whose spec runs the ``pow2`` backend count integer adds +
+    bit-shifts (group-by-entry: I adds + K shifts per output) with fp
+    multiplies only at the quant/epilogue boundary; every other group
+    counts MACs. Drives the Table 2 multiplication-count reproduction at
+    serving shapes (see ``repro.core.memory.affine_shift_ops``)."""
+    adds = shifts = fp_mults = macs = 0.0
+    for g, n in param_groups(cfg).items():
+        if g in _NON_STORAGE_GROUPS:
+            continue
+        spec = group_spec(cfg, g)
+        if spec is not None and spec.backend == "pow2":
+            # per output neuron: I adds + K shifts + 1 fp mult. Group
+            # counts are sum(I*O); approximate I by d_model (the input
+            # dim of nearly every body matmul) to get total outputs.
+            outs = n / cfg.d_model
+            adds += n
+            shifts += spec.K * outs
+            fp_mults += outs
+        else:
+            macs += n
+    return {"int_adds": adds, "bit_shifts": shifts,
+            "fp_boundary_mults": fp_mults, "fp_macs": macs}
 
 
 def kmeans_flops(cfg):

@@ -44,6 +44,8 @@ def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
         node = {"__lutq__w": tree.w, "__lutq__d": tree.d, "__lutq__a": tree.a}
         if tree.sid is not None:
             node["__lutq__sid"] = tree.sid
+        if tree.act is not None:
+            node["__lutq__act"] = tree.act
         out += _flatten(node, prefix)
     elif tree is None:
         out.append((prefix.rstrip("/") + "@none", None))
@@ -68,7 +70,8 @@ def _unflatten(items: Dict[str, Any]):
             if "__lutq__w" in node:
                 return LutqState(w=node["__lutq__w"], d=node["__lutq__d"],
                                  a=node["__lutq__a"],
-                                 sid=node.get("__lutq__sid"))
+                                 sid=node.get("__lutq__sid"),
+                                 act=node.get("__lutq__act"))
             return {k: rebuild(v) for k, v in node.items()}
         return node
 

@@ -6,11 +6,38 @@ uniform fake-quant with a straight-through gradient. The scale is
 dynamic (max-abs of the tensor) by default, which is what NNabla's
 uniform quantizer does absent calibration, and can be frozen for
 deployment.
+
+Frozen scales + calibration
+---------------------------
+The activation-quant *regime* threads ``act_bits`` from each leaf's
+:class:`repro.core.spec.QuantSpec` through the layer contract
+(``nn.linear.dot_kernel`` and friends) instead of hand-placed
+``fake_quant`` calls inside model code. Rules with ``act_frozen=True``
+additionally carry a calibrated per-leaf ``[scale, qmax]`` pair in
+``LutqState.act``:
+
+1. :func:`tag_act_capture` wraps every quantized leaf with its tree
+   path;
+2. a short forward under :func:`capture_act_scales` records per-leaf
+   running max|x| at each matmul boundary (``jax.debug.callback``, so
+   jit/scan/vmap all work);
+3. :func:`apply_act_scales` freezes ``scale = amax / qmax`` into
+   ``LutqState.act`` for every rule with ``act_frozen`` and
+   ``act_bits < 32``.
+
+The frozen pair persists through ``serve_view`` and checkpoints, and is
+what the multiplier-less ``pow2`` kernel backend uses to int8-quantize
+activations without a runtime max-reduction.
 """
 from __future__ import annotations
 
+import contextlib
+from typing import Dict, Optional
+
 import jax
 import jax.numpy as jnp
+
+from repro.core.lutq import LutqState
 
 
 def fake_quant(x: jax.Array, bits: int = 8, scale: jax.Array | None = None) -> jax.Array:
@@ -48,6 +75,22 @@ def learned_clip_fake_quant(x: jax.Array, alpha: jax.Array,
     return xc + jax.lax.stop_gradient(q - xc)
 
 
+def fake_quant_frozen(x: jax.Array, act: jax.Array) -> jax.Array:
+    """STE fake-quant against a frozen calibration pair.
+
+    ``act`` is ``LutqState.act``: trailing-axis ``[scale, qmax]``. Uses
+    the same symmetric clip as the pow2 kernels' internal int8 path
+    (``kernels.ops._pow2_act_quant``), so a frozen-scale fused forward
+    and the shift-add forward quantize activations identically.
+    """
+    scale = act[..., 0].astype(jnp.float32)
+    qmax = act[..., 1].astype(jnp.float32)
+    s = jnp.where(scale > 0, scale, 1.0)
+    q = (jnp.clip(jnp.round(x.astype(jnp.float32) / s), -qmax, qmax)
+         * s).astype(x.dtype)
+    return x + jax.lax.stop_gradient(q - x)
+
+
 def relu_fake_quant(x: jax.Array, bits: int = 8) -> jax.Array:
     """Unsigned variant for post-ReLU activations (full range on [0, max])."""
     if bits >= 32:
@@ -58,3 +101,136 @@ def relu_fake_quant(x: jax.Array, bits: int = 8) -> jax.Array:
     scale = jnp.maximum(amax, 1e-8) / qmax
     q = jnp.clip(jnp.round(x / scale), 0.0, qmax) * scale
     return x + jax.lax.stop_gradient(q - x)
+
+
+# ---------------------------------------------------------------------------
+# calibration: capture per-leaf activation maxima, freeze [scale, qmax]
+# ---------------------------------------------------------------------------
+
+class TaggedLutqState:
+    """A :class:`LutqState` carrying its tree path as a static tag.
+
+    Calibration-only wrapper: ``tag_act_capture`` wraps the params tree,
+    the layer contract (``nn.linear.dot_kernel`` etc.) calls
+    :func:`record_amax` with the tag before unwrapping, and the wrapper
+    never escapes the calibration forward. Registered as a pytree with
+    the tag static so scan/vmap slice the inner state transparently.
+    """
+
+    __slots__ = ("state", "tag")
+
+    def __init__(self, state: LutqState, tag: str):
+        self.state = state
+        self.tag = tag
+
+    @property
+    def w(self):
+        return self.state.w
+
+    @property
+    def d(self):
+        return self.state.d
+
+    @property
+    def a(self):
+        return self.state.a
+
+    @property
+    def sid(self):
+        return self.state.sid
+
+    @property
+    def act(self):
+        return self.state.act
+
+
+jax.tree_util.register_pytree_node(
+    TaggedLutqState,
+    lambda s: ((s.state,), s.tag),
+    lambda tag, children: TaggedLutqState(children[0], tag),
+)
+
+# Active capture record: {tag: running max |x|}. None == not capturing.
+_CAPTURE: Optional[Dict[str, float]] = None
+
+
+@contextlib.contextmanager
+def capture_act_scales():
+    """Context manager yielding the ``{tag: amax}`` record dict.
+
+    Run calibration forwards inside the block (on a tree wrapped by
+    :func:`tag_act_capture`); the record fills via runtime callbacks, so
+    block on the forward's outputs before leaving the block.
+    """
+    global _CAPTURE
+    prev, _CAPTURE = _CAPTURE, {}
+    try:
+        yield _CAPTURE
+    finally:
+        _CAPTURE = prev
+
+
+def record_amax(tag: str, x: jax.Array) -> None:
+    """Fold max|x| into the active capture record (no-op when inactive).
+
+    ``jax.debug.callback`` defers the host write to runtime, so this
+    works under jit/scan/vmap; stacked leaves (scan-over-layers,
+    experts) fold every slice into one per-leaf maximum — calibration is
+    per *leaf*, not per slice.
+    """
+    rec = _CAPTURE
+    if rec is None:
+        return
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+    def cb(v):
+        rec[tag] = max(rec.get(tag, 0.0), float(v))
+
+    jax.debug.callback(cb, amax)
+
+
+def tag_act_capture(params):
+    """Wrap every quantized leaf with its path for calibration capture."""
+    from repro.nn.tree import map_with_path
+
+    def wrap(path, leaf):
+        if isinstance(leaf, LutqState):
+            return TaggedLutqState(leaf, "/".join(path))
+        return leaf
+
+    return map_with_path(wrap, params)
+
+
+def apply_act_scales(params, record: Dict[str, float], quant=None):
+    """Freeze captured maxima into ``LutqState.act`` pairs.
+
+    Only leaves whose governing rule has ``act_frozen=True`` and
+    ``act_bits < 32`` are filled (``quant`` is a QuantPolicy / QuantSpec
+    / None); others pass through untouched. The pair is broadcast over
+    stack slices: ``act = [amax / qmax, qmax]`` with
+    ``qmax = 2^(act_bits-1) - 1`` (clamped to int8 range by the pow2
+    consumers).
+    """
+    from repro.core.rules import as_policy
+    from repro.nn.tree import map_with_path
+
+    pol = as_policy(quant)
+
+    def fill(path, leaf):
+        if not isinstance(leaf, LutqState):
+            return leaf
+        spec = None
+        if pol is not None:
+            i = pol.match(path)
+            spec = pol.rules[i].spec if i is not None else None
+        if spec is None or spec.act_bits >= 32 or not spec.act_frozen:
+            return leaf
+        amax = record.get("/".join(path))
+        if amax is None or amax <= 0.0:
+            return leaf
+        qmax = float(2.0 ** (spec.act_bits - 1) - 1.0)
+        pair = jnp.array([amax / qmax, qmax], jnp.float32)
+        act = jnp.broadcast_to(pair, leaf.d.shape[:-1] + (2,)) + 0.0
+        return leaf._replace(act=act)
+
+    return map_with_path(fill, params)

@@ -36,12 +36,23 @@ class LutqState(NamedTuple):
       see a consistent leading axis; scalar for unstacked tensors. None
       flattens away as an empty pytree, so 3-field construction and old
       checkpoints keep working unchanged.
+    act: frozen activation-quant record for this tensor's matmul
+      boundary, or None (dynamic / fp activations). Shape
+      d.shape[:-1] + (2,) = per-stack-slice [scale, qmax]: the
+      calibration-frozen scale s and clip bound so the kernel boundary
+      computes clip(round(x/s), -qmax, qmax). Trailing-axis layout keeps
+      scan-over-layers slicing consistent with d (see sid).
+
+    Serve-form convention: ``d.dtype == int8`` means the dictionary is a
+    pow2 sign+exponent *plane* (see :func:`pow2_encode`), exactly as
+    ``a.dtype == uint8`` means packed assignments.
     """
 
     w: jax.Array
     d: jax.Array
     a: jax.Array
     sid: Optional[jax.Array] = None
+    act: Optional[jax.Array] = None
 
 
 # ---------------------------------------------------------------------------
@@ -78,8 +89,12 @@ def decode_any(d: jax.Array, a: jax.Array) -> jax.Array:
     """decode() for stacked dictionaries: d (..., K), a (..., *w_shape).
 
     Leading axes of d index independent tensors (scan-over-layers stacks,
-    MoE experts) each with its own dictionary.
+    MoE experts) each with its own dictionary. An int8 ``d`` is a pow2
+    sign+exponent plane (serve-form convention) and is decoded to exact
+    ±2^k floats first.
     """
+    if d.dtype == jnp.int8:
+        d = pow2_decode(d)
     nstack = d.ndim - 1
     f = decode
     for _ in range(nstack):
@@ -123,6 +138,43 @@ def pow2_round(x: jax.Array, min_exp: int = -14, max_exp: int = 15) -> jax.Array
     e = jnp.clip(jnp.round(jnp.log2(safe)), min_exp, max_exp)
     p = jnp.exp2(e)
     return jnp.where(mag > 0, jnp.sign(x) * p, 0.0).astype(x.dtype)
+
+
+# Exponent window shared by pow2_round and the sign+exponent plane
+# encoding below. 30 = (POW2_MAX_EXP - POW2_MIN_EXP + 1) codes fit int8.
+POW2_MIN_EXP = -14
+POW2_MAX_EXP = 15
+
+
+def pow2_encode(d: jax.Array) -> jax.Array:
+    """Encode a pow2-constrained dictionary as an int8 sign+exponent plane.
+
+    Per entry: code 0 for an exact zero (pruning slot); otherwise
+    ``sign(entry) * (exponent - POW2_MIN_EXP + 1)`` with the exponent in
+    [POW2_MIN_EXP, POW2_MAX_EXP], so |code| ∈ [1, 30]. Same shape as the
+    input (stack axes pass through), and the serve tree stores *only*
+    this plane — 1 byte/entry instead of 4 — which is what the shift-add
+    kernel consumes. Inverse: :func:`pow2_decode` (exact round-trip for
+    in-range pow2 entries).
+    """
+    mag = jnp.abs(d).astype(jnp.float32)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.clip(jnp.round(jnp.log2(safe)), POW2_MIN_EXP, POW2_MAX_EXP)
+    code = jnp.sign(d).astype(jnp.int32) * (e.astype(jnp.int32)
+                                            - POW2_MIN_EXP + 1)
+    return jnp.where(mag > 0, code, 0).astype(jnp.int8)
+
+
+def pow2_decode(code: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Decode an int8 sign+exponent plane back to exact ±2^k / 0 floats.
+
+    2^e for integer e ∈ [-14, 15] is exact in f32, so every decoded
+    entry is bit-exactly a power of two (the multiplier-less invariant).
+    """
+    mag = jnp.abs(code.astype(jnp.int32))
+    val = (jnp.exp2((mag - 1 + POW2_MIN_EXP).astype(jnp.float32))
+           * jnp.sign(code).astype(jnp.float32))
+    return jnp.where(mag > 0, val, 0.0).astype(dtype)
 
 
 def _fixed_dictionary(spec: QuantSpec, dtype=jnp.float32) -> jax.Array:
@@ -387,7 +439,7 @@ def update_state(state: LutqState, spec: QuantSpec,
     """
     fn = _KMEANS_IMPLS[resolve_kmeans_impl(state.w.size, impl)]
     d, a = fn(state.w, state.d, spec)
-    return LutqState(w=state.w, d=d, a=a, sid=state.sid)
+    return LutqState(w=state.w, d=d, a=a, sid=state.sid, act=state.act)
 
 
 # ---------------------------------------------------------------------------

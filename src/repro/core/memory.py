@@ -23,6 +23,45 @@ def dense_layer_bits(n_params: int, b_float: int = 32) -> int:
     return n_params * b_float
 
 
+def pow2_layer_bits(n_params: int, K: int, *, act_pair: bool = True) -> int:
+    """Storage bits for one pow2-encoded LUT-Q tensor (serving_pow2).
+
+    The dictionary ships as an int8 sign+exponent plane (8 bits/entry
+    instead of ``b_float``); indices are unchanged. ``act_pair`` adds the
+    frozen per-leaf activation ``[scale, qmax]`` f32 pair.
+    """
+    bits = K * 8 + n_params * max(1, math.ceil(math.log2(K)))
+    if act_pair:
+        bits += 2 * 32
+    return bits
+
+
+def affine_shift_ops(out_features: int, in_features: int,
+                     K: int | None = None) -> Dict[str, int]:
+    """Multiplier-less op budget for one affine layer forward.
+
+    Group-by-entry summation costs O*I integer adds; applying the pow2
+    dictionary is O*K bit-shifts (exponent adds) instead of O*K
+    multiplications; the only fp multiplies left are the epilogue scale —
+    one per output neuron. ``K=None`` is the dense baseline (all MACs).
+    """
+    if K is None:
+        return {"adds": out_features * in_features,
+                "shifts": 0, "fp_mults": out_features * in_features}
+    return {"adds": out_features * in_features,
+            "shifts": out_features * K, "fp_mults": out_features}
+
+
+def conv_shift_ops(out_ch: int, in_ch: int, kh: int, kw: int, oh: int,
+                   ow: int, K: int | None = None) -> Dict[str, int]:
+    """Conv analogue of :func:`affine_shift_ops` (per example)."""
+    pix = oh * ow * out_ch
+    taps = in_ch * kh * kw
+    if K is None:
+        return {"adds": pix * taps, "shifts": 0, "fp_mults": pix * taps}
+    return {"adds": pix * taps, "shifts": pix * K, "fp_mults": pix}
+
+
 def affine_mults(out_features: int, in_features: int, K: int | None = None) -> int:
     """Multiplications for one affine layer forward (per example).
 

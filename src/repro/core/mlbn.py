@@ -84,6 +84,25 @@ def batch_norm(
     return y, new_stats
 
 
+def apply_scale_offset_shift(x: jax.Array, a: jax.Array, b: jax.Array,
+                             *, axis: int = -1) -> jax.Array:
+    """``y = a*x + b`` for exact-pow2 ``a``, computed without multiplies.
+
+    The scale is applied as an exponent add (``ldexp``) on a sign-flipped
+    ``x`` — negate, shift, add — which is the ML-BN inference claim made
+    literal. Bit-identical to ``a*x + b`` for ``a = ±2^k`` in the normal
+    float range, so the trained ``multiplier_less`` forward and this
+    serve form agree exactly.
+    """
+    shape = [1] * x.ndim
+    shape[axis % x.ndim] = x.shape[axis % x.ndim]
+    a = a.reshape(shape)
+    b = b.reshape(shape)
+    e = jnp.round(jnp.log2(jnp.where(a != 0, jnp.abs(a), 1.0))).astype(jnp.int32)
+    y = jnp.ldexp(jnp.where(a < 0, -x, x), e)
+    return jnp.where(a != 0, y, jnp.zeros((), x.dtype)) + b
+
+
 def inference_scale_offset(
     params: BNParams, stats: BNStats, *, multiplier_less: bool = False, eps: float = 1e-5
 ) -> Tuple[jax.Array, jax.Array]:

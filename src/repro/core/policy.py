@@ -23,7 +23,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.lutq import LutqState, init_state, update_state
+from repro.core.lutq import LutqState, init_state, pow2_encode, update_state
 from repro.core.rules import QuantLike, QuantPolicy, as_policy
 from repro.core.spec import QuantSpec
 from repro.nn.tree import map_with_path, tree_paths
@@ -151,7 +151,7 @@ def kmeans_tree(params, quant: QuantLike, impl: Optional[str] = None):
         nstack = leaf.d.ndim - 1
         core = LutqState(w=leaf.w, d=leaf.d, a=leaf.a)
         f = _vmapped(lambda s: update_state(s, spec, impl=impl), nstack)
-        return f(core)._replace(sid=leaf.sid)
+        return f(core)._replace(sid=leaf.sid, act=leaf.act)
 
     return map_with_path(refresh, params)
 
@@ -183,6 +183,8 @@ def split_trainable(params):
             s = {"__lutq_d": leaf.d, "__lutq_a": leaf.a}
             if leaf.sid is not None:
                 s["__lutq_sid"] = leaf.sid
+            if leaf.act is not None:
+                s["__lutq_act"] = leaf.act
             return leaf.w, s
         if leaf is not None and hasattr(leaf, "dtype") and not jnp.issubdtype(
                 leaf.dtype, jnp.inexact):
@@ -198,7 +200,8 @@ def merge_trainable(trainable, static):
     def merge(t, s):
         if isinstance(s, dict) and "__lutq_d" in s:
             return LutqState(w=t, d=s["__lutq_d"], a=s["__lutq_a"],
-                             sid=s.get("__lutq_sid"))
+                             sid=s.get("__lutq_sid"),
+                             act=s.get("__lutq_act"))
         if isinstance(s, dict) and "__static" in s:
             return s["__static"]
         if isinstance(t, dict):
@@ -216,6 +219,25 @@ def _leaf_rule(pol: Optional[QuantPolicy], path):
     if i is None:
         return None, "auto"
     return pol.rules[i].spec, pol.rules[i].resolved_backend
+
+
+def _pow2_encodable(d, kin: int):
+    """(int8 plane, fits) for pow2 serve encoding of a dictionary.
+
+    ``fits`` is the shift-add int32 overflow guard: the accumulator is
+    bounded by 127 * 2^span * Kin, so ``7 + span + ceil(log2 Kin)`` must
+    stay within 31 bits, where span is the largest max-min nonzero
+    exponent spread over the stack slices. Needs concrete values — under
+    tracing the caller must fall back to the float dictionary.
+    """
+    code = pow2_encode(d)
+    mag = jnp.abs(code.astype(jnp.int32))
+    has = jnp.any(mag > 0, axis=-1)
+    mx = jnp.max(mag, axis=-1)
+    mn = jnp.min(jnp.where(mag > 0, mag, jnp.iinfo(jnp.int32).max), axis=-1)
+    span = int(jnp.max(jnp.where(has, mx - mn, 0)))
+    bits = 7 + span + math.ceil(math.log2(max(kin, 2)))
+    return code, bits <= 31
 
 
 def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = None,
@@ -269,15 +291,29 @@ def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = Non
                     and a.ndim >= 2 and a.shape[-2] % 2 == 0)
         if requested == "packed4":
             pack = packable
-        elif requested in ("fused", "decode"):
-            pack = False
+        elif requested in ("fused", "decode", "pow2"):
+            pack = False  # pow2 planes carry int8 assignments (never packed)
         else:  # auto
             pack = packable and pack4
             if pack and pol is not None:
                 pack = spec is not None and spec.index_bits <= 4
         if pack:
             a = pack4_kin(a)
-        out = LutqState(w=None, d=leaf.d, a=a, sid=leaf.sid)
+        d = leaf.d
+        if (requested == "pow2" and not pack and a.dtype != jnp.uint8
+                and spec is not None and spec.constraint == "pow2"
+                and a.ndim >= 2):
+            # emit the sign+exponent plane (int8 == pow2-encoded, the
+            # structural twin of uint8 == packed) when the shift-add
+            # int32 accumulator provably cannot overflow; otherwise keep
+            # the float dictionary (degrades to the fused ladder)
+            try:
+                code, fits = _pow2_encodable(d, int(a.shape[-2]))
+                if fits:
+                    d = code
+            except jax.errors.TracerArrayConversionError:
+                pass  # tracing: can't prove the bound, keep float
+        out = LutqState(w=None, d=d, a=a, sid=leaf.sid, act=leaf.act)
         if with_manifest:
             # The rule's request has been realized *structurally* (packed
             # vs int8 layout), so the leaf's auto resolution IS what
@@ -286,6 +322,8 @@ def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = Non
                 "backend": resolve_backend(out, "auto", sliced=True),
                 "requested": requested,
                 "packed": bool(pack),
+                "encoding": "pow2" if out.d.dtype == jnp.int8 else "float",
+                "act_frozen": bool(out.act is not None),
                 "K": int(K),
                 "bits": int(math.ceil(math.log2(max(K, 2)))),
                 "stack": int(leaf.d.ndim - 1),
@@ -345,6 +383,8 @@ def backend_manifest(params, policy: Optional[QuantLike] = None,
             "backend": resolve_backend(leaf, effective, sliced=True),
             "requested": requested,
             "packed": bool(leaf.a.dtype == jnp.uint8),
+            "encoding": "pow2" if leaf.d.dtype == jnp.int8 else "float",
+            "act_frozen": bool(leaf.act is not None),
             "K": int(K),
             "bits": int(math.ceil(math.log2(max(K, 2)))),
             "stack": int(leaf.d.ndim - 1),
@@ -427,6 +467,8 @@ def rule_breakdown(params, quant: QuantLike) -> List[Dict]:
             row["serve_bytes"] += leaf.d.nbytes + leaf.a.nbytes
             if leaf.sid is not None:
                 row["serve_bytes"] += leaf.sid.nbytes
+            if leaf.act is not None:
+                row["serve_bytes"] += leaf.act.nbytes
         else:
             row["n_params"] += leaf.size
             row["serve_bytes"] += leaf.nbytes

@@ -30,6 +30,7 @@ from repro.core.spec import (
     LUTQ_2BIT_POW2,
     LUTQ_4BIT,
     LUTQ_4BIT_POW2,
+    SERVING_POW2,
     TERNARY_SCALED,
     QuantSpec,
     spec_from_dict,
@@ -61,7 +62,8 @@ class QuantRule:
     backend: Optional[str] = None
 
     def __post_init__(self):
-        if self.backend not in (None, "auto", "decode", "fused", "packed4"):
+        if self.backend not in (None, "auto", "decode", "fused", "packed4",
+                                "pow2"):
             raise ValueError(f"unknown kernel backend {self.backend!r}")
 
     @property
@@ -199,6 +201,9 @@ class QuantPolicy:
                        f" (K={r.spec.K}, min_size={r.size_floor})")
             if r.resolved_backend != "auto":
                 rhs += f" [{r.resolved_backend}]"
+            if r.spec is not None and r.spec.act_bits < 32:
+                rhs += (f" act{r.spec.act_bits}"
+                        f"{'-frozen' if r.spec.act_frozen else ''}")
             lines.append(f"  [{i}] {r.rule_name:24s} {r.pattern:20s} -> {rhs}")
         return "\n".join(lines)
 
@@ -267,10 +272,23 @@ def mixed_paper() -> QuantPolicy:
         name="mixed_paper")
 
 
+def serving_pow2() -> QuantPolicy:
+    """Multiplier-less deployment: fp embeddings/head, everything else a
+    pow2 dictionary served as sign+exponent planes through the shift-add
+    kernel with int8 activations at calibration-frozen scales (paper
+    headline + Appendix A; see docs/multiplierless.md)."""
+    return QuantPolicy(
+        rules=(QuantRule(EMBED_PATTERN, None, name="first-layer-fp"),
+               QuantRule(HEAD_PATTERN, None, name="last-layer-fp"),
+               QuantRule("*", SERVING_POW2, name="body-pow2-shift")),
+        name="serving_pow2")
+
+
 PRESETS = {
     "paper_default": paper_default,
     "serving_aggressive": serving_aggressive,
     "mixed_paper": mixed_paper,
+    "serving_pow2": serving_pow2,
 }
 
 

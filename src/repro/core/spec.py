@@ -27,9 +27,19 @@ class QuantSpec:
       min_size: tensors with fewer elements are left unquantized
         (biases, norm gains; the paper quantizes affine/conv weights).
       backend: serving kernel backend for tensors under this spec
-        ('auto' | 'decode' | 'fused' | 'packed4', see kernels/ops.py).
-        'auto' resolves structurally per leaf; explicit choices degrade
-        gracefully where a kernel cannot apply.
+        ('auto' | 'decode' | 'fused' | 'packed4' | 'pow2', see
+        kernels/ops.py). 'auto' resolves structurally per leaf; explicit
+        choices degrade gracefully where a kernel cannot apply.
+      act_bits: activation quantization width at this tensor's matmul
+        boundary (32 = full precision). Part of the quantization
+        *regime*: the layer contract (``nn/linear.dot_kernel``) applies
+        it at the kernel boundary instead of models hand-placing
+        ``fake_quant`` calls.
+      act_frozen: freeze the activation scale from a calibration batch
+        (``core/actquant.capture_act_scales`` →
+        ``policy.apply_act_scales``) instead of recomputing the max-abs
+        scale per call. Required for deployment and for the integer
+        ``pow2`` kernel path under K-sharded SPMD.
     """
 
     bits: int = 4
@@ -42,12 +52,19 @@ class QuantSpec:
     # scaled binary). False = literal {-1[,0],1} (BinaryConnect).
     fixed_scale: bool = False
     backend: str = "auto"
+    act_bits: int = 32
+    act_frozen: bool = False
 
     def __post_init__(self):
         if self.constraint not in ("none", "pow2", "binary", "ternary"):
             raise ValueError(f"unknown constraint {self.constraint!r}")
-        if self.backend not in ("auto", "decode", "fused", "packed4"):
+        if self.backend not in ("auto", "decode", "fused", "packed4", "pow2"):
             raise ValueError(f"unknown kernel backend {self.backend!r}")
+        if self.backend == "pow2" and self.constraint != "pow2":
+            raise ValueError("backend='pow2' requires constraint='pow2' "
+                             "(the shift-add kernel needs ±2^k entries)")
+        if not (1 <= self.act_bits <= 32):
+            raise ValueError("act_bits must be in [1, 32]")
         if self.constraint == "binary" and self.bits != 1:
             raise ValueError("binary constraint requires bits=1")
         if self.constraint == "ternary" and self.bits != 2:
@@ -91,6 +108,10 @@ LUTQ_4BIT = QuantSpec(bits=4)
 LUTQ_2BIT = QuantSpec(bits=2)
 LUTQ_4BIT_POW2 = QuantSpec(bits=4, constraint="pow2")
 LUTQ_2BIT_POW2 = QuantSpec(bits=2, constraint="pow2")
+# Multiplier-less serving regime: pow2 dictionary served as sign+exponent
+# planes through the shift-add kernel, int8 activations at frozen scales.
+SERVING_POW2 = QuantSpec(bits=4, constraint="pow2", backend="pow2",
+                         act_bits=8, act_frozen=True)
 BINARY = QuantSpec(bits=1, constraint="binary")
 TERNARY = QuantSpec(bits=2, constraint="ternary")
 TERNARY_SCALED = QuantSpec(bits=2, constraint="ternary", fixed_scale=True)

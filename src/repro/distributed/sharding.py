@@ -137,7 +137,11 @@ def tree_pspecs(axes_tree, mesh: Mesh, shapes_tree=None, rules=None):
             dspec = P(*([wspec[i] if i < len(wspec) else None
                          for i in range(nstack)] + [None])) if nstack else P()
             sidspec = P() if getattr(shp, "sid", None) is not None else None
-            return LutqState(w=wspec, d=dspec, a=wspec, sid=sidspec)
+            # act: (stack..., 2) frozen [scale, qmax] pairs — shard the
+            # stack axes like d, replicate the pair axis
+            actspec = dspec if getattr(shp, "act", None) is not None else None
+            return LutqState(w=wspec, d=dspec, a=wspec, sid=sidspec,
+                             act=actspec)
         shape = getattr(shp, "shape", None)
         return pspec_for(tuple(logical), mesh, shape, rules)
 
@@ -160,7 +164,8 @@ def train_pspecs(axes_tree, mesh: Mesh, params):
     def replicate_d(leaf):
         if isinstance(leaf, LutqState):
             return LutqState(w=leaf.w, d=P(), a=leaf.a,
-                             sid=P() if leaf.sid is not None else None)
+                             sid=P() if leaf.sid is not None else None,
+                             act=P() if leaf.act is not None else None)
         return leaf
 
     return jax.tree.map(

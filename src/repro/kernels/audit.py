@@ -1,0 +1,169 @@
+"""Compiled-graph multiply audit for multiplier-less serving.
+
+The pow2 backend's claim — dictionary applied by exponent-add/bit-shift,
+int32 accumulation, one fp scale at the epilogue — is checked here
+against what actually lowers, not against what the Python source says.
+``lower_text`` captures the StableHLO for a jitted callable (the
+pre-optimization module: deterministic, platform-independent, and with
+interpret-mode Pallas every kernel op is inlined as plain StableHLO);
+``multiply_report`` classifies every ``multiply`` / ``dot_general`` /
+``convolution`` by element type and shape; ``audit_multiplierless``
+asserts the quantized matmul path is integer:
+
+* no floating-point ``dot_general``/``convolution`` touches a quantized
+  weight shape (the decoded-weight matmul must not exist);
+* no floating-point elementwise ``multiply`` is weight-shaped (no
+  decoded-weight scaling either);
+* at least one integer dot is present (the shift-add accumulation).
+
+fp multiplies *are* allowed at the boundary — activation quantization
+(M x Kin) and the epilogue scale (M x N) — and in unquantized layers
+(norms, attention probs, fp-by-policy embed/head), which is exactly the
+multiplier budget the paper's Table 2 counts.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FP_TYPES = ("f64", "f32", "f16", "bf16")
+
+_TENSOR_RE = re.compile(r"tensor<([^>]*)>")
+_DOT_RE = re.compile(
+    r"stablehlo\.(dot_general|convolution)\b.*"
+    r"\((tensor<[^>]*>),\s*(tensor<[^>]*>)\)\s*->\s*(tensor<[^>]*>)")
+_MUL_RE = re.compile(r"stablehlo\.multiply\b.*:\s*(tensor<[^>]*>)\s*$")
+
+
+def _parse(tensor: str) -> Tuple[Tuple[int, ...], str]:
+    """'8x16xf32' -> ((8, 16), 'f32'); 'f32' (scalar) -> ((), 'f32')."""
+    inner = _TENSOR_RE.match(tensor).group(1) if tensor.startswith("tensor") \
+        else tensor
+    parts = inner.split("x")
+    dims = tuple(int(p) for p in parts[:-1] if p.isdigit())
+    return dims, parts[-1]
+
+
+def _elems(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def lower_text(fn, *args, **kwargs) -> str:
+    """StableHLO text of ``jit(fn)`` lowered on the given args."""
+    return jax.jit(fn).lower(*args, **kwargs).as_text()
+
+
+def multiply_report(hlo_text: str) -> Dict[str, List[dict]]:
+    """Classify every multiply-shaped op in a StableHLO module.
+
+    Returns ``{"fp_dots": [...], "int_dots": [...], "fp_multiplies":
+    [...]}``; each entry carries ``dtype``, operand/output ``dims`` and
+    an element/flop count. Dot flops are estimated as
+    ``sqrt(|lhs|*|rhs|*|out|)`` (exact for plain and shared-batch
+    matmuls).
+    """
+    fp_dots, int_dots, fp_multiplies = [], [], []
+    for line in hlo_text.splitlines():
+        m = _DOT_RE.search(line)
+        if m:
+            ld, lt = _parse(m.group(2))
+            rd, rt = _parse(m.group(3))
+            od, ot = _parse(m.group(4))
+            flops = int(round((_elems(ld) * _elems(rd) * _elems(od)) ** 0.5))
+            rec = {"op": m.group(1), "dtype": ot, "lhs": ld, "rhs": rd,
+                   "out": od, "flops": flops}
+            (fp_dots if ot in FP_TYPES else int_dots).append(rec)
+            continue
+        m = _MUL_RE.search(line)
+        if m:
+            dims, dt = _parse(m.group(1))
+            if dt in FP_TYPES:
+                fp_multiplies.append({"dtype": dt, "dims": dims,
+                                      "elems": _elems(dims)})
+    return {"fp_dots": fp_dots, "int_dots": int_dots,
+            "fp_multiplies": fp_multiplies}
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    """Scalar multiply budget of a module (the Table 2 quantities)."""
+    rep = multiply_report(hlo_text)
+    return {
+        "fp_dot_flops": sum(d["flops"] for d in rep["fp_dots"]),
+        "int_dot_flops": sum(d["flops"] for d in rep["int_dots"]),
+        "fp_multiply_elems": sum(m["elems"] for m in rep["fp_multiplies"]),
+        "n_fp_dots": len(rep["fp_dots"]),
+        "n_int_dots": len(rep["int_dots"]),
+    }
+
+
+def quantized_weight_dims(params) -> Set[Tuple[int, ...]]:
+    """Trailing-2D shapes (and transposes) of every LUT-Q leaf's
+    assignment plane — the shapes a multiplier-less lowering must never
+    touch with an fp dot or fp weight-shaped multiply."""
+    from repro.core.lutq import LutqState
+
+    shapes: Set[Tuple[int, ...]] = set()
+
+    def visit(leaf):
+        st = getattr(leaf, "state", leaf)
+        if isinstance(st, LutqState) and st.a.ndim >= 2:
+            kin, n = int(st.a.shape[-2]), int(st.a.shape[-1])
+            shapes.add((kin, n))
+            shapes.add((n, kin))
+
+    jax.tree_util.tree_map(
+        visit, params,
+        is_leaf=lambda x: isinstance(getattr(x, "a", None), jnp.ndarray)
+        or hasattr(x, "state"))
+    return shapes
+
+
+def _touches(dims_list: Iterable[Tuple[int, ...]],
+             weight_shapes: Set[Tuple[int, ...]]) -> bool:
+    return any(d[-2:] in weight_shapes for d in dims_list if len(d) >= 2)
+
+
+def audit_multiplierless(
+    fn,
+    *args,
+    weight_shapes: Optional[Sequence[Tuple[int, ...]]] = None,
+    params=None,
+    require_int_dot: bool = True,
+    **kwargs,
+) -> Dict[str, List[dict]]:
+    """Assert the quantized matmul path of ``fn`` lowers multiplier-less.
+
+    ``weight_shapes`` (or ``params``, from which they are collected via
+    :func:`quantized_weight_dims`) scope the claim to the quantized
+    leaves: fp dots/convs and fp weight-shaped multiplies touching those
+    shapes fail the audit; boundary fp multiplies and fp-by-policy
+    layers pass. Returns the :func:`multiply_report` for inspection.
+
+    Raises ``AssertionError`` with the offending ops on failure.
+    """
+    if weight_shapes is None:
+        assert params is not None, "pass weight_shapes or params"
+        wset = quantized_weight_dims(params)
+    else:
+        wset = {tuple(s) for s in weight_shapes}
+        wset |= {s[::-1] for s in wset}
+    rep = multiply_report(lower_text(fn, *args, **kwargs))
+    bad_dots = [d for d in rep["fp_dots"]
+                if _touches((d["lhs"], d["rhs"]), wset)]
+    assert not bad_dots, (
+        f"fp dot ops touch quantized weight shapes (decoded-weight matmul "
+        f"survived): {bad_dots}")
+    bad_muls = [m for m in rep["fp_multiplies"] if _touches((m["dims"],), wset)]
+    assert not bad_muls, (
+        f"fp weight-shaped multiplies present (decoded-weight scaling "
+        f"survived): {bad_muls}")
+    if require_int_dot:
+        assert rep["int_dots"], (
+            "no integer dot in the lowering — shift-add accumulation missing")
+    return rep

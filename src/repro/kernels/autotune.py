@@ -48,7 +48,8 @@ import jax
 import jax.numpy as jnp
 
 #: kernel component of a cache key per backend
-KERNEL_OF_BACKEND = {"fused": "matmul", "packed4": "gemv_packed"}
+KERNEL_OF_BACKEND = {"fused": "matmul", "packed4": "gemv_packed",
+                     "pow2": "shift"}
 
 #: decode strategies the kernels implement (dictionary placement)
 STRATEGIES = ("onehot", "gather")
@@ -243,16 +244,21 @@ def measure_call(fn: Callable, *args, reps: int = 3, warmup: int = 2) -> float:
 
 
 def _operands(kernel: str, M: int, N: int, Kin: int, K: int, dtype, seed: int):
-    from repro.core.lutq import LutqState
+    from repro.core.lutq import LutqState, pow2_encode
     from repro.kernels.ref import pack4_kin
 
     key = jax.random.PRNGKey(seed)
     kx, ka, kd = jax.random.split(key, 3)
-    x = jax.random.normal(kx, (M, Kin), jnp.float32).astype(dtype)
+    # the shift kernel consumes int8-quantized activations internally;
+    # its probe x stays f32 (lutq_dot quantizes at the boundary)
+    xdt = jnp.float32 if kernel == "shift" else dtype
+    x = jax.random.normal(kx, (M, Kin), jnp.float32).astype(xdt)
     a = jax.random.randint(ka, (Kin, N), 0, K, jnp.int8)
     d = jnp.sort(jax.random.normal(kd, (K,), jnp.float32))
     if kernel == "gemv_packed":
         a = pack4_kin(a)
+    if kernel == "shift":
+        d = pow2_encode(d)  # int8 sign+exponent plane
     return x, LutqState(w=None, d=d, a=a)
 
 
@@ -274,8 +280,14 @@ def tune(kernel: str, *, M: int, N: int, Kin: int, K: int,
 
     from repro.kernels import ops
 
-    backend = backend or ("packed4" if kernel == "gemv_packed" else "fused")
+    backend = backend or {"gemv_packed": "packed4",
+                          "shift": "pow2"}.get(kernel, "fused")
     interpret = default_interpret() if interpret is None else interpret
+    if kernel == "shift":
+        # the shift kernel's hot operand is the int8 quantized x; key on
+        # int8 regardless of the model compute dtype so trace-time
+        # lookups (_tuned_tile("pow2", ...)) always hit
+        dtype = jnp.int8
     key = make_key(kernel, M, N, Kin, K, dtype, backend,
                    platform_key(interpret))
     if measure is None:
@@ -336,7 +348,7 @@ def leaf_shapes_for_tree(params, *, batch_m: int = 8,
         seen.setdefault(rec_key, {"kernel": kernel, "backend": be,
                                   "M": batch_m, "N": N, "Kin": Kin, "K": K,
                                   "paths": []})["paths"].append("/".join(path))
-        if be == "fused" and path and path[-1] == "table":
+        if be in ("fused", "pow2") and path and path[-1] == "table":
             # tied-logits orientation: x @ d[A].T swaps Kin/N
             tm = batch_m if transpose_batch_m is None else transpose_batch_m
             tkey = (kernel, tm, Kin, N, K)

@@ -1,0 +1,89 @@
+"""Shift-and-add LUT matmul Pallas TPU kernel (multiplier-less path).
+
+Computes the int32 accumulator ``acc = xq @ wsh[A]`` for pow2-constrained
+dictionaries: ``xq`` are int8-quantized activations, ``A`` streams
+HBM->VMEM as int8 assignments (1 byte/weight), and ``wsh`` is the
+(<=256-entry, VMEM-resident) *shifted-integer* dictionary — each pow2
+entry pre-lowered to ``sign * (1 << (exponent - min_exponent))`` by
+``kernels.ref.pow2_shift_weights``, an O(K) exponent-add outside the hot
+loop. The kernel therefore performs only integer adds/shifted adds (the
+paper's multiplier-less claim); the caller applies the single fp
+multiply — ``acc * (act_scale * 2^(min_exponent - 1 + POW2_MIN_EXP))`` —
+at the O(M·N) epilogue.
+
+Because accumulation is exact int32, the result is bit-identical to the
+``kernels.ref.lutq_shift_ref`` oracle under ANY tile shape and any
+K-shard/psum order — unlike the f32 fused kernel, no single-k-step
+pinning is needed for interpret-mode bit-identity.
+
+Overflow bound (checked at encode time in ``core.policy.serve_view``):
+|acc| <= 127 * 2^span * Kin, so 7 + span + ceil(log2 Kin) <= 31 bits
+must hold, where span = max-min nonzero exponent of the dictionary.
+
+Grid: (M/bm, N/bn, Kin/bk), k innermost so the int32 output block stays
+resident across the accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, a_ref, w_ref, o_ref, *, n_dict: int, decode_onehot: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)  # (bk, bn)
+    w = w_ref[...]                    # (n_dict,) int32 shifted integers
+    if decode_onehot:
+        bk, bn = a.shape
+        onehot = (a.reshape(bk * bn, 1) ==
+                  jnp.arange(n_dict, dtype=jnp.int32)[None, :]).astype(jnp.int32)
+        wt = (onehot @ w.reshape(n_dict, 1)).reshape(bk, bn)
+    else:
+        wt = jnp.take(w, a, axis=0)
+    xq = x_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        xq, wt,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def lutq_shift(
+    xq: jax.Array,      # (M, Kin) int8 quantized activations
+    a: jax.Array,       # (Kin, N) int8 assignments
+    wsh: jax.Array,     # (K,) int32 shifted-integer dictionary
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    decode_onehot: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """int32 accumulator of the shift-add matmul (see module docstring)."""
+    M, Kin = xq.shape
+    Kin2, N = a.shape
+    assert Kin == Kin2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, Kin)
+    assert M % bm == 0 and N % bn == 0 and Kin % bk == 0, (M, N, Kin, bm, bn, bk)
+    n_dict = wsh.shape[0]
+
+    grid = (M // bm, N // bn, Kin // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_dict=n_dict, decode_onehot=decode_onehot),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((n_dict,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(xq, a, wsh)

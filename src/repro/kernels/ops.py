@@ -21,6 +21,11 @@ Backends
              VMEM-resident dictionary in front of the MXU.
 ``packed4``  :mod:`repro.kernels.lutq_gemv_packed` — 4-bit pairs stay
              packed in HBM (0.5 byte/weight), unpacked in VMEM.
+``pow2``     :mod:`repro.kernels.lutq_shift` — pow2 dictionaries stored
+             as int8 sign+exponent planes, applied as integer shifted
+             adds over int8-quantized activations; the only fp multiply
+             is the O(M·N) epilogue scale. Bit-identical to its integer
+             decode oracle under any tiling (int32 accumulation).
 ``auto``     per-leaf structural resolution (see :func:`resolve_backend`).
 """
 from __future__ import annotations
@@ -41,15 +46,19 @@ from repro.kernels.autotune import (
 from repro.kernels.kmeans_tpu import kmeans_stats as _kmeans_stats
 from repro.kernels.lutq_gemv_packed import lutq_gemv_packed as _gemv_packed
 from repro.kernels.lutq_matmul import lutq_matmul as _lutq_matmul
+from repro.kernels.lutq_shift import lutq_shift as _lutq_shift
 from repro.kernels.ref import (  # noqa: F401  (re-export for callers)
+    lutq_shift_ref,
     pack4,
     pack4_kin,
+    pow2_shift_scale,
+    pow2_shift_weights,
     unpack4,
     unpack4_kin,
 )
 
 #: Backend names accepted by ``lutq_dot`` / policy rules / CLI flags.
-BACKENDS = ("auto", "decode", "fused", "packed4")
+BACKENDS = ("auto", "decode", "fused", "packed4", "pow2")
 
 #: Default tiles when the tuning cache has no entry for a shape.
 DEFAULT_TILE = TileConfig(bm=256, bn=256, bk=512, strategy="onehot")
@@ -96,6 +105,16 @@ def lutq_gemv_packed(x, packed, d, *, bn=256, bk=512, strategy="onehot",
                         interpret=interpret)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "strategy", "interpret"))
+def lutq_shift(xq, a, wsh, *, bm=256, bn=256, bk=512, strategy="onehot",
+               interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _lutq_shift(xq, a, wsh, bm=bm, bn=bn, bk=bk,
+                       decode_onehot=(strategy == "onehot"),
+                       interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def kmeans_stats(w, d, *, bn=4096, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
@@ -131,11 +150,19 @@ def resolve_backend(state: LutqState, backend: str = "auto", *,
       * packed uint8 assignments -> ``packed4`` (the packed kernel reads
         them in place), except transposed use, where the row-pair layout
         is along the wrong axis -> ``decode``;
+      * pow2-*encoded* dictionaries (``d.dtype == int8``: the sign+
+        exponent plane ``serve_view`` emits for ``backend="pow2"``
+        rules) -> ``pow2`` when the shift-add kernel applies (serve
+        form, 2-D int8 assignments, K <= 256), else ``decode`` — and
+        the decode path on an encoded leaf runs the *integer* oracle,
+        so it stays token-identical to the kernel;
       * int8 assignments, K <= 256 -> ``fused``.
 
     Explicit requests degrade down the same ladder
-    (packed4 -> fused -> decode) instead of erroring, so a policy can
-    pin ``backend="packed4"`` on rules whose leaves may not all pack.
+    (pow2 -> fused -> decode for float dictionaries, since the shift
+    trick needs the encoded plane; packed4 -> fused -> decode) instead
+    of erroring, so a policy can pin ``backend="packed4"`` on rules
+    whose leaves may not all pack.
 
     ``sliced=True`` resolves the *per-slice* view of a stacked leaf —
     what the kernels see after lax.scan slices a layer stack or
@@ -153,6 +180,10 @@ def resolve_backend(state: LutqState, backend: str = "auto", *,
     if backend == "decode":
         return "decode"
     K = state.d.shape[-1]
+    if state.d.dtype == jnp.int8:  # pow2 sign+exponent plane
+        if state.a.dtype == jnp.uint8 or K > 256:
+            return "decode"
+        return "pow2"
     if state.a.dtype == jnp.uint8:  # serve-packed 4-bit pairs (pack4_kin)
         if transpose_rhs or K > 16:
             return "decode"
@@ -185,6 +216,80 @@ def _tuned_tile(be: str, M: int, N: int, Kin: int, K: int, dtype,
     key = make_key(KERNEL_OF_BACKEND[be], M, N, Kin, K, dtype, be,
                    platform_key(interpret))
     return _TUNING_CACHE.get(key) or DEFAULT_TILE
+
+
+# ---------------------------------------------------------------------------
+# pow2 shift-add path (multiplier-less serving)
+# ---------------------------------------------------------------------------
+
+def _pow2_act_quant(x2, act, axis_name=None):
+    """int8-quantize activations for the shift-add path.
+
+    ``act`` is the leaf's frozen calibration pair ``[scale, qmax]``
+    (``LutqState.act``, trailing shape (2,)) or None for dynamic
+    per-call scaling (``stop_grad(max|x|) / 127``). Returns
+    (xq int8, scale f32 scalar). Under K-sharding pass ``axis_name`` so
+    the dynamic amax is a global ``pmax`` — max is exact, so the sharded
+    quantization is bit-identical to the unsharded one.
+    """
+    xf = x2.astype(jnp.float32)
+    if act is not None:
+        qmax = jnp.minimum(act[..., 1].astype(jnp.float32), 127.0)
+        s = act[..., 0].astype(jnp.float32)
+    else:
+        qmax = jnp.float32(127.0)
+        amax = jnp.max(jnp.abs(xf))
+        if axis_name is not None:
+            amax = jax.lax.pmax(amax, axis_name)
+        s = jax.lax.stop_gradient(amax) / qmax
+    s = jnp.where(s > 0, s, 1.0)
+    xq = jnp.clip(jnp.round(xf / s), -qmax, qmax).astype(jnp.int8)
+    return xq, s
+
+
+def _pow2_dot_acc(x2, code, a, act, *, transpose_rhs=False, axis_name=None,
+                  use_kernel=True, bm=None, bn=None, bk=None, strategy=None,
+                  interpret=None):
+    """(int32 accumulator (M, N), f32 epilogue scale) of the pow2 path.
+
+    Shared by the ``pow2`` Pallas backend, the integer decode oracle
+    (``use_kernel=False``) and the shard_map local function — all three
+    run the same quantize / shifted-dict / int32-accumulate algebra, so
+    results are bit-identical (int32 accumulation is exact under any
+    tiling or psum order; the fp epilogue multiplies identical values).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if transpose_rhs:
+        a = a.T
+    M, Kin = x2.shape
+    assert a.shape[0] == Kin, (a.shape, x2.shape)
+    N = a.shape[1]
+    K = code.shape[-1]
+    wsh = pow2_shift_weights(code)            # (K,) int32, O(K) exponent-add
+    xq, s = _pow2_act_quant(x2, act, axis_name)
+    scale = s * pow2_shift_scale(code)        # the single fp multiply factor
+    if not use_kernel:
+        return lutq_shift_ref(xq, a, wsh), scale
+    tile = _tuned_tile("pow2", M, N, Kin, K, jnp.int8, interpret)
+    bm = tile.bm if bm is None else bm
+    bn = tile.bn if bn is None else bn
+    bk = tile.bk if bk is None else bk
+    strategy = tile.strategy if strategy is None else strategy
+    base_m = 1 if interpret else 8
+    base_l = 1 if interpret else 128
+    tm, Mp = _tile(M, bm, base_m)
+    tn, Np = _tile(N, bn, base_l)
+    tk, Kp = _tile(Kin, bk, base_l)
+    if Mp != M or Kp != Kin:
+        xq = jnp.pad(xq, ((0, Mp - M), (0, Kp - Kin)))
+    if Kp != Kin or Np != N:
+        a = jnp.pad(a, ((0, Kp - Kin), (0, Np - N)))
+    if not interpret and K % base_l:
+        # padded dictionary entries are never indexed (assignments < K)
+        wsh = jnp.pad(wsh, (0, _round_up(K, base_l) - K))
+    acc = lutq_shift(xq, a, wsh, bm=tm, bn=tn, bk=tk, strategy=strategy,
+                     interpret=interpret)
+    return acc[:M, :N], scale
 
 
 def lutq_dot(
@@ -227,6 +332,18 @@ def lutq_dot(
 
     if be == "decode":
         a = state.a
+        if (state.d.dtype == jnp.int8 and state.w is None
+                and state.d.ndim == 1 and a.ndim == 2
+                and a.dtype != jnp.uint8):
+            # encoded pow2 leaf: run the *integer* decode oracle so the
+            # decode backend stays token-identical to the shift-add kernel
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, x.shape[-1])
+            acc, scale = _pow2_dot_acc(x2, state.d, a, state.act,
+                                       transpose_rhs=transpose_rhs,
+                                       use_kernel=False)
+            y = acc.astype(jnp.float32) * scale
+            return y.reshape(*lead, y.shape[-1]).astype(out_dtype)
         if a.dtype == jnp.uint8:
             a = unpack4_kin(a)
         if state.w is not None:
@@ -247,7 +364,14 @@ def lutq_dot(
     base_m = 1 if interpret else 8
     base_l = 1 if interpret else 128
 
-    if be == "fused":
+    if be == "pow2":
+        acc, scale = _pow2_dot_acc(x2, d, state.a, state.act,
+                                   transpose_rhs=transpose_rhs,
+                                   bm=bm, bn=bn, bk=bk, strategy=strategy,
+                                   interpret=interpret)
+        y = acc.astype(jnp.float32) * scale
+        N = y.shape[-1]
+    elif be == "fused":
         a = state.a.T if transpose_rhs else state.a  # (Kin, N) int8
         assert a.shape[0] == Kin, (a.shape, x.shape)
         N = a.shape[1]
@@ -369,23 +493,53 @@ def lutq_dot_spmd(
     out_spec = P(*xparts[:-1], n_entry)
     d_spec = P(stack_entry, None) if nstack else P()
 
-    def local(x_l, d_l, a_l):
-        st = LutqState(w=None, d=d_l, a=a_l)
+    def local(x_l, d_l, a_l, *act_rest):
+        act_l = act_rest[0] if act_rest else None
+        if (d_l.dtype == jnp.int8 and a_l.dtype == jnp.int8
+                and k_entry is not None):
+            # encoded pow2 under K-sharding: psum the *int32* partial
+            # accumulators (exact) and pmax the dynamic act amax inside
+            # _pow2_act_quant, so the sharded result is bit-identical to
+            # one device — unlike the f32 psum below
+            use_kernel = backend != "decode"
+
+            def parts(xe, de, ae, ce):
+                x2 = xe.reshape(-1, xe.shape[-1])
+                acc, scale = _pow2_dot_acc(
+                    x2, de, ae, ce, transpose_rhs=transpose_rhs,
+                    axis_name=k_entry, use_kernel=use_kernel)
+                return acc.reshape(*xe.shape[:-1], acc.shape[-1]), scale
+
+            if nstack:
+                acc, scale = jax.vmap(parts)(x_l, d_l, a_l, act_l)
+                scale = scale.reshape(scale.shape + (1,) * (acc.ndim - 1))
+            else:
+                acc, scale = parts(x_l, d_l, a_l, act_l)
+            acc = jax.lax.psum(acc, k_entry)
+            return (acc.astype(jnp.float32) * scale).astype(
+                out_dtype or x_l.dtype)
         if nstack:
-            y = jax.vmap(lambda xe, de, ae: lutq_dot(
-                xe, LutqState(w=None, d=de, a=ae), backend=backend,
-                out_dtype=out_dtype))(x_l, d_l, a_l)
+            y = jax.vmap(lambda xe, de, ae, ce: lutq_dot(
+                xe, LutqState(w=None, d=de, a=ae, act=ce), backend=backend,
+                out_dtype=out_dtype))(x_l, d_l, a_l, act_l)
         else:
-            y = lutq_dot(x_l, st, backend=backend,
+            y = lutq_dot(x_l, LutqState(w=None, d=d_l, a=a_l, act=act_l),
+                         backend=backend,
                          transpose_rhs=transpose_rhs, out_dtype=out_dtype)
         if k_entry is not None:
             y = jax.lax.psum(y, k_entry)
         return y
 
+    operands = [x, state.d, state.a]
+    in_specs = [P(*xparts), d_spec, P(*aparts)]
+    if state.act is not None:
+        # act [scale, qmax] pairs are tiny and replicated across the
+        # sharded matmul axes, like the dictionary
+        operands.append(state.act)
+        in_specs.append(P(stack_entry, None) if nstack else P(None))
     return shard_map(local, mesh=mesh,
-                     in_specs=(P(*xparts), d_spec, P(*aparts)),
-                     out_specs=out_spec, check_rep=False)(
-                         x, state.d, state.a)
+                     in_specs=tuple(in_specs),
+                     out_specs=out_spec, check_rep=False)(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -430,6 +584,10 @@ class SpmdLutqState:
     @property
     def sid(self):
         return self.state.sid
+
+    @property
+    def act(self):
+        return self.state.act
 
     def tree_flatten(self):
         return (self.state,), (self.mesh, self.a_spec)

@@ -56,6 +56,60 @@ def lutq_gemv_packed_ref(x: jax.Array, packed: jax.Array, d: jax.Array) -> jax.A
     return (x @ w).astype(jnp.float32)
 
 
+def pow2_shift_weights(code: jax.Array) -> jax.Array:
+    """Shifted-integer dictionary for the shift-add path.
+
+    ``code`` is an int8 sign+exponent plane (``core.lutq.pow2_encode``)
+    of shape (..., K). Returns int32 ``sign * (1 << (|code| - minm))``
+    per entry (0 stays 0), where ``minm`` is the smallest nonzero
+    magnitude over the last axis — i.e. every dictionary entry becomes
+    an integer left-shift relative to the smallest exponent. The
+    matching epilogue scale is ``2^(minm - 1 + POW2_MIN_EXP)``
+    (:func:`pow2_shift_scale`). O(K) work: this is where the
+    "exponent-add / bit-shift" of the LUT happens — the kernel then only
+    streams int8 assignments and integer-accumulates.
+    """
+    mag = jnp.abs(code.astype(jnp.int32))
+    big = jnp.where(mag > 0, mag, jnp.iinfo(jnp.int32).max)
+    minm = jnp.where(jnp.any(mag > 0, axis=-1, keepdims=True),
+                     jnp.min(big, axis=-1, keepdims=True), 1)
+    shift = jnp.where(mag > 0, mag - minm, 0)
+    return jnp.sign(code.astype(jnp.int32)) * (1 << shift)
+
+
+def pow2_shift_scale(code: jax.Array) -> jax.Array:
+    """f32 epilogue scale matching :func:`pow2_shift_weights`.
+
+    ``scale = 2^(minm - 1 + POW2_MIN_EXP)`` per stack slice (shape
+    ``code.shape[:-1]``) — the single fp multiply of the whole matmul,
+    applied at O(M·N) to the int32 accumulator.
+    """
+    from repro.core.lutq import POW2_MIN_EXP
+
+    mag = jnp.abs(code.astype(jnp.int32))
+    big = jnp.where(mag > 0, mag, jnp.iinfo(jnp.int32).max)
+    minm = jnp.where(jnp.any(mag > 0, axis=-1),
+                     jnp.min(big, axis=-1), 1)
+    return jnp.exp2((minm - 1 + POW2_MIN_EXP).astype(jnp.float32))
+
+
+def lutq_shift_ref(xq: jax.Array, a: jax.Array, wsh: jax.Array) -> jax.Array:
+    """Integer decode-oracle for the shift-add kernel.
+
+    xq: (M, Kin) int8 quantized activations; a: (Kin, N) int8
+    assignments; wsh: (K,) int32 shifted-integer dictionary
+    (:func:`pow2_shift_weights`). Returns the exact int32 accumulator
+    ``xq @ wsh[a]`` — integer arithmetic, so bit-identical under any
+    tiling/sharding order. The caller applies
+    ``acc * (act_scale * pow2_shift_scale(code))`` as the fp epilogue.
+    """
+    w = jnp.take(wsh, a.astype(jnp.int32), axis=0)
+    return jax.lax.dot_general(
+        xq.astype(jnp.int32), w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
 def kmeans_stats_ref(w: jax.Array, d: jax.Array):
     """One assignment pass over flat w vs sorted d.
 

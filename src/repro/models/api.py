@@ -104,8 +104,32 @@ def quantize(params, cfg: ModelConfig, axes=None):
     return quantize_tree(params, policy, axes=axes)
 
 
+def calibrate(params, cfg: ModelConfig, batch, *, lengths=None):
+    """Freeze activation scales from one short calibration batch.
+
+    Tags every quantized leaf with its path, runs a prefill forward under
+    :func:`repro.core.actquant.capture_act_scales` (per-leaf max|x| at
+    each matmul boundary, recorded via runtime callbacks), then installs
+    ``[scale, qmax]`` pairs into ``LutqState.act`` for every rule with
+    ``act_frozen=True`` and ``act_bits < 32``. The pairs persist through
+    ``serve_view`` and checkpoints; the pow2 backend uses them to
+    int8-quantize activations without a runtime max-reduction.
+    """
+    from repro.core.actquant import (
+        apply_act_scales,
+        capture_act_scales,
+        tag_act_capture,
+    )
+
+    tagged = tag_act_capture(params)
+    with capture_act_scales() as record:
+        out = prefill(tagged, cfg, batch, lengths=lengths)
+        jax.block_until_ready(out)  # callbacks must land before we read
+    return apply_act_scales(params, record, quant=resolved_policy(cfg))
+
+
 def serve_state(key, cfg: ModelConfig, *, pack4: bool = False, mesh=None,
-                with_manifest: bool = False):
+                with_manifest: bool = False, calib_batch=None):
     """One-call deployment state: init -> quantize -> serve_view.
 
     Returns ``(serve_params, axes)`` (plus the backend manifest with
@@ -114,11 +138,17 @@ def serve_state(key, cfg: ModelConfig, *, pack4: bool = False, mesh=None,
     already placed on its serving NamedShardings (indices partitioned
     on the model axis, dictionaries replicated; see docs/sharding.md),
     ready for ``generate(..., mesh=)`` / ``Engine(..., mesh=)``.
+
+    ``calib_batch``: optional prefill-shaped batch run through
+    :func:`calibrate` before the serve view, freezing activation scales
+    for ``act_frozen`` rules (the ``serving_pow2`` preset).
     """
     from repro.core.policy import serve_view
 
     params, axes = init(key, cfg)
     qparams = quantize(params, cfg, axes)
+    if calib_batch is not None:
+        qparams = calibrate(qparams, cfg, calib_batch)
     out = serve_view(qparams, pack4=pack4, policy=resolved_policy(cfg),
                      with_manifest=with_manifest, mesh=mesh, axes=axes)
     if with_manifest:

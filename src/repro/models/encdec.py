@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.lm import (attn_decode, attn_forward, attn_init, mlp_apply,
-                             mlp_init, _aq, _qkv)
+                             mlp_init, _qkv)
 from repro.nn.attention import (decode_attention, flash_attention,
                                 gather_pages, scatter_token_pages)
 from repro.nn.linear import embedding_apply, embedding_init, embedding_logits, linear_apply, linear_init
@@ -37,10 +37,10 @@ def cross_kv(p, cfg: ModelConfig, memory):
     B, Sm, _ = memory.shape
     dh = cfg.resolved_head_dim
     kb = cfg.kernel_backend
-    k = linear_apply(p["k"], _aq(memory, cfg), backend=kb).reshape(
-        B, Sm, cfg.n_kv_heads, dh)
-    v = linear_apply(p["v"], _aq(memory, cfg), backend=kb).reshape(
-        B, Sm, cfg.n_kv_heads, dh)
+    k = linear_apply(p["k"], memory, backend=kb,
+                     act_bits=cfg.act_bits).reshape(B, Sm, cfg.n_kv_heads, dh)
+    v = linear_apply(p["v"], memory, backend=kb,
+                     act_bits=cfg.act_bits).reshape(B, Sm, cfg.n_kv_heads, dh)
     return k, v
 
 
@@ -50,8 +50,8 @@ def cross_attn_apply(p, cfg: ModelConfig, x, k, v, *, src_len=None):
     attend the zero padding."""
     B, S, _ = x.shape
     dh = cfg.resolved_head_dim
-    q = linear_apply(p["q"], _aq(x, cfg),
-                     backend=cfg.kernel_backend).reshape(B, S, cfg.n_heads, dh)
+    q = linear_apply(p["q"], x, backend=cfg.kernel_backend,
+                     act_bits=cfg.act_bits).reshape(B, S, cfg.n_heads, dh)
     if S == 1:
         if src_len is None:
             src_len = jnp.full((B,), k.shape[1], jnp.int32)
@@ -59,8 +59,8 @@ def cross_attn_apply(p, cfg: ModelConfig, x, k, v, *, src_len=None):
     else:
         o = flash_attention(q, k, v, causal=False,
                             q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
-    return linear_apply(p["o"], _aq(o.reshape(B, S, -1), cfg),
-                        backend=cfg.kernel_backend)
+    return linear_apply(p["o"], o.reshape(B, S, -1),
+                        backend=cfg.kernel_backend, act_bits=cfg.act_bits)
 
 
 def _enc_layer_init(key, cfg: ModelConfig):
@@ -278,8 +278,8 @@ def encdec_paged_decode_step(params, cfg: ModelConfig, token, cache):
         kc = gather_pages(new_pool["k"], block)
         vc = gather_pages(new_pool["v"], block)
         o = decode_attention(q, kc, vc, idx + 1)
-        a = linear_apply(lp["attn"]["o"], _aq(o.reshape(B, 1, -1), cfg),
-                         backend=cfg.kernel_backend)
+        a = linear_apply(lp["attn"]["o"], o.reshape(B, 1, -1),
+                         backend=cfg.kernel_backend, act_bits=cfg.act_bits)
         h = h + a
         h = h + cross_attn_apply(lp["xattn"], cfg, rmsnorm_apply(lp["ln_x"], h),
                                  xk, xv, src_len=src_len)

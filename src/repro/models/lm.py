@@ -19,7 +19,6 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.actquant import fake_quant
 from repro.models.config import ModelConfig
 from repro.nn.attention import (
     decode_attention,
@@ -41,8 +40,12 @@ from repro.nn.rotary import apply_rope
 from repro.nn.tree import rng_stream
 
 
-def _aq(x, cfg: ModelConfig):
-    return fake_quant(x, cfg.act_bits) if cfg.act_bits < 32 else x
+# Activation quantization moved into the layer contract: model code
+# passes ``act_bits=cfg.act_bits`` to linear/moe/conv applies and the
+# kernel boundary (nn.linear._quant_act) picks dynamic fake-quant,
+# frozen calibrated scales, or the pow2 backends' internal int8 path
+# per leaf. Bit-identical to the old hand-placed ``_aq`` calls for
+# dynamic scales (fake_quant is pure).
 
 
 # ---------------------------------------------------------------------------
@@ -70,11 +73,13 @@ def attn_init(key, cfg: ModelConfig):
 def _qkv(p, cfg: ModelConfig, x, positions):
     B, S, _ = x.shape
     dh = cfg.resolved_head_dim
-    x = _aq(x, cfg)
-    kb = cfg.kernel_backend
-    q = linear_apply(p["q"], x, backend=kb).reshape(B, S, cfg.n_heads, dh)
-    k = linear_apply(p["k"], x, backend=kb).reshape(B, S, cfg.n_kv_heads, dh)
-    v = linear_apply(p["v"], x, backend=kb).reshape(B, S, cfg.n_kv_heads, dh)
+    kb, ab = cfg.kernel_backend, cfg.act_bits
+    q = linear_apply(p["q"], x, backend=kb,
+                     act_bits=ab).reshape(B, S, cfg.n_heads, dh)
+    k = linear_apply(p["k"], x, backend=kb,
+                     act_bits=ab).reshape(B, S, cfg.n_kv_heads, dh)
+    v = linear_apply(p["v"], x, backend=kb,
+                     act_bits=ab).reshape(B, S, cfg.n_kv_heads, dh)
     if cfg.use_qk_norm:
         q = rmsnorm_apply(p["q_norm"], q)
         k = rmsnorm_apply(p["k_norm"], k)
@@ -90,8 +95,8 @@ def attn_forward(p, cfg: ModelConfig, x, positions, *, prefix=None):
     o = flash_attention(
         q, k, v, causal=True, window=cfg.window, prefix=prefix,
         q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
-    out = linear_apply(p["o"], _aq(o.reshape(B, S, -1), cfg),
-                       backend=cfg.kernel_backend)
+    out = linear_apply(p["o"], o.reshape(B, S, -1),
+                       backend=cfg.kernel_backend, act_bits=cfg.act_bits)
     return out, {"k": k, "v": v}
 
 
@@ -139,8 +144,8 @@ def attn_decode(p, cfg: ModelConfig, x, cache, cache_len):
         o = decode_attention(q, kc, vc, filled)  # all filled ring slots live
     else:
         o = decode_attention(q, kc, vc, idx + 1, window=cfg.window)
-    out = linear_apply(p["o"], _aq(o.reshape(B, 1, -1), cfg),
-                       backend=cfg.kernel_backend)
+    out = linear_apply(p["o"], o.reshape(B, 1, -1),
+                       backend=cfg.kernel_backend, act_bits=cfg.act_bits)
     return out, new_cache
 
 
@@ -159,11 +164,10 @@ def mlp_init(key, cfg: ModelConfig, d_ff=None):
 
 
 def mlp_apply(p, cfg: ModelConfig, x):
-    x = _aq(x, cfg)
-    kb = cfg.kernel_backend
-    h = (linear_apply(p["wi"], x, backend=kb)
-         * jax.nn.silu(linear_apply(p["wg"], x, backend=kb)))
-    return linear_apply(p["wo"], _aq(h, cfg), backend=kb)
+    kb, ab = cfg.kernel_backend, cfg.act_bits
+    h = (linear_apply(p["wi"], x, backend=kb, act_bits=ab)
+         * jax.nn.silu(linear_apply(p["wg"], x, backend=kb, act_bits=ab)))
+    return linear_apply(p["wo"], h, backend=kb, act_bits=ab)
 
 
 def layer_init(key, cfg: ModelConfig, *, moe: bool):
@@ -194,7 +198,7 @@ def layer_forward(p, cfg: ModelConfig, h, positions, *, prefix=None):
         a_out, cache = mla_forward(
             p["attn"], a_in, positions, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
             qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head,
-            backend=cfg.kernel_backend)
+            backend=cfg.kernel_backend, act_bits=cfg.act_bits)
     else:
         a_out, cache = attn_forward(p["attn"], cfg, a_in, positions, prefix=prefix)
     h = h + a_out
@@ -202,7 +206,8 @@ def layer_forward(p, cfg: ModelConfig, h, positions, *, prefix=None):
     if "moe" in p:
         m_out, aux = moe_apply(p["moe"], m_in, top_k=cfg.top_k,
                                capacity_factor=cfg.capacity_factor,
-                               backend=cfg.kernel_backend)
+                               backend=cfg.kernel_backend,
+                               act_bits=cfg.act_bits)
     else:
         m_out, aux = mlp_apply(p["mlp"], cfg, m_in), jnp.zeros((), jnp.float32)
     return h + m_out, cache, aux
@@ -214,7 +219,8 @@ def layer_decode(p, cfg: ModelConfig, h, cache, cache_len):
         a_out, new_cache = mla_decode(
             p["attn"], a_in, cache, cache_len, n_heads=cfg.n_heads,
             kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
-            v_head=cfg.v_head, backend=cfg.kernel_backend)
+            v_head=cfg.v_head, backend=cfg.kernel_backend,
+            act_bits=cfg.act_bits)
     else:
         a_out, new_cache = attn_decode(p["attn"], cfg, a_in, cache, cache_len)
     h = h + a_out
@@ -222,7 +228,8 @@ def layer_decode(p, cfg: ModelConfig, h, cache, cache_len):
     if "moe" in p:
         m_out, _ = moe_apply(p["moe"], m_in, top_k=cfg.top_k,
                              capacity_factor=max(cfg.capacity_factor, 2.0),
-                             backend=cfg.kernel_backend)
+                             backend=cfg.kernel_backend,
+                             act_bits=cfg.act_bits)
     else:
         m_out = mlp_apply(p["mlp"], cfg, m_in)
     return h + m_out, new_cache
@@ -552,8 +559,8 @@ def paged_attn_decode(p, cfg: ModelConfig, x, pool, block, cache_len):
         vc = vc.astype(jnp.bfloat16) * gather_pages(
             new_pool["v_scale"], block)[..., None]
     o = decode_attention(q, kc, vc, idx + 1, window=cfg.window)
-    out = linear_apply(p["o"], _aq(o.reshape(B, 1, -1), cfg),
-                       backend=cfg.kernel_backend)
+    out = linear_apply(p["o"], o.reshape(B, 1, -1),
+                       backend=cfg.kernel_backend, act_bits=cfg.act_bits)
     return out, new_pool
 
 
@@ -607,9 +614,9 @@ def lm_paged_prefill_chunk(params, cfg: ModelConfig, tokens, ws, start,
         o = flash_attention(q, wk, wv, causal=True, window=cfg.window,
                             q_offset=start, q_block=cfg.attn_q_block,
                             kv_block=cfg.attn_kv_block)
-        a_out = linear_apply(layer_p["attn"]["o"],
-                             _aq(o.reshape(1, C, -1), cfg),
-                             backend=cfg.kernel_backend)
+        a_out = linear_apply(layer_p["attn"]["o"], o.reshape(1, C, -1),
+                             backend=cfg.kernel_backend,
+                             act_bits=cfg.act_bits)
         h = h + a_out
         m_in = rmsnorm_apply(layer_p["ln2"], h)
         return h + mlp_apply(layer_p["mlp"], cfg, m_in), (wk, wv)

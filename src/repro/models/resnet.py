@@ -15,7 +15,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.actquant import relu_fake_quant
-from repro.core.mlbn import BNParams, BNStats, batch_norm, init_bn
+from repro.core.mlbn import (
+    BNParams,
+    BNStats,
+    apply_scale_offset_shift,
+    batch_norm,
+    inference_scale_offset,
+    init_bn,
+)
 from repro.models.config import ModelConfig  # noqa: F401  (API parity)
 from repro.nn.conv import conv_apply, conv_init
 from repro.nn.tree import rng_stream
@@ -140,6 +147,13 @@ def resnet20_apply(params, stats, x, *, widths=(16, 32, 64), blocks=2,
     new_stats = {}
 
     def bn(p, s_key, h):
+        if multiplier_less and not training:
+            # serve path: fold BN to (a, b) and apply the exact-pow2 scale
+            # as negate/shift/add — no multiplies (Appendix A, literally).
+            a, b = inference_scale_offset(p["p"], stats[s_key],
+                                          multiplier_less=True)
+            new_stats[s_key] = stats[s_key]
+            return apply_scale_offset_shift(h, a, b)
         y, ns = batch_norm(h, p["p"], stats[s_key], training=training,
                            multiplier_less=multiplier_less)
         new_stats[s_key] = ns

@@ -43,11 +43,11 @@ def init_rwkv(key, cfg: ModelConfig):
 def _layer(lp, cfg, h, state):
     t_out, t_state = rwkv6_time_mix(lp["mix"], rmsnorm_apply(lp["ln1"], h), state,
                                     head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
-                                    backend=cfg.kernel_backend)
+                                    backend=cfg.kernel_backend, act_bits=cfg.act_bits)
     h = h + t_out
     c_state = None if state is None else {"shift_c": state["shift_c"]}
     c_out, c_state = rwkv6_channel_mix(lp["mix"], rmsnorm_apply(lp["ln2"], h), c_state,
-                                       backend=cfg.kernel_backend)
+                                       backend=cfg.kernel_backend, act_bits=cfg.act_bits)
     h = h + c_out
     return h, (t_state, c_state)
 

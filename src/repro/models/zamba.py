@@ -80,7 +80,7 @@ def zamba_forward(params, cfg: ModelConfig, tokens):
         out, _ = mamba2_forward(mp["mamba"], rmsnorm_apply(mp["ln"], h),
                                 d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
                                 head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
-                                backend=cfg.kernel_backend)
+                                backend=cfg.kernel_backend, act_bits=cfg.act_bits)
         return h + out, None
 
     def superblock(h, sp_params):
@@ -141,7 +141,7 @@ def zamba_prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
         out, st = mamba2_forward(mp["mamba"], rmsnorm_apply(mp["ln"], h),
                                  d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
                                  head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
-                                 backend=cfg.kernel_backend)
+                                 backend=cfg.kernel_backend, act_bits=cfg.act_bits)
         return h + out, st
 
     def superblock(h, sp_params):
@@ -173,7 +173,7 @@ def zamba_decode_step(params, cfg: ModelConfig, token, cache):
         out, st = mamba2_decode(mp["mamba"], rmsnorm_apply(mp["ln"], h), mstate,
                                 d_inner=cfg.resolved_d_inner, n_state=cfg.ssm_state,
                                 head_dim=cfg.ssm_head_dim,
-                                backend=cfg.kernel_backend)
+                                backend=cfg.kernel_backend, act_bits=cfg.act_bits)
         return h + out, st
 
     def superblock(h, xs):

@@ -6,7 +6,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.nn.linear import materialize
+from repro.nn.linear import _quant_act, materialize
 
 
 def conv_init(key, kh: int, kw: int, cin: int, cout: int, *, dtype=jnp.float32):
@@ -15,7 +15,12 @@ def conv_init(key, kh: int, kw: int, cin: int, cout: int, *, dtype=jnp.float32):
     return {"kernel": w.astype(dtype)}, {"kernel": (None, None, "embed", "mlp")}
 
 
-def conv_apply(params, x: jax.Array, *, stride: int = 1, padding: str = "SAME") -> jax.Array:
+def conv_apply(params, x: jax.Array, *, stride: int = 1, padding: str = "SAME",
+               act_bits: int = 32) -> jax.Array:
+    """NHWC conv with the activation-quant regime at the kernel boundary
+    (``act_bits=32`` keeps the input untouched; callers that pre-quantize
+    — e.g. resnet's unsigned post-ReLU variant — pass the default)."""
+    x = _quant_act(x, params["kernel"], act_bits)
     k = materialize(params["kernel"], x.dtype)
     return jax.lax.conv_general_dilated(
         x, k, window_strides=(stride, stride), padding=padding,

@@ -17,6 +17,12 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.actquant import (
+    TaggedLutqState,
+    fake_quant,
+    fake_quant_frozen,
+    record_amax,
+)
 from repro.core.lutq import LutqState, decode_any, quantize_ste_any
 from repro.kernels.ops import SpmdLutqState, lutq_dot, lutq_dot_sharded
 from repro.kernels.ref import unpack4_kin
@@ -30,8 +36,8 @@ def materialize(kernel, dtype=None) -> jax.Array:
     Gather-style consumers only — matmuls go through :func:`dot_kernel`
     / :func:`repro.kernels.ops.lutq_dot` instead.
     """
-    if isinstance(kernel, SpmdLutqState):  # annotation is matmul-only
-        kernel = kernel.state
+    if isinstance(kernel, (SpmdLutqState, TaggedLutqState)):
+        kernel = kernel.state  # annotation/calibration wrappers
     if isinstance(kernel, LutqState):
         a = kernel.a
         if a.dtype == jnp.uint8:  # packed 4-bit pairs (serve_view pack4)
@@ -45,8 +51,33 @@ def materialize(kernel, dtype=None) -> jax.Array:
     return k.astype(dtype) if dtype is not None and k.dtype != dtype else k
 
 
+def _quant_act(x: jax.Array, kernel, act_bits: int) -> jax.Array:
+    """Activation quantization at the matmul boundary (the regime).
+
+    * pow2-*encoded* leaves (``d.dtype == int8``) quantize internally in
+      the shift-add backend (real int8, frozen or dynamic scale) — pass
+      ``x`` through untouched so activations are not double-quantized;
+    * leaves carrying a frozen calibration pair use it
+      (:func:`fake_quant_frozen`), matching the pow2 path's clip;
+    * otherwise ``act_bits < 32`` applies the paper's dynamic max-abs
+      fake-quant — bit-identical to the historical hand-placed
+      ``fake_quant`` calls inside model code (fake_quant is pure, so
+      quantize-at-the-boundary == quantize-before-the-call).
+    """
+    st = kernel.state if isinstance(
+        kernel, (SpmdLutqState, TaggedLutqState)) else kernel
+    if isinstance(st, LutqState):
+        if st.d.dtype == jnp.int8:
+            return x
+        if st.act is not None:
+            return fake_quant_frozen(x, st.act)
+    if act_bits < 32:
+        return fake_quant(x, act_bits)
+    return x
+
+
 def dot_kernel(x: jax.Array, kernel, *, dtype=None, backend: str = "auto",
-               transpose_rhs: bool = False) -> jax.Array:
+               transpose_rhs: bool = False, act_bits: int = 32) -> jax.Array:
     """``x @ kernel`` (or ``x @ kernel.T``) with LUT-Q-aware dispatch.
 
     LutqState leaves route through the backend layer (train-form keeps
@@ -55,7 +86,15 @@ def dot_kernel(x: jax.Array, kernel, *, dtype=None, backend: str = "auto",
     serving jit dispatch to the shard_map path so each device runs the
     Pallas kernel on its local index shard. Plain arrays are a plain
     matmul.
+
+    ``act_bits`` is the activation-quant regime (model configs pass
+    ``cfg.act_bits``): activations are quantized here, at the kernel
+    boundary, per the leaf's structure — see :func:`_quant_act`.
     """
+    if isinstance(kernel, TaggedLutqState):  # calibration capture
+        record_amax(kernel.tag, x)
+        kernel = kernel.state
+    x = _quant_act(x, kernel, act_bits)
     if isinstance(kernel, SpmdLutqState):
         return lutq_dot_sharded(x, kernel, backend=backend,
                                 transpose_rhs=transpose_rhs,
@@ -89,8 +128,9 @@ def linear_init(
 
 
 def linear_apply(params, x: jax.Array, *, dtype=None,
-                 backend: str = "auto") -> jax.Array:
-    y = dot_kernel(x, params["kernel"], dtype=dtype, backend=backend)
+                 backend: str = "auto", act_bits: int = 32) -> jax.Array:
+    y = dot_kernel(x, params["kernel"], dtype=dtype, backend=backend,
+                   act_bits=act_bits)
     if "bias" in params:
         y = y + params["bias"].astype(y.dtype)
     return y
@@ -113,7 +153,9 @@ def embedding_apply(params, ids: jax.Array, *, dtype=None) -> jax.Array:
     return jnp.take(t, ids, axis=0)
 
 
-def embedding_logits(params, x: jax.Array, *, backend: str = "auto") -> jax.Array:
+def embedding_logits(params, x: jax.Array, *, backend: str = "auto",
+                     act_bits: int = 32) -> jax.Array:
     """Tied-softmax readout: x @ table.T (fused kernels via transposed
     assignments when the table is a serve-form LutqState)."""
-    return dot_kernel(x, params["table"], backend=backend, transpose_rhs=True)
+    return dot_kernel(x, params["table"], backend=backend,
+                      transpose_rhs=True, act_bits=act_bits)

@@ -150,11 +150,11 @@ def mamba2_forward(
     n_state: int = 64,
     head_dim: int = 64,
     chunk: int = 128,
-    backend: str = "auto",
+    backend: str = "auto", act_bits: int = 32,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     B, S, D = u.shape
     H = d_inner // head_dim
-    zxbcdt = linear_apply(params["in_proj"], u, backend=backend)
+    zxbcdt = linear_apply(params["in_proj"], u, backend=backend, act_bits=act_bits)
     z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n_state], axis=-1)
     xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"])
     x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
@@ -163,7 +163,7 @@ def mamba2_forward(
     y, hT = ssd_chunked(x.reshape(B, S, H, head_dim), dt, A, Bm, Cm, chunk=chunk)
     y = y + x.reshape(B, S, H, head_dim) * params["D"][None, None, :, None]
     y = (y.reshape(B, S, d_inner) * jax.nn.silu(z)).astype(u.dtype)
-    out = linear_apply(params["out_proj"], y, backend=backend)
+    out = linear_apply(params["out_proj"], y, backend=backend, act_bits=act_bits)
     return out, {"ssm": hT, "conv": conv_state}
 
 
@@ -175,11 +175,11 @@ def mamba2_decode(
     d_inner: int,
     n_state: int = 64,
     head_dim: int = 64,
-    backend: str = "auto",
+    backend: str = "auto", act_bits: int = 32,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     B, _, D = u.shape
     H = d_inner // head_dim
-    zxbcdt = linear_apply(params["in_proj"], u, backend=backend)
+    zxbcdt = linear_apply(params["in_proj"], u, backend=backend, act_bits=act_bits)
     z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n_state], axis=-1)
     xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], state["conv"])
     x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
@@ -191,5 +191,5 @@ def mamba2_decode(
         "bh,bn,bhp->bhnp", dt[:, 0], Bm[:, 0], xh)
     y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], h) + xh * params["D"][None, :, None]
     y = (y.reshape(B, 1, d_inner) * jax.nn.silu(z)).astype(u.dtype)
-    out = linear_apply(params["out_proj"], y, backend=backend)
+    out = linear_apply(params["out_proj"], y, backend=backend, act_bits=act_bits)
     return out, {"ssm": h, "conv": conv_state}

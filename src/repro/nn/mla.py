@@ -67,9 +67,11 @@ def mla_init(
     return params, axes
 
 
-def _split_q(params, x, n_heads, qk_nope, qk_rope, backend="auto"):
+def _split_q(params, x, n_heads, qk_nope, qk_rope, backend="auto",
+             act_bits=32):
     B, S, _ = x.shape
-    q = linear_apply(params["q"], x, backend=backend).reshape(
+    q = linear_apply(params["q"], x, backend=backend,
+                     act_bits=act_bits).reshape(
         B, S, n_heads, qk_nope + qk_rope)
     return q[..., :qk_nope], q[..., qk_nope:]
 
@@ -85,19 +87,24 @@ def mla_forward(
     qk_rope: int = 64,
     v_head: int = 128,
     backend: str = "auto",
+    act_bits: int = 32,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Training/prefill (expanded form). Returns (out, cache)."""
     B, S, D = x.shape
-    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope, backend)
+    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope, backend,
+                      act_bits)
     qr = apply_rope(qr, positions)
 
-    dkv = linear_apply(params["dkv"], x, backend=backend)
+    dkv = linear_apply(params["dkv"], x, backend=backend,
+                       act_bits=act_bits)
     c_kv, k_rope = dkv[..., :kv_lora], dkv[..., kv_lora:]
     k_rope = apply_rope(k_rope[..., None, :], positions)  # (B,S,1,qk_rope)
 
-    kn = linear_apply(params["uk"], c_kv, backend=backend).reshape(
+    kn = linear_apply(params["uk"], c_kv, backend=backend,
+                      act_bits=act_bits).reshape(
         B, S, n_heads, qk_nope)
-    v = linear_apply(params["uv"], c_kv, backend=backend).reshape(
+    v = linear_apply(params["uv"], c_kv, backend=backend,
+                     act_bits=act_bits).reshape(
         B, S, n_heads, v_head)
 
     # combined key = [k_nope ; k_rope broadcast to all heads], assembled
@@ -111,7 +118,7 @@ def mla_forward(
     scale = (qk_nope + qk_rope) ** -0.5
     o = flash_attention(q, k, v, causal=True, scale=scale)
     out = linear_apply(params["o"], o.reshape(B, S, n_heads * v_head),
-                       backend=backend)
+                       backend=backend, act_bits=act_bits)
     cache = {"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
     return out, cache
 
@@ -128,6 +135,7 @@ def mla_decode(
     qk_rope: int = 64,
     v_head: int = 128,
     backend: str = "auto",
+    act_bits: int = 32,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode against the latent cache (absorbed form).
 
@@ -141,10 +149,12 @@ def mla_decode(
     Skv = cache["c_kv"].shape[1]
     pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,)).reshape(B, 1)
 
-    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope, backend)
+    qn, qr = _split_q(params, x, n_heads, qk_nope, qk_rope, backend,
+                      act_bits)
     qr = apply_rope(qr, pos)  # new token at position cache_len
 
-    dkv = linear_apply(params["dkv"], x, backend=backend)
+    dkv = linear_apply(params["dkv"], x, backend=backend,
+                       act_bits=act_bits)
     c_new, kr_new = dkv[..., :kv_lora], dkv[..., kv_lora:]
     kr_new = apply_rope(kr_new[..., None, :], pos)[..., 0, :]
 
@@ -170,5 +180,5 @@ def mla_decode(
     o_lat = jnp.einsum("bhk,bkr->bhr", p.astype(x.dtype), c_kv)  # (B,H,r)
     wuv = materialize(params["uv"]["kernel"], x.dtype).reshape(kv_lora, n_heads, v_head)
     o = jnp.einsum("bhr,rhv->bhv", o_lat, wuv).reshape(B, 1, n_heads * v_head)
-    out = linear_apply(params["o"], o, backend=backend)
+    out = linear_apply(params["o"], o, backend=backend, act_bits=act_bits)
     return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -19,13 +19,15 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.actquant import TaggedLutqState, record_amax
 from repro.core.lutq import LutqState
 from repro.kernels.ops import SpmdLutqState, lutq_dot, lutq_dot_sharded
-from repro.nn.linear import dot_kernel, materialize
+from repro.nn.linear import _quant_act, dot_kernel, materialize
 from repro.nn.tree import rng_stream
 
 
-def _expert_dot(buf: jax.Array, leaf, cdt, backend: str = "auto") -> jax.Array:
+def _expert_dot(buf: jax.Array, leaf, cdt, backend: str = "auto",
+                act_bits: int = 32) -> jax.Array:
     """Batched per-expert matmul: (E, C, Din) @ leaf (E, Din, Dout).
 
     Serve-form LUT-Q experts (stacked per-expert dictionaries) vmap the
@@ -36,15 +38,19 @@ def _expert_dot(buf: jax.Array, leaf, cdt, backend: str = "auto") -> jax.Array:
     shard_map path (each device computes its local experts' kernels).
     Train form / plain arrays keep the dense einsum.
     """
+    if isinstance(leaf, TaggedLutqState):  # calibration capture
+        record_amax(leaf.tag, buf)
+        leaf = leaf.state
+    buf = _quant_act(buf, leaf, act_bits)
     if (isinstance(leaf, SpmdLutqState) and leaf.w is None
             and leaf.d.ndim == 2 and leaf.a.ndim == 3):
         return lutq_dot_sharded(buf, leaf, backend=backend, out_dtype=cdt)
     if (isinstance(leaf, LutqState) and leaf.w is None
             and leaf.d.ndim == 2 and leaf.a.ndim == 3):
         return jax.vmap(
-            lambda b, d, a: lutq_dot(b, LutqState(w=None, d=d, a=a),
-                                     backend=backend, out_dtype=cdt)
-        )(buf, leaf.d, leaf.a)
+            lambda b, d, a, c: lutq_dot(b, LutqState(w=None, d=d, a=a, act=c),
+                                        backend=backend, out_dtype=cdt)
+        )(buf, leaf.d, leaf.a, leaf.act)
     return jnp.einsum("ecd,edf->ecf", buf, materialize(leaf, cdt))
 
 
@@ -91,6 +97,7 @@ def moe_apply(
     capacity_factor: float = 1.25,
     dtype=None,
     backend: str = "auto",
+    act_bits: int = 32,
 ) -> Tuple[jax.Array, jax.Array]:
     """x: (B,S,D) -> (out, aux_loss).
 
@@ -133,9 +140,10 @@ def moe_apply(
     buf = jnp.zeros((E * C + 1, D), cdt).at[slot].add(x_rep.astype(cdt))
     buf = buf[: E * C].reshape(E, C, D)
 
-    h = (_expert_dot(buf, params["wi"], cdt, backend)
-         * jax.nn.silu(_expert_dot(buf, params["wg"], cdt, backend)))
-    out_buf = _expert_dot(h, params["wo"], cdt, backend).reshape(E * C, D)
+    h = (_expert_dot(buf, params["wi"], cdt, backend, act_bits)
+         * jax.nn.silu(_expert_dot(buf, params["wg"], cdt, backend, act_bits)))
+    out_buf = _expert_dot(h, params["wo"], cdt, backend,
+                          act_bits).reshape(E * C, D)
 
     # combine
     gathered = jnp.take(out_buf, jnp.minimum(slot, E * C - 1), axis=0)
@@ -145,9 +153,12 @@ def moe_apply(
 
     if "shared_wi" in params:
         xs = x.astype(cdt)
-        sh = (dot_kernel(xs, params["shared_wi"], backend=backend)
-              * jax.nn.silu(dot_kernel(xs, params["shared_wg"], backend=backend)))
-        out = out + dot_kernel(sh, params["shared_wo"], backend=backend).astype(x.dtype)
+        sh = (dot_kernel(xs, params["shared_wi"], backend=backend,
+                         act_bits=act_bits)
+              * jax.nn.silu(dot_kernel(xs, params["shared_wg"],
+                                       backend=backend, act_bits=act_bits)))
+        out = out + dot_kernel(sh, params["shared_wo"], backend=backend,
+                               act_bits=act_bits).astype(x.dtype)
     return out, aux
 
 

@@ -125,7 +125,7 @@ def _wkv_scan(r, k, v, w, u, s0, *, chunk: int = 64):
 
 def rwkv6_time_mix(
     params, x: jax.Array, state: Optional[Dict[str, jax.Array]],
-    *, head_dim: int = 64, chunk: int = 64, backend: str = "auto",
+    *, head_dim: int = 64, chunk: int = 64, backend: str = "auto", act_bits: int = 32,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     B, S, D = x.shape
     H = D // head_dim
@@ -138,14 +138,14 @@ def rwkv6_time_mix(
     xg = _mix(x, xs, params["mix_g"])
     xw = _mix(x, xs, params["mix_w"])
 
-    r = linear_apply(params["r"], xr, backend=backend).reshape(B, S, H, head_dim)
-    k = linear_apply(params["k"], xk, backend=backend).reshape(B, S, H, head_dim)
-    v = linear_apply(params["v"], xv, backend=backend).reshape(B, S, H, head_dim)
-    g = linear_apply(params["g"], xg, backend=backend)
+    r = linear_apply(params["r"], xr, backend=backend, act_bits=act_bits).reshape(B, S, H, head_dim)
+    k = linear_apply(params["k"], xk, backend=backend, act_bits=act_bits).reshape(B, S, H, head_dim)
+    v = linear_apply(params["v"], xv, backend=backend, act_bits=act_bits).reshape(B, S, H, head_dim)
+    g = linear_apply(params["g"], xg, backend=backend, act_bits=act_bits)
 
     xw32 = xw.astype(jnp.float32)
-    lora = dot_kernel(jnp.tanh(dot_kernel(xw32, params["w1"], backend=backend)),
-                      params["w2"], backend=backend)
+    lora = dot_kernel(jnp.tanh(dot_kernel(xw32, params["w1"], backend=backend, act_bits=act_bits)),
+                      params["w2"], backend=backend, act_bits=act_bits)
     logw = -jnp.exp(jnp.clip(params["w0"][None, None, :] + lora, -8.0, 4.0))
     w = jnp.exp(logw).reshape(B, S, H, head_dim)  # decay in (0,1)
 
@@ -159,30 +159,30 @@ def rwkv6_time_mix(
     y = y.reshape(B, S, H, head_dim)
     y = rmsnorm_apply({"scale": params["ln_x"].reshape(H, head_dim)[None, None]},
                       y).reshape(B, S, D).astype(x.dtype)
-    out = linear_apply(params["o"], y * jax.nn.silu(g), backend=backend)
+    out = linear_apply(params["o"], y * jax.nn.silu(g), backend=backend, act_bits=act_bits)
     return out, {"shift_t": new_prev, "wkv": sT}
 
 
 def rwkv6_channel_mix(
     params, x: jax.Array, state: Optional[Dict[str, jax.Array]],
-    *, backend: str = "auto",
+    *, backend: str = "auto", act_bits: int = 32,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     prev = None if state is None else state["shift_c"]
     xs, new_prev = _shift(x, prev)
     xk = _mix(x, xs, params["mix_ck"])
     xr = _mix(x, xs, params["mix_cr"])
-    k = jnp.square(jax.nn.relu(linear_apply(params["cm_k"], xk, backend=backend)))
-    out = (jax.nn.sigmoid(linear_apply(params["cm_r"], xr, backend=backend))
-           * linear_apply(params["cm_v"], k, backend=backend))
+    k = jnp.square(jax.nn.relu(linear_apply(params["cm_k"], xk, backend=backend, act_bits=act_bits)))
+    out = (jax.nn.sigmoid(linear_apply(params["cm_r"], xr, backend=backend, act_bits=act_bits))
+           * linear_apply(params["cm_v"], k, backend=backend, act_bits=act_bits))
     return out, {"shift_c": new_prev}
 
 
 def rwkv6_layer(
     params, x: jax.Array, state: Optional[Dict[str, jax.Array]] = None,
-    *, head_dim: int = 64, chunk: int = 64, backend: str = "auto",
+    *, head_dim: int = 64, chunk: int = 64, backend: str = "auto", act_bits: int = 32,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full pre-norm RWKV6 layer (time-mix + channel-mix). Norms are
     applied by the caller (model assembles ln -> tmix -> ln -> cmix)."""
     t_out, t_state = rwkv6_time_mix(params, x, state, head_dim=head_dim,
-                                    chunk=chunk, backend=backend)
+                                    chunk=chunk, backend=backend, act_bits=act_bits)
     return t_out, t_state

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batch_norm, fake_quant, inference_scale_offset, init_bn, relu_fake_quant
+from repro.core.actquant import learned_clip_fake_quant
+from repro.core.mlbn import apply_scale_offset_shift
 
 
 def _is_pow2(a, tol=1e-6):
@@ -58,6 +60,60 @@ class TestMLBN:
         a, b = inference_scale_offset(p, s2, multiplier_less=True)
         np.testing.assert_allclose(np.asarray(y_inf), np.asarray(a * x + b), rtol=1e-4, atol=1e-5)
 
+    def test_shift_add_apply_bitwise_equals_multiply(self):
+        """The serve form — ldexp exponent-add on a sign-flipped x — is
+        bit-identical to a*x+b for the exact-pow2 folded scale."""
+        p, s = init_bn(8)
+        gamma = p.gamma * jnp.linspace(0.3, 4.0, 8)
+        p = p._replace(gamma=gamma,
+                       beta=jax.random.normal(jax.random.PRNGKey(4), (8,)))
+        x = jax.random.normal(jax.random.PRNGKey(5), (32, 8)) * 2
+        _, s2 = batch_norm(x, p, s, training=True, momentum=0.0)
+        a, b = inference_scale_offset(p, s2, multiplier_less=True)
+        np.testing.assert_array_equal(
+            np.asarray(apply_scale_offset_shift(x, a, b)),
+            np.asarray(a * x + b))
+
+    def test_shift_add_zero_scale(self):
+        a = jnp.array([0.0, 2.0])
+        b = jnp.array([1.0, -1.0])
+        x = jnp.ones((3, 2))
+        np.testing.assert_array_equal(
+            np.asarray(apply_scale_offset_shift(x, a, b)),
+            np.asarray(a * x + b))
+
+    def test_resnet_serve_path_matches_trained_mlbn_forward(self):
+        """resnet20's multiplier_less inference (shift+add fold) is
+        bit-identical to the BN-module forward it replaces."""
+        from repro.core.mlbn import BNStats
+        from repro.models.resnet import init_resnet20, resnet20_apply
+        params, stats = init_resnet20(jax.random.PRNGKey(0), widths=(8, 16),
+                                      blocks=1, n_classes=4)
+        # non-trivial running stats so the fold actually does work
+        stats = jax.tree.map(lambda s: s, stats)
+        stats = {k: BNStats(v.mean + 0.3, v.var * 2.5) for k, v in stats.items()}
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+        y_fold, _ = resnet20_apply(params, stats, x, widths=(8, 16), blocks=1,
+                                   training=False, multiplier_less=True)
+        # reference: the training-form module path with multiplier_less
+        # (same pow2-rounded scale), inference stats
+        def bn_ref(p, s, h):
+            y, _ = batch_norm(h, p["p"], s, training=False,
+                              multiplier_less=True)
+            return y
+        from repro.models import resnet as resnet_mod
+        orig = apply_scale_offset_shift
+        try:
+            resnet_mod.apply_scale_offset_shift = \
+                lambda h, a, b, **kw: a.reshape((1,) * (h.ndim - 1) + (-1,)) * h \
+                + b.reshape((1,) * (h.ndim - 1) + (-1,))
+            y_mul, _ = resnet20_apply(params, stats, x, widths=(8, 16),
+                                      blocks=1, training=False,
+                                      multiplier_less=True)
+        finally:
+            resnet_mod.apply_scale_offset_shift = orig
+        np.testing.assert_array_equal(np.asarray(y_fold), np.asarray(y_mul))
+
 
 class TestActQuant:
     def test_fake_quant_levels(self):
@@ -84,3 +140,28 @@ class TestActQuant:
     def test_bits32_is_identity(self):
         x = jax.random.normal(jax.random.PRNGKey(2), (100,))
         np.testing.assert_array_equal(np.asarray(fake_quant(x, 32)), np.asarray(x))
+
+    def test_learned_clip_levels_and_range(self):
+        x = jnp.linspace(-3, 3, 1001)
+        q = learned_clip_fake_quant(x, jnp.float32(1.0), bits=4)
+        assert len(np.unique(np.asarray(q))) <= 16
+        assert float(jnp.max(jnp.abs(q))) <= 1.0 + 1e-5
+
+    def test_learned_clip_alpha_receives_gradient(self):
+        """PACT-style clip: gradient reaches alpha through the clip
+        boundary (zero inside the range, +/-1-ish at saturation)."""
+        x = jnp.array([-0.2, 0.3, 4.0, 5.0])
+
+        def loss(alpha):
+            return jnp.sum(learned_clip_fake_quant(x, alpha, bits=8))
+
+        # two elements saturate the high clip: d/dalpha of clip(x,-a,a)
+        # is +1 there, 0 inside the range -> dL/dalpha == 2
+        g = float(jax.grad(loss)(jnp.float32(1.0)))
+        np.testing.assert_allclose(g, 2.0, atol=1e-5)
+
+    def test_learned_clip_identity_gradient_inside_range(self):
+        x = jnp.linspace(-0.5, 0.5, 11)
+        g = jax.grad(lambda x: jnp.sum(
+            learned_clip_fake_quant(x, jnp.float32(1.0), bits=8)))(x)
+        np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)

@@ -275,6 +275,58 @@ class TestLutqDotSpmd:
                           backend="fused")
         assert bool(jnp.all(y == ref))
 
+    def _pow2_leaf(self, shape, act=None):
+        from repro.core.lutq import pow2_encode
+        w = jax.random.normal(jax.random.PRNGKey(0), shape)
+        st = init_state(w, QuantSpec(bits=4, constraint="pow2", min_size=1))
+        return LutqState(w=None, d=pow2_encode(st.d), a=st.a, act=act)
+
+    @pytest.mark.parametrize("use_act", [False, True])
+    def test_pow2_n_and_k_sharded_bit_exact(self, use_act):
+        """The shift-add path is bitwise under BOTH shardings: integer
+        accumulation means the K-shard psum commutes exactly (unlike the
+        fp backends, which only get allclose on the K shard)."""
+        act = jnp.array([0.03, 127.0], jnp.float32) if use_act else None
+        sv = self._pow2_leaf((32, 64), act=act)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+        ref = lutq_dot(x, sv, backend="decode")  # integer oracle
+        for a_spec in (P(None, "model"), P("model", None)):
+            y = lutq_dot_spmd(x, sv, _mesh(), a_spec=a_spec, backend="auto")
+            assert bool(jnp.all(y == ref)), (a_spec, use_act)
+
+    def test_pow2_transposed_tied_logits(self):
+        sv = self._pow2_leaf((64, 32))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+        ref = lutq_dot(x, sv, backend="decode", transpose_rhs=True)
+        y = lutq_dot_spmd(x, sv, _mesh(), a_spec=P("model", None),
+                          transpose_rhs=True, backend="auto")
+        assert bool(jnp.all(y == ref))
+
+    def test_pow2_expert_parallel_stack(self):
+        from repro.core.lutq import pow2_encode
+        E = 4
+        we = jax.random.normal(jax.random.PRNGKey(0), (E, 16, 24))
+        base = serve_view({"k": jax.vmap(lambda w: init_state(
+            w, QuantSpec(bits=4, constraint="pow2")))(we)})["k"]
+        act = jnp.broadcast_to(jnp.array([0.05, 127.0], jnp.float32),
+                               (E, 2)) + 0.0
+        sve = LutqState(w=None, d=pow2_encode(base.d), a=base.a, act=act)
+        xe = jax.random.normal(jax.random.PRNGKey(3), (E, 5, 16))
+        ref = jax.vmap(lambda xx, d, a, c: lutq_dot(
+            xx, LutqState(w=None, d=d, a=a, act=c),
+            backend="decode"))(xe, sve.d, sve.a, sve.act)
+        y = lutq_dot_spmd(xe, sve, _mesh(), a_spec=P("model", None, None),
+                          backend="auto")
+        assert bool(jnp.all(y == ref))
+        # K-sharded stack with dynamic (pmax'd) activation scales
+        sve2 = LutqState(w=None, d=sve.d, a=sve.a)
+        ref2 = jax.vmap(lambda xx, d, a: lutq_dot(
+            xx, LutqState(w=None, d=d, a=a), backend="decode"))(
+                xe, sve2.d, sve2.a)
+        y2 = lutq_dot_spmd(xe, sve2, _mesh(), a_spec=P(None, "model", None),
+                           backend="auto")
+        assert bool(jnp.all(y2 == ref2))
+
 
 # ---------------------------------------------------------------------------
 # serve pspecs: packed row-pair fallback, replicated dictionaries
