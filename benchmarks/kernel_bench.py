@@ -34,6 +34,7 @@ sys.path.insert(0, str(ROOT / "src"))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.core.lutq import LutqState  # noqa: E402
 from repro.kernels import autotune, ops  # noqa: E402
@@ -184,6 +185,52 @@ def run(emit=print, quick: bool = False, reps: int = 5, warmup: int = 2):
             q, kk, vv, causal=True, interpret=autotune.default_interpret()))
         rows.append(("causal_flash_pallas_interp", us,
                      f"S={S},block_skipped=~S2/2_flops"))
+
+    # paged decode attention: block-table kernel vs materializing gather
+    # oracle, plus the bytes model CI gates (live pages < NB means the
+    # kernel reads strictly fewer KV bytes per decode step)
+    from repro.kernels.paged_attn import pages_read_per_step
+
+    Bp, page, nbp, hkvp, dhp = 8, 16, (4 if quick else 16), 2, 64
+    n_pages = 1 + Bp * nbp
+    prng = np.random.RandomState(0)
+    kp = prng.randn(n_pages, page, hkvp, dhp).astype(np.float32)
+    vp = prng.randn(n_pages, page, hkvp, dhp).astype(np.float32)
+    kp[0] = vp[0] = 0.0  # pinned trash page
+    kp, vp = jnp.asarray(kp), jnp.asarray(vp)
+    qp = jnp.asarray(prng.randn(Bp, 1, hkvp * 2, dhp), jnp.float32)
+    blk = jnp.asarray(1 + prng.permutation(Bp * nbp).reshape(Bp, nbp),
+                      jnp.int32)
+    cl_np = prng.randint(1, nbp * page + 1, (Bp,))
+    cl = jnp.asarray(cl_np, jnp.int32)
+    page_bytes = page * hkvp * dhp * 4 * 2  # K+V, f32 pool
+    t_gather = nbp * page_bytes / HBM_BW * 1e6
+    us = _time(lambda: ops.paged_attention(qp, kp, vp, blk, cl,
+                                           backend="gather"))
+    rows.append(("paged_attn_gather_jnp", us,
+                 f"NB={nbp},v5e_model_us={t_gather:.3f}"))
+    if autotune.default_interpret() and quick:
+        # same honesty rule as flash above: interpret-mode Pallas is a
+        # per-grid-step emulation that dwarfs the smoke budget without
+        # measuring anything the full bench doesn't
+        rows.append(("paged_attn_kernel_pallas_interp", None,
+                     f"NB={nbp},skipped=interpret_quick"))
+    else:
+        us = _time(lambda: ops.paged_attention(
+            qp, kp, vp, blk, cl, backend="kernel",
+            interpret=autotune.default_interpret()))
+        rows.append(("paged_attn_kernel_pallas_interp", us,
+                     f"NB={nbp},walks_block_table"))
+    # modeled bytes/step over the ragged cache lengths: the gather
+    # oracle always streams NB pages, the kernel only the live span
+    # (+1 trash page when any grid step is dead)
+    mean_pages = float(np.mean(
+        [pages_read_per_step(int(c), page, nbp) for c in cl_np]))
+    ratio = mean_pages / nbp
+    t_paged = mean_pages * page_bytes / HBM_BW * 1e6
+    rows.append(("paged_attn_pages_read_model", t_paged,
+                 f"mean_pages={mean_pages:.2f},"
+                 f"pages_ratio_vs_gather={ratio:.3f}"))
 
     for name, us, derived in rows:
         emit(f"{name},{'skipped' if us is None else f'{us:.1f}'},{derived}")

@@ -54,6 +54,11 @@ KERNEL_OF_BACKEND = {"fused": "matmul", "packed4": "gemv_packed",
 #: decode strategies the kernels implement (dictionary placement)
 STRATEGIES = ("onehot", "gather")
 
+#: paged-attention decode dispatch choices: the Pallas block-table
+#: kernel vs the gather+decode_attention oracle. Both are bit-identical
+#: by contract, so this knob is always safe to tune.
+PAGED_STRATEGIES = ("kernel", "gather")
+
 _VMEM_BUDGET = 12 * 2**20  # leave headroom under the ~16 MiB/core VMEM
 
 
@@ -166,6 +171,21 @@ class TuningCache:
         return cls.from_json_dict(json.loads(Path(path).read_text()))
 
 
+def paged_attn_key(page: int, pages_per_row: int, hkv: int, dh: int,
+                   kv_dtype, *, interpret: Optional[bool] = None) -> str:
+    """Cache key for the paged-attention decode dispatch.
+
+    Reuses ``make_key``'s field layout so one cache file carries both
+    matmul tiles and attention entries: M=page, N=pages_per_row (NB),
+    Kin=Hkv, K=dh, dtype=the pool dtype (int8 vs fp distinguishes the
+    dequant variant), platform via ``platform_key`` (an interpret-forced
+    TPU host never pollutes the "tpu" namespace).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    return make_key("paged_attn", page, pages_per_row, hkv, dh, kv_dtype,
+                    "paged", platform_key(interpret))
+
+
 def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
@@ -191,6 +211,12 @@ def candidates(kernel: str, M: int, N: int, Kin: int, K: int, *,
     pruned by the VMEM budget.
     """
     interpret = default_interpret() if interpret is None else interpret
+    if kernel == "paged_attn":
+        # no tile grid: the kernel's blocking IS the page geometry. The
+        # only knob is which bit-identical dispatch wins the byte race;
+        # bm/bn/bk echo the keyed geometry for JSON readability.
+        return [TileConfig(bm=M, bn=N, bk=K, strategy=s)
+                for s in PAGED_STRATEGIES]
     packed = kernel == "gemv_packed"
     out: List[TileConfig] = []
     if interpret:

@@ -666,3 +666,183 @@ def lutq_dot_sharded(
     return lutq_dot_spmd(x, state, leaf.mesh, a_spec=P(*parts),
                          backend=backend, transpose_rhs=transpose_rhs,
                          out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (decode): block-table Pallas kernel vs gather oracle
+# ---------------------------------------------------------------------------
+
+#: dispatch names accepted by :func:`paged_attention`.
+PAGED_BACKENDS = ("auto", "kernel", "gather")
+
+
+def paged_attention_reference(q, k_pool, v_pool, block, cache_len, *,
+                              window=None, scale=None, k_scale=None,
+                              v_scale=None):
+    """Gather oracle: assemble the row once, dequant once, attend.
+
+    This is the pre-kernel paged decode path and the numerics contract
+    the kernel must match bit-for-bit. The int8 scale planes are
+    gathered exactly once each and reused for the dequant (the old
+    in-model path re-gathered them right after scattering the new
+    token's scales).
+    """
+    from repro.nn.attention import decode_attention, gather_pages
+
+    kc = gather_pages(k_pool, block)
+    vc = gather_pages(v_pool, block)
+    if k_scale is not None:
+        ks = gather_pages(k_scale, block)
+        vs = gather_pages(v_scale, block)
+        kc = kc.astype(jnp.bfloat16) * ks[..., None]
+        vc = vc.astype(jnp.bfloat16) * vs[..., None]
+    return decode_attention(q, kc, vc, cache_len, window=window, scale=scale)
+
+
+def _paged_attention_sharded(q, k_pool, v_pool, block, cache_len, *,
+                             window, scale, k_scale, v_scale, interpret,
+                             mesh):
+    """KV-head-sharded kernel dispatch under a ("data","model") mesh.
+
+    ``paged_serve_shardings`` lays pool leaves out with the Hkv axis on
+    "model" and the block table / batch on "data"; the kernel grid is
+    purely parallel over (batch, kv-head), so a shard_map over both axes
+    runs the identical kernel on local shards — bit-identical by
+    construction. Falls back to the gather oracle (which GSPMD
+    partitions on its own) when an axis does not divide.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.paged_attn import paged_attention_tpu
+
+    B, _, H, _ = q.shape
+    hkv = k_pool.shape[2]
+    sizes = dict(mesh.shape)
+    data, model = sizes.get("data", 1), sizes.get("model", 1)
+    if B % data or hkv % model:
+        return paged_attention_reference(
+            q, k_pool, v_pool, block, cache_len, window=window, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
+    dp = "data" if data > 1 else None
+    tp = "model" if model > 1 else None
+    quant = k_scale is not None
+
+    def local(q_l, k_l, v_l, blk_l, cl_l, *scales):
+        ks_l, vs_l = scales if scales else (None, None)
+        return paged_attention_tpu(
+            q_l, k_l, v_l, blk_l, cl_l, window=window, scale=scale,
+            k_scale=ks_l, v_scale=vs_l, interpret=interpret)
+
+    in_specs = [P(dp, None, tp, None), P(None, None, tp, None),
+                P(None, None, tp, None), P(dp, None), P(dp)]
+    operands = [q, k_pool, v_pool, block, cache_len]
+    if quant:
+        in_specs += [P(None, None, tp), P(None, None, tp)]
+        operands += [k_scale, v_scale]
+    return shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=P(dp, None, tp, None),
+                     check_rep=False)(*operands)
+
+
+def paged_attention(q, k_pool, v_pool, block, cache_len, *, window=None,
+                    scale=None, k_scale=None, v_scale=None, backend="auto",
+                    interpret=None, mesh=None):
+    """One-token decode attention over a paged KV pool.
+
+    q: (B, 1, H, dh); k_pool/v_pool: (P, page, Hkv, dh); block: (B, NB)
+    int32 block table; cache_len: (B,) or scalar valid lengths. int8
+    pools carry bf16 per-token scale planes (P, page, Hkv) in
+    ``k_scale``/``v_scale``.
+
+    ``backend="kernel"`` walks the block table in Pallas
+    (:mod:`repro.kernels.paged_attn`), streaming ``ceil(cache_len/page)``
+    live pages per row instead of the full ``NB*page`` gather —
+    ``window/page`` pages under SWA. ``"gather"`` is the materializing
+    oracle. ``"auto"`` consults the process :class:`TuningCache` under
+    the ``paged_attn`` key (both entries are bit-identical, so tuning
+    only ever trades bytes for bytes) and defaults to the kernel.
+    ``mesh`` routes through a shard_map over ("data","model") so
+    KV-head-sharded serving keeps shard-local pages.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if backend not in PAGED_BACKENDS:
+        raise ValueError(f"backend={backend!r} not in {PAGED_BACKENDS}")
+    _, page, hkv, dh = k_pool.shape
+    nb = block.shape[1]
+    if backend == "auto":
+        from repro.kernels.autotune import paged_attn_key
+
+        tile = _TUNING_CACHE.get(paged_attn_key(
+            page, nb, hkv, dh, k_pool.dtype, interpret=interpret))
+        backend = tile.strategy if tile is not None else "kernel"
+    cl = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (q.shape[0],))
+    if backend == "gather":
+        return paged_attention_reference(
+            q, k_pool, v_pool, block, cl, window=window, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
+    if mesh is not None:
+        return _paged_attention_sharded(
+            q, k_pool, v_pool, block, cl, window=window, scale=scale,
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret, mesh=mesh)
+    from repro.kernels.paged_attn import paged_attention_tpu
+
+    return paged_attention_tpu(
+        q, k_pool, v_pool, block, cl, window=window, scale=scale,
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
+
+
+def tune_paged_attention(*, batch=4, page=16, pages_per_row=4, hkv=2,
+                         dh=16, g=2, kv_dtype=jnp.float32, window=None,
+                         interpret=None, reps=3, warmup=2, seed=0,
+                         cache=None):
+    """Time kernel vs gather on one paged geometry; record the winner.
+
+    Returns ``(key, best_tile, {candidate: us})`` like
+    :func:`repro.kernels.autotune.tune` (which this wraps — the cache
+    key is ``paged_attn|M<page>|N<NB>|Kin<Hkv>|K<dh>|...``). Both
+    candidates are bit-identical, so a recorded entry only ever changes
+    which byte stream the decode jits trace; the TuningCache version
+    bump re-traces them.
+    """
+    import numpy as np
+
+    from repro.kernels import autotune
+
+    interpret = _default_interpret() if interpret is None else interpret
+    rng = np.random.RandomState(seed)
+    n_pages = 1 + batch * pages_per_row
+    quant = jnp.dtype(kv_dtype) == jnp.int8
+    if quant:
+        kp = jnp.asarray(rng.randint(-127, 128,
+                                     (n_pages, page, hkv, dh)), jnp.int8)
+        vp = jnp.asarray(rng.randint(-127, 128,
+                                     (n_pages, page, hkv, dh)), jnp.int8)
+        ks = jnp.asarray(np.abs(rng.randn(n_pages, page, hkv)) * 0.05,
+                         jnp.bfloat16)
+        vs = jnp.asarray(np.abs(rng.randn(n_pages, page, hkv)) * 0.05,
+                         jnp.bfloat16)
+    else:
+        kp = jnp.asarray(rng.randn(n_pages, page, hkv, dh), kv_dtype)
+        vp = jnp.asarray(rng.randn(n_pages, page, hkv, dh), kv_dtype)
+        ks = vs = None
+    q = jnp.asarray(rng.randn(batch, 1, hkv * g, dh), jnp.float32)
+    blk = jnp.asarray(
+        rng.randint(1, n_pages, (batch, pages_per_row)), jnp.int32)
+    cl = jnp.asarray(
+        rng.randint(1, pages_per_row * page + 1, (batch,)), jnp.int32)
+
+    def measure(tile):
+        def run(q, kp, vp, blk, cl):
+            return paged_attention(q, kp, vp, blk, cl, window=window,
+                                   k_scale=ks, v_scale=vs,
+                                   backend=tile.strategy,
+                                   interpret=interpret)
+
+        return autotune.measure_call(jax.jit(run), q, kp, vp, blk, cl,
+                                     reps=reps, warmup=warmup)
+
+    return autotune.tune("paged_attn", M=page, N=pages_per_row, Kin=hkv,
+                         K=dh, dtype=kv_dtype, backend="paged",
+                         interpret=interpret, measure=measure, cache=cache)

@@ -1,0 +1,208 @@
+"""Pallas paged-attention decode kernel: walk the block table, not a gather.
+
+The paged serving path (runtime/paged_kv.py) keeps the KV cache in
+fixed-size physical pages behind per-slot block tables. Before this
+kernel, every decode step gathered the whole table into a contiguous
+``(B, NB*page, Hkv, dh)`` tensor — and for int8 KV dequantized *all* of
+it to bf16 — per layer, per step. At decode batch sizes the KV stream
+dominates the byte traffic, so that materialization was pure waste:
+``NB*page`` positions read regardless of how many are live.
+
+This kernel walks the block table directly. The grid is
+``(B, Hkv, NB)`` with the page dimension innermost; the block table and
+``cache_len`` ride as scalar-prefetch operands so each step's BlockSpec
+index_map can resolve ``logical page j of row b`` to a physical page
+and DMA exactly that ``(page, dh)`` tile per (batch, kv-head). Pages
+with no live positions — beyond ``cache_len``, or wholly behind the
+sliding window — are redirected to the trash page (physical page 0) in
+the index_map, so consecutive dead steps re-request the same block and
+the pipeline never streams them from HBM. int8 pages dequantize
+in-kernel from the per-token scale planes, page by page, into a
+VMEM-resident scratch; the full dequantized cache never exists.
+
+Numerics contract: **bit-identical to the gather oracle**
+(``ops.paged_attention(..., backend="gather")``, i.e. ``gather_pages``
++ ``nn.attention.decode_attention``) on every platform the tests run.
+Decode has a single query row, so instead of the multi-block
+online-softmax rescaling of ``flash_attn.py`` (whose ``alpha``
+reordering cannot reproduce a one-shot softmax bit-for-bit), the
+finalize step replays ``decode_attention``'s exact op sequence — same
+einsum structure (singleton batch dims included, so XLA picks the same
+contraction lowering even at G=1), same ``NEG_INF`` masking of
+positions ``>= cache_len`` and behind-window positions (which subsumes
+trash-page columns: the engine zeroes released block entries), same
+f32 softmax and f32 V accumulation. Masked columns contribute exactly
+``exp(NEG_INF - m) = 0.0`` and dead pages are zero-filled in scratch,
+so skipped pages are exact no-ops, not approximations.
+
+VMEM note: the scratch holds one row's dequantized K and V
+(``NB*page × dh`` each, per (batch, kv-head) step). That is the right
+trade at the row lengths this repo serves and tests; very long rows on
+real TPUs want a multi-pass split — recorded as open residue in
+ROADMAP.md next to the real-hardware timing pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.nn.attention import NEG_INF
+
+TRASH_PAGE = 0
+
+
+def _page_live(start: jax.Array, page: int, cl: jax.Array,
+               window: Optional[int]) -> jax.Array:
+    """Does logical page [start, start+page) hold any attended position?"""
+    live = start < cl
+    if window is not None:
+        live = jnp.logical_and(live, start + page > cl - window)
+    return live
+
+
+def _decode_kernel(blk_ref, cl_ref, q_ref, k_ref, v_ref, *rest, page, nb,
+                   window, scale, quant):
+    if quant:
+        ks_ref, vs_ref, o_ref, k_scr, v_scr = rest
+    else:
+        o_ref, k_scr, v_scr = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    cl = cl_ref[b]
+    start = j * page
+    live = _page_live(start, page, cl, window)
+
+    @pl.when(live)
+    def _copy_page():
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        if quant:
+            # mirror the oracle's dequant exactly: int8 -> bf16, scaled by
+            # the bf16 per-token plane (promotion to f32 happens inside
+            # the score einsum, as it does outside the kernel)
+            k = k.astype(jnp.bfloat16) * ks_ref[0, :, 0][:, None]
+            v = v.astype(jnp.bfloat16) * vs_ref[0, :, 0][:, None]
+        k_scr[pl.dslice(start, page), :] = k.astype(k_scr.dtype)
+        v_scr[pl.dslice(start, page), :] = v.astype(v_scr.dtype)
+
+    @pl.when(jnp.logical_not(live))
+    def _zero_page():
+        # dead pages must be *finite* in scratch: their softmax weight is
+        # exactly 0.0 and 0.0 * finite == 0.0 matches the oracle's masked
+        # gather contribution bit-for-bit (0.0 * NaN would not)
+        z = jnp.zeros((page, k_scr.shape[1]), k_scr.dtype)
+        k_scr[pl.dslice(start, page), :] = z
+        v_scr[pl.dslice(start, page), :] = z
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        # decode_attention, replayed bit-for-bit on the scratch row: the
+        # singleton (b, h) einsum batch dims keep XLA's contraction
+        # lowering identical to the batched oracle even at G=1.
+        q = (q_ref[0, 0] * scale)[None, None]            # (1, 1, G, dh)
+        kc = k_scr[...][None, :, None]                   # (1, W, 1, dh)
+        s = jnp.einsum("bhgd,bkhd->bhgk", q, kc).astype(jnp.float32)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (1, nb * page), 1)[0]
+        valid = pos < cl
+        if window is not None:
+            valid &= pos >= cl - window
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        vc = v_scr[...][None, :, None]                   # (1, W, 1, dh)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(jnp.float32),
+                       vc.astype(jnp.float32))
+        o_ref[0, 0] = o[0, 0].astype(o_ref.dtype)
+
+
+def paged_attention_tpu(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-token paged decode attention through the block table.
+
+    q: (B, 1, H, dh); k_pool/v_pool: (P, page, Hkv, dh) physical pages
+    (int8 when ``k_scale``/``v_scale`` planes (P, page, Hkv) are given);
+    block: (B, NB) int32 block table; cache_len: (B,) or scalar int32.
+    Returns (B, 1, H, dh) in q.dtype, bit-identical to
+    ``decode_attention(q, gather_pages(...), ...)``.
+    """
+    B, _, H, dh = q.shape
+    _, page, Hkv, _ = k_pool.shape
+    NB = block.shape[1]
+    G = H // Hkv
+    if scale is None:
+        scale = dh ** -0.5
+    quant = k_scale is not None
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    qr = q.reshape(B, Hkv, G, dh)
+    scr_dtype = jnp.bfloat16 if quant else k_pool.dtype
+
+    def page_map(b, h, j, blk, cln):
+        live = _page_live(j * page, page, cln[b], window)
+        return (jnp.where(live, blk[b, j], TRASH_PAGE), 0, h, 0)
+
+    def scale_map(b, h, j, blk, cln):
+        live = _page_live(j * page, page, cln[b], window)
+        return (jnp.where(live, blk[b, j], TRASH_PAGE), 0, h)
+
+    def head_map(b, h, j, blk, cln):
+        return (b, h, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, dh), head_map),
+        pl.BlockSpec((1, page, 1, dh), page_map),
+        pl.BlockSpec((1, page, 1, dh), page_map),
+    ]
+    operands = [qr, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), scale_map),
+                     pl.BlockSpec((1, page, 1), scale_map)]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, NB),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, dh), head_map),
+        scratch_shapes=[pltpu.VMEM((NB * page, dh), scr_dtype),
+                        pltpu.VMEM((NB * page, dh), scr_dtype)],
+    )
+    kernel = functools.partial(_decode_kernel, page=page, nb=NB,
+                               window=window, scale=scale, quant=quant)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(block, cl, *operands)
+    return out.reshape(B, 1, H, dh)
+
+
+def pages_read_per_step(cache_len: int, page: int, nb: int,
+                        window: Optional[int] = None) -> int:
+    """Modeled distinct KV pages the kernel streams for one row's decode
+    step (the gather oracle always reads ``nb``). Dead/out-of-window
+    pages collapse onto the trash page, which the pipeline requests but
+    never re-streams between consecutive grid steps; count it as one
+    page when any step is dead."""
+    if cache_len <= 0:
+        return 1
+    first = 0 if window is None else max(0, (cache_len - window) // page)
+    last = (min(cache_len, nb * page) - 1) // page
+    live = max(0, last - first + 1)
+    dead = nb - live
+    return live + (1 if dead else 0)

@@ -247,10 +247,13 @@ def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
                      "(use api.paged_supported to gate)")
 
 
-def paged_decode_step(params, cfg: ModelConfig, token, cache):
+def paged_decode_step(params, cfg: ModelConfig, token, cache, mesh=None):
+    # ``mesh`` (meshed serving jits only) lets the paged-attention kernel
+    # shard_map over ("data","model") so KV-head-sharded pools stay local
     if cfg.family == "encdec":
-        return m_encdec.encdec_paged_decode_step(params, cfg, token, cache)
-    return m_lm.lm_paged_decode_step(params, cfg, token, cache)
+        return m_encdec.encdec_paged_decode_step(params, cfg, token, cache,
+                                                 mesh=mesh)
+    return m_lm.lm_paged_decode_step(params, cfg, token, cache, mesh=mesh)
 
 
 def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:

@@ -260,7 +260,10 @@ def init_paged_encdec_cache(cfg: ModelConfig, batch: int, n_pages: int,
     }
 
 
-def encdec_paged_decode_step(params, cfg: ModelConfig, token, cache):
+def encdec_paged_decode_step(params, cfg: ModelConfig, token, cache,
+                             mesh=None):
+    from repro.kernels.ops import paged_attention
+
     h = embedding_apply(params["embed"], token, dtype=cfg.dtype) * (cfg.d_model ** 0.5)
     cache_len, block, src_len = cache["len"], cache["block"], cache["src_len"]
     B = token.shape[0]
@@ -275,9 +278,10 @@ def encdec_paged_decode_step(params, cfg: ModelConfig, token, cache):
             "k": scatter_token_pages(lpool["k"], block, idx, k[:, 0]),
             "v": scatter_token_pages(lpool["v"], block, idx, v[:, 0]),
         }
-        kc = gather_pages(new_pool["k"], block)
-        vc = gather_pages(new_pool["v"], block)
-        o = decode_attention(q, kc, vc, idx + 1)
+        # block-table walk (kernels/paged_attn.py) — the linear
+        # (B, NB*page, ...) self-attn view is never assembled
+        o = paged_attention(q, new_pool["k"], new_pool["v"], block, idx + 1,
+                            mesh=mesh)
         a = linear_apply(lp["attn"]["o"], o.reshape(B, 1, -1),
                          backend=cfg.kernel_backend, act_bits=cfg.act_bits)
         h = h + a

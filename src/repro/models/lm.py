@@ -528,13 +528,23 @@ def init_paged_workspace(cfg: ModelConfig, wws: int):
     return {"k": z, "v": z}
 
 
-def paged_attn_decode(p, cfg: ModelConfig, x, pool, block, cache_len):
+def paged_attn_decode(p, cfg: ModelConfig, x, pool, block, cache_len,
+                      mesh=None):
     """One-token decode against the paged pool (one layer).
 
     Dead slots keep ``cache_len`` pinned at 0 with an all-trash block
     row, so their scatter lands on the trash page and their (garbage)
     output is discarded by the engine.
+
+    Attention dispatches through ``kernels.ops.paged_attention``: the
+    Pallas kernel walks the block table page by page (dequantizing int8
+    pages in-kernel), so the full ``(B, NB*page, Hkv, dh)`` gathered —
+    and, for int8 KV, dequantized — cache is never materialized. The
+    gather oracle stays available as the ``"gather"`` backend and is
+    bit-identical by contract (tests/test_paged_attn.py).
     """
+    from repro.kernels.ops import paged_attention
+
     B = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1),
                            (B,)).reshape(B, 1)
@@ -547,24 +557,21 @@ def paged_attn_decode(p, cfg: ModelConfig, x, pool, block, cache_len):
     new_pool = dict(pool)
     new_pool["k"] = scatter_token_pages(pool["k"], block, idx, k[:, 0])
     new_pool["v"] = scatter_token_pages(pool["v"], block, idx, v[:, 0])
-    kc = gather_pages(new_pool["k"], block)   # (B, NB*page, Hkv, dh)
-    vc = gather_pages(new_pool["v"], block)
     if quant:
         new_pool["k_scale"] = scatter_token_pages(
             pool["k_scale"], block, idx, k_s[:, 0])
         new_pool["v_scale"] = scatter_token_pages(
             pool["v_scale"], block, idx, v_s[:, 0])
-        kc = kc.astype(jnp.bfloat16) * gather_pages(
-            new_pool["k_scale"], block)[..., None]
-        vc = vc.astype(jnp.bfloat16) * gather_pages(
-            new_pool["v_scale"], block)[..., None]
-    o = decode_attention(q, kc, vc, idx + 1, window=cfg.window)
+    o = paged_attention(q, new_pool["k"], new_pool["v"], block, idx + 1,
+                        window=cfg.window,
+                        k_scale=new_pool.get("k_scale"),
+                        v_scale=new_pool.get("v_scale"), mesh=mesh)
     out = linear_apply(p["o"], o.reshape(B, 1, -1),
                        backend=cfg.kernel_backend, act_bits=cfg.act_bits)
     return out, new_pool
 
 
-def lm_paged_decode_step(params, cfg: ModelConfig, token, cache):
+def lm_paged_decode_step(params, cfg: ModelConfig, token, cache, mesh=None):
     """token: (B,1) -> (logits (B,1,V), new paged cache)."""
     h = _embed_tokens(params, cfg, token)
     cache_len, block = cache["len"], cache["block"]
@@ -573,7 +580,8 @@ def lm_paged_decode_step(params, cfg: ModelConfig, token, cache):
         layer_p, layer_pool = xs
         a_in = rmsnorm_apply(layer_p["ln1"], h)
         a_out, new_pool = paged_attn_decode(layer_p["attn"], cfg, a_in,
-                                            layer_pool, block, cache_len)
+                                            layer_pool, block, cache_len,
+                                            mesh=mesh)
         h = h + a_out
         m_in = rmsnorm_apply(layer_p["ln2"], h)
         return h + mlp_apply(layer_p["mlp"], cfg, m_in), new_pool
@@ -707,3 +715,133 @@ def lm_paged_hydrate(cfg: ModelConfig, pool, block_row, hist_len, wws: int):
               if quant else (pool["k"], pool["v"]))
     wk, wv = jax.vmap(per_layer)(*leaves)
     return {"k": wk, "v": wv}
+
+
+def lm_paged_prefill_packed(params, cfg: ModelConfig, tokens, pool, blocks,
+                            bases, hists, lens, wws: int):
+    """Packed prefill: several short prompts' tails in ONE chunk call.
+
+    tokens: (1, C) — the segments' tail tokens concatenated tightly (C
+    is an AOT-warmed bucket width; padded rows are masked everywhere).
+    blocks: (S, NB) int32 block rows; bases: (S,) workspace base per
+    segment, **aligned to ``cfg.attn_kv_block``** and non-decreasing
+    (inactive segments park at the total span); hists/lens: (S,) prefix
+    hit / total prompt lengths (0 for inactive segments). All arrays are
+    traced, so every group of a given bucket width shares one trace.
+
+    Fuses what the unpacked path runs as hydrate + chunk + splice:
+    per layer it rebuilds each segment's hydrated prefix from the pool,
+    writes the chunk K/V at ``base + position``, attends with per-token
+    position/segment masking (``flash_attention`` overrides), and
+    splices [hist, len) back through each block row. Returns
+    ``(logits (S, 1, V) — row s read at segment s's last tail row — and
+    the updated pool)``.
+
+    Numerics: masked kv blocks are exact no-ops of the flash
+    accumulator and XLA matmul rows are independent, so each segment's
+    tokens are **bit-identical** to an unpacked hydrate+chunk+splice of
+    the same request (the packed-parity suite pins this; see
+    docs/serving.md for why bases must be kv_block-aligned).
+    """
+    C = tokens.shape[1]
+    S, NB = blocks.shape
+    page = pool["k"].shape[2]
+    quant = _paged_quant(cfg)
+    blocks = jnp.asarray(blocks, jnp.int32)
+    bases = jnp.asarray(bases, jnp.int32)
+    hists = jnp.asarray(hists, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+
+    # packed-q geometry: row i belongs to segment q_seg[i] at in-prompt
+    # position q_pos[i] = hist + offset-within-tail
+    tails = lens - hists
+    ends = jnp.cumsum(tails)
+    qi = jnp.arange(C, dtype=jnp.int32)
+    q_valid = qi < ends[S - 1]
+    q_seg = jnp.clip(jnp.searchsorted(ends, qi, side="right"), 0, S - 1)
+    q_pos = hists[q_seg] + (qi - (ends - tails)[q_seg])
+    q_pos = jnp.where(q_valid, q_pos, -1)
+    q_seg_m = jnp.where(q_valid, q_seg, -2)   # never matches any kv
+    positions = jnp.maximum(q_pos, 0)[None, :]
+    # padded rows scatter out of bounds -> dropped
+    q_ws_idx = jnp.where(q_valid, bases[q_seg] + q_pos, wws)
+
+    # workspace geometry: position w belongs to the last segment whose
+    # base is <= w (bases are non-decreasing; beyond-span positions land
+    # on an inactive segment or past the owner's length — masked either
+    # way)
+    wpos = jnp.arange(wws, dtype=jnp.int32)
+    w_seg = jnp.clip(jnp.searchsorted(bases, wpos, side="right") - 1,
+                     0, S - 1)
+    w_local = wpos - bases[w_seg]
+    w_blk = blocks[w_seg, jnp.clip(w_local // page, 0, NB - 1)]
+    gather_idx = w_blk * page + w_local % page
+    hyd_live = w_local < hists[w_seg]
+    spl_valid = (w_local >= hists[w_seg]) & (w_local < lens[w_seg])
+    spl_idx = jnp.where(spl_valid, w_blk, 0) * page + w_local % page
+
+    h = _embed_tokens(params, cfg, tokens)
+
+    def scatter(p_leaf, vals):
+        P = p_leaf.shape[0]
+        flat = p_leaf.reshape((P * page,) + p_leaf.shape[2:])
+        return flat.at[spl_idx].set(vals.astype(p_leaf.dtype)).reshape(
+            p_leaf.shape)
+
+    def body(h, xs):
+        if quant:
+            layer_p, pk, pv, pks, pvs = xs
+        else:
+            layer_p, pk, pv = xs
+        # hydrate (same gather -> dequant -> cast -> mask as
+        # lm_paged_hydrate, per position)
+        kc = pk.reshape((-1,) + pk.shape[2:])[gather_idx]
+        vc = pv.reshape((-1,) + pv.shape[2:])[gather_idx]
+        if quant:
+            kc = kc.astype(jnp.bfloat16) * pks.reshape(-1, pks.shape[2])[
+                gather_idx][..., None]
+            vc = vc.astype(jnp.bfloat16) * pvs.reshape(-1, pvs.shape[2])[
+                gather_idx][..., None]
+        zero = jnp.zeros((), cfg.dtype)
+        live = hyd_live[:, None, None]
+        wk = jnp.where(live, kc.astype(cfg.dtype), zero)[None]
+        wv = jnp.where(live, vc.astype(cfg.dtype), zero)[None]
+
+        a_in = rmsnorm_apply(layer_p["ln1"], h)
+        q, k, v = _qkv(layer_p["attn"], cfg, a_in, positions)
+        wk = wk.at[0, q_ws_idx].set(k[0].astype(wk.dtype), mode="drop")
+        wv = wv.at[0, q_ws_idx].set(v[0].astype(wv.dtype), mode="drop")
+        o = flash_attention(q, wk, wv, causal=True, window=cfg.window,
+                            q_block=cfg.attn_q_block,
+                            kv_block=cfg.attn_kv_block,
+                            q_positions=q_pos, kv_positions=w_local,
+                            q_segments=q_seg_m, kv_segments=w_seg)
+        a_out = linear_apply(layer_p["attn"]["o"], o.reshape(1, C, -1),
+                             backend=cfg.kernel_backend,
+                             act_bits=cfg.act_bits)
+        h = h + a_out
+        m_in = rmsnorm_apply(layer_p["ln2"], h)
+        h = h + mlp_apply(layer_p["mlp"], cfg, m_in)
+        if quant:
+            kq, ks = _kv_quant(wk[0], 8)
+            vq, vs = _kv_quant(wv[0], 8)
+            return h, (scatter(pk, kq), scatter(pv, vq),
+                       scatter(pks, ks), scatter(pvs, vs))
+        return h, (scatter(pk, wk[0]), scatter(pv, wv[0]))
+
+    leaves = ((params["layers"], pool["k"], pool["v"], pool["k_scale"],
+               pool["v_scale"]) if quant
+              else (params["layers"], pool["k"], pool["v"]))
+    h, new = jax.lax.scan(body, h, leaves)
+    new_pool = ({"k": new[0], "v": new[1], "k_scale": new[2],
+                 "v_scale": new[3]} if quant
+                else {"k": new[0], "v": new[1]})
+
+    # per-segment logits, one (1, 1, d) readout each so the trace
+    # shapes (and therefore the bits) match the unpacked chunk readout
+    idx_last = jnp.clip(ends - 1, 0, C - 1)
+    logits = jnp.concatenate(
+        [_readout(params, cfg,
+                  jax.lax.dynamic_slice_in_dim(h, idx_last[s], 1, axis=1))
+         for s in range(S)], axis=0)
+    return logits, new_pool

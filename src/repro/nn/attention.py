@@ -30,6 +30,10 @@ def flash_attention(
     q_block: int = 512,
     kv_block: int = 512,
     q_offset: Optional[jax.Array] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    q_segments: Optional[jax.Array] = None,
+    kv_segments: Optional[jax.Array] = None,
 ) -> jax.Array:
     """q: (B,S,H,Dh); k,v: (B,Skv,Hkv,Dh[v]) -> (B,S,H,Dv).
 
@@ -38,6 +42,20 @@ def flash_attention(
     queries against the full workspace with ``q_offset=start`` so the
     causal/window masks see global positions. Defaults to 0 (prompt
     prefill, q and kv aligned).
+
+    ``q_positions``/``kv_positions`` (S,)/(Skv,) int32 +
+    ``q_segments``/``kv_segments``: per-token overrides for packed
+    multi-sequence batches (paged prefill packing). When given (all
+    four together), the mask becomes
+    ``seg_q == seg_kv  &  pos_q >= pos_kv  [&  pos_q - pos_kv < window]``
+    — a token only attends its own segment. Negative segment ids never
+    match (use -1/-2 for padding). The sliding-window KV slab is
+    disabled (positions are no longer monotone in buffer order), and
+    ``prefix`` is unsupported. Masked-out kv blocks are exact numeric
+    no-ops of the online accumulator, so a segment's rows are
+    bit-identical to an unpacked call whose kv layout groups the same
+    valid entries into the same kv blocks (i.e. segment bases aligned
+    to ``kv_block``).
     """
     B, S, H, Dh = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -45,6 +63,11 @@ def flash_attention(
     G = H // Hkv
     if scale is None:
         scale = Dh ** -0.5
+    packed = q_positions is not None
+    if packed:
+        assert prefix is None, "prefix + packed segment overrides unsupported"
+        assert (kv_positions is not None and q_segments is not None
+                and kv_segments is not None)
 
     q_block = min(q_block, S)
     kv_block = min(kv_block, Skv)
@@ -56,10 +79,19 @@ def flash_attention(
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
         S += pad_q
+        if packed:
+            q_positions = jnp.pad(q_positions, (0, pad_q),
+                                  constant_values=-1)
+            q_segments = jnp.pad(q_segments, (0, pad_q), constant_values=-2)
     if pad_kv:
         k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
         Skv += pad_kv
+        if packed:
+            kv_positions = jnp.pad(kv_positions, (0, pad_kv),
+                                   constant_values=-1)
+            kv_segments = jnp.pad(kv_segments, (0, pad_kv),
+                                  constant_values=-1)
     nq = S // q_block
     if q_offset is None:
         q_offset = jnp.array(0, jnp.int32)
@@ -67,7 +99,7 @@ def flash_attention(
 
     qr = q.reshape(B, nq, q_block, Hkv, G, Dh) * scale
 
-    if window is not None and causal:
+    if window is not None and causal and not packed:
         # Static KV slab wide enough to cover [q_end - window, q_end).
         slab = ((window + kv_block - 1) // kv_block + 1) * kv_block
         slab = min(slab + (q_block // kv_block) * kv_block, Skv)
@@ -86,13 +118,25 @@ def flash_attention(
             start = jnp.array(0, jnp.int32)
         kslab = jax.lax.dynamic_slice_in_dim(k, start, slab, axis=1)
         vslab = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=1)
-        q_pos = q_start + jnp.arange(q_block)
+        if packed:
+            q_pos = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_block,
+                                                 q_block)
+            q_seg = jax.lax.dynamic_slice_in_dim(q_segments, qi * q_block,
+                                                 q_block)
+        else:
+            q_pos = q_start + jnp.arange(q_block)
 
         def inner(carry, j):
             m, l, acc = carry
             kj = jax.lax.dynamic_slice_in_dim(kslab, j * kv_block, kv_block, axis=1)
             vj = jax.lax.dynamic_slice_in_dim(vslab, j * kv_block, kv_block, axis=1)
-            k_pos = start + j * kv_block + jnp.arange(kv_block)
+            if packed:
+                k_pos = jax.lax.dynamic_slice_in_dim(
+                    kv_positions, j * kv_block, kv_block)
+                k_seg = jax.lax.dynamic_slice_in_dim(
+                    kv_segments, j * kv_block, kv_block)
+            else:
+                k_pos = start + j * kv_block + jnp.arange(kv_block)
             # scores: (B, Hkv, G, bq, bk) in f32
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kj).astype(jnp.float32)
             mask = jnp.ones((q_block, kv_block), bool)
@@ -100,10 +144,12 @@ def flash_attention(
                 mask &= q_pos[:, None] >= k_pos[None, :]
             if window is not None:
                 mask &= q_pos[:, None] - k_pos[None, :] < window
+            if packed:
+                mask &= q_seg[:, None] == k_seg[None, :]
             if prefix is not None:
                 # bidirectional attention inside the (image/audio) prefix
                 mask |= (q_pos[:, None] < prefix) & (k_pos[None, :] < prefix)
-            if pad_kv:
+            if pad_kv and not packed:
                 mask &= (k_pos[None, :] < Skv0)
             s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))

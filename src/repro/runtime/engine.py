@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -48,7 +49,8 @@ from repro.models.config import ModelConfig
 from repro.runtime import paged_kv
 from repro.runtime.serving import (adapt_prefill_cache, paged_chunk_fn,
                                    paged_encdec_splice_fn, paged_hydrate_fn,
-                                   paged_splice_fn, prefill_fn)
+                                   paged_packed_fn, paged_splice_fn,
+                                   prefill_fn)
 
 
 def _batch_axes(cfg: ModelConfig, max_len: int, src_len: int):
@@ -286,7 +288,8 @@ class Engine:
                  backend: Optional[str] = None, prefill_bucket: int = 1,
                  mesh=None, kv_pages: Optional[int] = None,
                  page_size: int = 64, prefix_cache: bool = True,
-                 max_chunk: int = 256, warmup: bool = True):
+                 max_chunk: int = 256, prefill_pack: bool = True,
+                 warmup: bool = True):
         if backend is not None:
             cfg = cfg.replace(kernel_backend=backend)
         self.cfg = cfg
@@ -312,6 +315,20 @@ class Engine:
         # same API — `stats()["paged"]` reports which path ran.
         self.paged = kv_pages is not None and api.paged_supported(cfg)
         self._chunking: Optional[Dict[str, Any]] = None
+        self.n_chunk_calls = 0
+        self.n_packed_groups = 0
+        self.n_packed_reqs = 0
+        # packed prefill: several short queue-head prompts share ONE
+        # chunk call (encdec prefills whole prompts through the dense
+        # prefill path — nothing to pack there). Dynamic activation
+        # quantization disables it: fake_quant's per-TENSOR max scale
+        # couples every row of a packed batch (and of the decode batch)
+        # to its neighbours, so packed tokens would not be bit-identical
+        # to unpacked serving — the same exactness discipline that pins
+        # prefill_bucket=1 for recurrent families.
+        self.prefill_pack = (bool(prefill_pack) and self.paged
+                             and cfg.family != "encdec"
+                             and cfg.act_bits >= 32)
         if self.paged:
             self.page_size = int(page_size)
             self.n_blocks = -(-self.max_len // self.page_size)
@@ -543,6 +560,9 @@ class Engine:
                     return
                 budget -= 1
                 continue
+            if self.prefill_pack and self._try_packed_admit():
+                budget -= 1
+                continue
             got = self.pkv.admit(slot, req.tokens,
                                  len(req.tokens) + req.max_new)
             if got is None:
@@ -552,6 +572,117 @@ class Engine:
             req.t_admit = time.perf_counter()
             req.kv_pages = len(self.pkv.rows[slot])
             self._start_chunking(slot, req, row, hit)
+
+    def _try_packed_admit(self) -> bool:
+        """Admit several queue-head requests as ONE packed prefill call.
+
+        A group packs consecutive FIFO requests whose tails (prompt
+        minus prospective prefix hit, via the side-effect-free
+        ``pkv.peek``) sum within one ``max_chunk`` bucket and whose
+        kv_block-aligned workspace spans fit ``wws`` — at most one
+        segment per free slot. Returns True when it consumed this
+        step's chunk budget (packed call, or a degenerate single-request
+        group handed to the normal chunked path); False hands admission
+        back to the unpacked path with the queue untouched.
+        """
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if len(free) < 2 or len(self.queue) < 2:
+            return False
+        kvb = min(self.cfg.attn_kv_block, self.wws)
+
+        def span(L):
+            return -(-L // kvb) * kvb
+
+        plan: List[Request] = []
+        c_tot = base = 0
+        for req in itertools.islice(self.queue, len(free)):
+            if req.frames is not None or req.prefix_embeds is not None:
+                break
+            L = len(req.tokens)
+            tail = L - self.pkv.peek(req.tokens)
+            if (tail > self.max_chunk or c_tot + tail > self.max_chunk
+                    or base + span(L) > self.wws):
+                break
+            plan.append(req)
+            c_tot += tail
+            base += span(L)
+        if len(plan) < 2:
+            return False
+        # commit: reserve pages in FIFO order, stopping at the first
+        # shortfall. The fit is re-checked against the ACTUAL hit — an
+        # earlier admit's eviction can shrink a later candidate's hit
+        # and grow its tail past the planned bucket.
+        admitted: List[tuple] = []
+        c_tot = base = 0
+        for req in plan:
+            slot = free[len(admitted)]
+            L = len(req.tokens)
+            got = self.pkv.admit(slot, req.tokens, L + req.max_new)
+            if got is None:
+                break
+            row, hit = got
+            if c_tot + (L - hit) > self.max_chunk or base + span(L) > self.wws:
+                self.pkv.release_slot(slot)
+                break
+            self.queue.popleft()
+            req.t_admit = time.perf_counter()
+            req.kv_pages = len(self.pkv.rows[slot])
+            admitted.append((slot, req, row, hit))
+            c_tot += L - hit
+            base += span(L)
+        if not admitted:
+            return False  # page shortfall at the head: defer, FIFO held
+        if len(admitted) == 1:
+            slot, req, row, hit = admitted[0]
+            self._start_chunking(slot, req, row, hit)
+            return True
+        self._packed_prefill(admitted)
+        return True
+
+    def _packed_prefill(self, admitted: List[tuple]):
+        """Run one fused packed prefill for an admitted group and
+        install every member: per-segment logits row -> first token,
+        block row + length -> device cache, prompt -> prefix cache."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        S, NB = self.capacity, self.n_blocks
+        kvb = min(cfg.attn_kv_block, self.wws)
+        blocks = np.zeros((S, NB), np.int32)
+        bases = np.zeros(S, np.int32)
+        hists = np.zeros(S, np.int32)
+        lens = np.zeros(S, np.int32)
+        tails = []
+        base = 0
+        for s, (slot, req, row, hit) in enumerate(admitted):
+            blocks[s] = row
+            bases[s] = base
+            hists[s] = hit
+            lens[s] = len(req.tokens)
+            tails.append(req.tokens[hit:])
+            base += -(-len(req.tokens) // kvb) * kvb
+        bases[len(admitted):] = base  # inactive segments park at the end
+        tail_tot = sum(len(t) for t in tails)
+        C = paged_kv.next_pow2(max(tail_tot, self.buckets[0]))
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :tail_tot] = np.concatenate(tails)
+        logits, pool = paged_packed_fn(cfg, self.wws)(
+            self.params, jnp.asarray(toks), self.cache["pool"],
+            jnp.asarray(blocks), jnp.asarray(bases), jnp.asarray(hists),
+            jnp.asarray(lens))
+        self.n_chunk_calls += 1
+        self.n_packed_groups += 1
+        self.n_packed_reqs += len(admitted)
+        self.cache = dict(self.cache)
+        self.cache["pool"] = pool
+        for s, (slot, req, row, hit) in enumerate(admitted):
+            L = len(req.tokens)
+            self.cache["block"] = self.cache["block"].at[slot].set(
+                jnp.asarray(row))
+            self.cache["len"] = self.cache["len"].at[slot].set(L)
+            self.pkv.insert_prefix(slot, req.tokens)
+            # t_prefill is charged once (s=0 spans the packed call)
+            self._install_first_token(slot, req, logits[s][None], L,
+                                      t0 if s == 0 else time.perf_counter())
 
     def _start_chunking(self, slot: int, req: Request, row: np.ndarray,
                         hit_tokens: int):
@@ -585,6 +716,7 @@ class Engine:
         logits, self.ws = paged_chunk_fn(self.cfg)(
             self.params, jnp.asarray(toks), self.ws, jnp.int32(start),
             jnp.int32(n_real))
+        self.n_chunk_calls += 1
         st["i"] += 1
         self.t_prefill += time.perf_counter() - t0
         if st["i"] == len(st["plan"]):
@@ -712,6 +844,15 @@ class Engine:
                     jnp.int32(0), jnp.int32(width))
             paged_splice_fn(cfg)(self.cache["pool"], ws, zrow,
                                jnp.int32(0), jnp.int32(0))
+            if self.prefill_pack:
+                # all-inactive group: every row masked, splice targets
+                # the trash page — functional, outputs discarded
+                zb = jnp.zeros((self.capacity, self.n_blocks), jnp.int32)
+                zs = jnp.zeros((self.capacity,), jnp.int32)
+                for width in self.buckets:
+                    paged_packed_fn(cfg, self.wws)(
+                        self.params, jnp.zeros((1, width), jnp.int32),
+                        self.cache["pool"], zb, zs, zs, zs)
         _sample_fn(self.greedy)(lg, self.keys[:1], temp)
         out = _paged_step_fn(cfg, self.greedy, self.mesh, self.capacity,
                              self.n_pages, self.page_size, self.n_blocks,
@@ -743,6 +884,8 @@ class Engine:
             out["chunk"] = paged_chunk_fn(cfg)._cache_size()
             out["splice"] = paged_splice_fn(cfg)._cache_size()
             out["hydrate"] = paged_hydrate_fn(cfg, self.wws)._cache_size()
+            if self.prefill_pack:
+                out["packed"] = paged_packed_fn(cfg, self.wws)._cache_size()
         return out
 
     # ------------------------------------------------------ static batch
@@ -942,4 +1085,7 @@ class Engine:
             out.update(self.pkv.stats())
             out["kv_bytes_per_token"] = paged_kv.kv_bytes_per_token(self.cfg)
             out["t_warmup_s"] = self.t_warmup
+            out["prefill_chunk_calls"] = self.n_chunk_calls
+            out["packed_groups"] = self.n_packed_groups
+            out["packed_requests"] = self.n_packed_reqs
         return out

@@ -242,6 +242,23 @@ class PrefixCache:
             parent_id = id(node)
         return pages
 
+    def probe(self, tokens: Sequence[int]) -> int:
+        """Length (in pages) of the cached chain ``match`` would return,
+        with NO side effects: no refcounts taken, no LRU bump, no
+        hit/query accounting. Admission planning (prefill packing) uses
+        this to size a group before committing any reservation."""
+        tokens = [int(t) for t in tokens]
+        n_full = len(tokens) // self.page_size
+        n, parent_id = 0, None
+        for i in range(n_full):
+            blk = tuple(tokens[i * self.page_size:(i + 1) * self.page_size])
+            node = self._nodes.get((parent_id, blk))
+            if node is None:
+                break
+            n += 1
+            parent_id = id(node)
+        return n
+
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> None:
         """Cache ``pages[i]`` as the page for full prompt block ``i``.
 
@@ -326,6 +343,17 @@ class PagedKV:
 
     def n_pages_for(self, total_tokens: int) -> int:
         return -(-int(total_tokens) // self.page_size)
+
+    def peek(self, tokens: Sequence[int]) -> int:
+        """Prospective prefix-hit length in TOKENS for ``tokens``,
+        without reserving anything — the same cap ``admit`` applies (the
+        page holding the last prompt token is never hit, so its logits
+        are recomputed). Pure: repeated peeks don't perturb LRU order or
+        hit-rate stats."""
+        if self.prefix is None or tokens is None:
+            return 0
+        n = self.prefix.probe(tokens)
+        return min(n, (len(tokens) - 1) // self.page_size) * self.page_size
 
     def admit(self, slot: int, tokens: Sequence[int], total_tokens: int):
         """Reserve pages for a request (prompt + budgeted new tokens).

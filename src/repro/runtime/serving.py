@@ -222,7 +222,10 @@ def _paged_decode_step(cfg: ModelConfig, params, token, cache):
 def _paged_decode_step_meshed(cfg: ModelConfig, axes, mesh, params, token,
                               cache):
     params = ops.annotate_spmd(params, axes, mesh)
-    return api.paged_decode_step(params, cfg, token, cache)
+    # the mesh rides into the paged-attention kernel dispatch so it can
+    # shard_map over ("data", "model") instead of leaving GSPMD to
+    # partition the block-table walk
+    return api.paged_decode_step(params, cfg, token, cache, mesh=mesh)
 
 
 @functools.lru_cache(maxsize=64)
@@ -278,6 +281,25 @@ def paged_chunk_fn(cfg: ModelConfig):
     shape, so ``_cache_size()`` counts exactly the bucket widths hit —
     the engine's no-new-traces-after-warmup assertion keys on this."""
     return _paged_chunk_fn_cached(cfg, ops.tuning_fingerprint())
+
+
+@functools.lru_cache(maxsize=64)
+def _paged_packed_fn_cached(cfg: ModelConfig, wws: int, tuning):
+    del tuning
+    from repro.models import lm as m_lm
+
+    return jax.jit(lambda params, tokens, pool, blocks, bases, hists, lens:
+                   m_lm.lm_paged_prefill_packed(params, cfg, tokens, pool,
+                                                blocks, bases, hists, lens,
+                                                wws))
+
+
+def paged_packed_fn(cfg: ModelConfig, wws: int):
+    """Fused packed prefill (hydrate + chunk + splice + per-segment
+    logits) for several short prompts in one call. Like
+    ``paged_chunk_fn``, jax re-traces per packed (1, C) bucket width —
+    ``_cache_size()`` counts exactly the widths hit."""
+    return _paged_packed_fn_cached(cfg, wws, ops.tuning_fingerprint())
 
 
 @functools.lru_cache(maxsize=64)
