@@ -443,6 +443,58 @@ def update_state(state: LutqState, spec: QuantSpec,
 
 
 # ---------------------------------------------------------------------------
+# nested dictionaries: coarsen K entries to K' over the same assignments
+# ---------------------------------------------------------------------------
+
+def coarsen_dictionary(d: jax.Array, a: jax.Array, k_out: int,
+                       *, iters: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Re-cluster the K dictionary entries into ``k_out`` coarse entries.
+
+    Weighted 1-D k-means over the *entries themselves* (weights = how
+    many weights each entry serves, from the assignment histogram), so a
+    low-bit "draft view" of a served tensor costs only a second tiny
+    dictionary plus remapped indices — the original assignments ``a``
+    never change, they just compose with the returned fine->coarse map:
+    ``a_draft = fmap[a]``. Empty fine entries keep a vanishing weight so
+    they still land in a defined coarse cell (the map must be total).
+
+    d: (K,) sorted dictionary (f32); a: int assignments of any shape
+    (only used for usage counts). Returns ``(d_coarse (k_out,) sorted
+    f32, fmap (K,) int32 monotone)``. Monotonicity of the map follows
+    from both dictionaries being sorted — nested views preserve the
+    order structure the packed kernels rely on.
+    """
+    K = d.shape[-1]
+    if k_out > K:
+        raise ValueError(f"k_out {k_out} exceeds dictionary size {K}")
+    d32 = d.astype(jnp.float32)
+    counts = jnp.zeros((K,), jnp.float32).at[
+        a.astype(jnp.int32).ravel()].add(1.0)
+    w = counts + 1e-3
+
+    # weighted-quantile init: sorted by construction, duplicates spread
+    # by a hair exactly like init_dictionary
+    cum = jnp.cumsum(w)
+    targets = (jnp.arange(k_out, dtype=jnp.float32) + 0.5) / k_out * cum[-1]
+    dc = d32[jnp.clip(jnp.searchsorted(cum, targets), 0, K - 1)]
+    eps = 1e-8 * (1.0 + jnp.abs(dc))
+    dc = jnp.sort(dc + eps * jnp.arange(k_out, dtype=jnp.float32))
+
+    def one_iter(dc, _):
+        g = jnp.searchsorted((dc[:-1] + dc[1:]) * 0.5, d32, side="left")
+        oh = jax.nn.one_hot(g, k_out, dtype=jnp.float32)        # (K, k_out)
+        cnt = (w[:, None] * oh).sum(axis=0)
+        s = (w[:, None] * oh * d32[:, None]).sum(axis=0)
+        new = jnp.where(cnt > 0, s / jnp.maximum(cnt, 1e-6), dc)
+        return jnp.sort(new), None
+
+    dc, _ = jax.lax.scan(one_iter, dc, None, length=iters)
+    fmap = jnp.searchsorted((dc[:-1] + dc[1:]) * 0.5, d32,
+                            side="left").astype(jnp.int32)
+    return dc, fmap
+
+
+# ---------------------------------------------------------------------------
 # initialization
 # ---------------------------------------------------------------------------
 

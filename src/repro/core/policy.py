@@ -351,6 +351,82 @@ def serve_view(params, *, pack4: bool = False, policy: Optional[QuantLike] = Non
     return tree
 
 
+def draft_view(params, *, draft_bits: int = 3, with_report: bool = False):
+    """Coarse low-bit view of a serve tree for self-speculative decoding.
+
+    Re-clusters each :class:`LutqState` leaf's K dictionary entries into
+    ``K' = 2**draft_bits`` coarse entries (weighted 1-D k-means over the
+    *entries*, weighted by assignment usage — see
+    :func:`repro.core.lutq.coarsen_dictionary`) and remaps the *same*
+    stored indices through the monotone fine→coarse map. The draft model
+    therefore shares the target's assignment structure: it costs only a
+    second tiny dictionary plus remapped (and, when K' <= 16,
+    pack4-repacked) indices — no second set of weights. Leaves whose K
+    already fits in ``draft_bits`` — and all fp leaves — are shared by
+    reference (zero extra bytes). ``sid``/``act`` are carried through
+    unchanged so policy re-resolution and frozen activation scales
+    behave identically under the draft view.
+
+    pow2-encoded dictionaries (int8 sign+exponent plane) are decoded to
+    floats before coarsening; coarse centroids are means and generally
+    not powers of two, so the draft leaf always carries a float
+    dictionary (it degrades to the fused/packed ladder, never pow2).
+
+    ``with_report=True`` additionally returns a per-leaf
+    ``{path: {K, draft_K, shared, draft_bytes}}`` accounting of the
+    extra resident bytes the draft view costs (dictionary + indices;
+    shared leaves report 0) — surfaced by the serve CLI and the
+    speculative bench.
+    """
+    from repro.core.lutq import coarsen_dictionary, pow2_decode
+    from repro.kernels.ref import pack4_kin, unpack4_kin
+
+    k_out = 1 << int(draft_bits)
+    report: Dict[str, Dict] = {}
+
+    def conv(path, leaf):
+        if not isinstance(leaf, LutqState):
+            return leaf
+        K = leaf.d.shape[-1]
+        if k_out >= K:
+            if with_report:
+                report["/".join(path)] = {"K": int(K), "draft_K": int(K),
+                                          "shared": True, "draft_bytes": 0}
+            return leaf
+        d = leaf.d
+        if d.dtype == jnp.int8:  # pow2 sign+exponent plane → floats
+            d = pow2_decode(d)
+        a = leaf.a
+        if a.dtype == jnp.uint8:
+            a = unpack4_kin(a)
+        nstack = leaf.d.ndim - 1
+
+        def one(dd, aa):
+            # K=256 assignments live in int8 two's-complement (the
+            # kernels reinterpret the plane); undo the wrap before the
+            # histogram and the fine->coarse gather or the upper half
+            # of the dictionary maps through garbage
+            ai = aa.astype(jnp.int32)
+            ai = jnp.where(ai < 0, ai + 256, ai)
+            dc, fmap = coarsen_dictionary(dd, ai, k_out)
+            return dc, fmap[ai].astype(jnp.int8)
+
+        dc, ac = _vmapped(one, nstack)(d.astype(jnp.float32), a)
+        if k_out <= 16 and ac.ndim >= 2 and ac.shape[-2] % 2 == 0:
+            ac = pack4_kin(ac)
+        out = LutqState(w=None, d=dc, a=ac, sid=leaf.sid, act=leaf.act)
+        if with_report:
+            report["/".join(path)] = {
+                "K": int(K), "draft_K": int(k_out), "shared": False,
+                "draft_bytes": int(dc.nbytes) + int(ac.nbytes)}
+        return out
+
+    tree = map_with_path(conv, params)
+    if with_report:
+        return tree, report
+    return tree
+
+
 def backend_manifest(params, policy: Optional[QuantLike] = None,
                      override: Optional[str] = None) -> Dict[str, Dict]:
     """Per-leaf kernel-backend resolution for an existing (serve) tree.

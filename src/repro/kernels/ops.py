@@ -701,7 +701,7 @@ def paged_attention_reference(q, k_pool, v_pool, block, cache_len, *,
 
 def _paged_attention_sharded(q, k_pool, v_pool, block, cache_len, *,
                              window, scale, k_scale, v_scale, interpret,
-                             mesh):
+                             mesh, vmem_budget_bytes=None):
     """KV-head-sharded kernel dispatch under a ("data","model") mesh.
 
     ``paged_serve_shardings`` lays pool leaves out with the Hkv axis on
@@ -732,7 +732,8 @@ def _paged_attention_sharded(q, k_pool, v_pool, block, cache_len, *,
         ks_l, vs_l = scales if scales else (None, None)
         return paged_attention_tpu(
             q_l, k_l, v_l, blk_l, cl_l, window=window, scale=scale,
-            k_scale=ks_l, v_scale=vs_l, interpret=interpret)
+            k_scale=ks_l, v_scale=vs_l, interpret=interpret,
+            vmem_budget_bytes=vmem_budget_bytes)
 
     in_specs = [P(dp, None, tp, None), P(None, None, tp, None),
                 P(None, None, tp, None), P(dp, None), P(dp)]
@@ -747,7 +748,7 @@ def _paged_attention_sharded(q, k_pool, v_pool, block, cache_len, *,
 
 def paged_attention(q, k_pool, v_pool, block, cache_len, *, window=None,
                     scale=None, k_scale=None, v_scale=None, backend="auto",
-                    interpret=None, mesh=None):
+                    interpret=None, mesh=None, vmem_budget_bytes=None):
     """One-token decode attention over a paged KV pool.
 
     q: (B, 1, H, dh); k_pool/v_pool: (P, page, Hkv, dh); block: (B, NB)
@@ -764,6 +765,9 @@ def paged_attention(q, k_pool, v_pool, block, cache_len, *, window=None,
     only ever trades bytes for bytes) and defaults to the kernel.
     ``mesh`` routes through a shard_map over ("data","model") so
     KV-head-sharded serving keeps shard-local pages.
+    ``vmem_budget_bytes`` caps the kernel's per-row VMEM scratch (see
+    ``paged_attn.vmem_plan``): rows too long for the single-pass scratch
+    run the bit-identical multi-pass split instead of failing.
     """
     interpret = _default_interpret() if interpret is None else interpret
     if backend not in PAGED_BACKENDS:
@@ -785,12 +789,14 @@ def paged_attention(q, k_pool, v_pool, block, cache_len, *, window=None,
     if mesh is not None:
         return _paged_attention_sharded(
             q, k_pool, v_pool, block, cl, window=window, scale=scale,
-            k_scale=k_scale, v_scale=v_scale, interpret=interpret, mesh=mesh)
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret, mesh=mesh,
+            vmem_budget_bytes=vmem_budget_bytes)
     from repro.kernels.paged_attn import paged_attention_tpu
 
     return paged_attention_tpu(
         q, k_pool, v_pool, block, cl, window=window, scale=scale,
-        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret,
+        vmem_budget_bytes=vmem_budget_bytes)
 
 
 def tune_paged_attention(*, batch=4, page=16, pages_per_row=4, hkv=2,

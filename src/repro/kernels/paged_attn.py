@@ -35,11 +35,20 @@ f32 softmax and f32 V accumulation. Masked columns contribute exactly
 ``exp(NEG_INF - m) = 0.0`` and dead pages are zero-filled in scratch,
 so skipped pages are exact no-ops, not approximations.
 
-VMEM note: the scratch holds one row's dequantized K and V
-(``NB*page × dh`` each, per (batch, kv-head) step). That is the right
-trade at the row lengths this repo serves and tests; very long rows on
-real TPUs want a multi-pass split — recorded as open residue in
-ROADMAP.md next to the real-hardware timing pass.
+VMEM note: the single-pass kernel's scratch holds one row's
+dequantized K and V (``NB*page × dh`` each, per (batch, kv-head)
+step). When that outgrows the VMEM budget (``vmem_budget_bytes``,
+default 16 MiB), ``paged_attention_tpu`` switches to a **multi-pass
+split** (``vmem_plan`` decides): phase A streams K page by page and
+accumulates the f32 score row (``G × NB*page`` scratch — no K scratch
+at all), masking + softmaxing in place on the last page; phase B
+streams V in ``dh``-column chunks (``NB*page × dchunk`` scratch) and
+emits the matching output columns with a full-length einsum per chunk.
+Per-page score rows and per-chunk output columns are *independent
+outputs* of the oracle's einsums — concatenation reproduces the
+one-shot result bit-for-bit, unlike a chunked-K accumulation (whose
+f32 partial sums would reorder the reduction). The multi-pass path
+therefore keeps the same bitwise contract as the single-pass kernel.
 """
 from __future__ import annotations
 
@@ -54,6 +63,43 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.nn.attention import NEG_INF
 
 TRASH_PAGE = 0
+
+#: default per-core VMEM budget for the decode kernel's scratch (bytes).
+DEFAULT_VMEM_BUDGET = 16 * 2**20
+
+
+def vmem_plan(nb: int, page: int, dh: int, g: int, *, quant: bool,
+              kv_itemsize: int, budget_bytes: Optional[int] = None) -> dict:
+    """Pick the kernel's scratch layout for one (batch, kv-head) row.
+
+    Single-pass scratch is ``2 * nb*page*dh`` entries (dequantized K and
+    V; bf16 under int8 quant, else the pool dtype). When that exceeds
+    ``budget_bytes`` the plan switches to the multi-pass split: an f32
+    score row (``g × nb*page``) plus a V chunk (``nb*page × dchunk``),
+    with ``dchunk`` the largest divisor of ``dh`` that fits. The chunk
+    never drops below 2 columns: a width-1 output einsum lowers to a
+    differently-ordered reduction (~1-ulp drift against the oracle), so
+    the plan streams at the smallest >= 2 divisor even when that
+    overshoots the budget (best effort rather than refusal).
+
+    Pure host arithmetic so tests can probe the decision without
+    running the kernel."""
+    budget = DEFAULT_VMEM_BUDGET if budget_bytes is None else int(budget_bytes)
+    scr_item = 2 if quant else kv_itemsize
+    single = 2 * nb * page * dh * scr_item
+    if single <= budget:
+        return {"multipass": False, "dchunk": dh, "nd": 1,
+                "single_bytes": single, "multi_bytes": single}
+    score_bytes = 4 * g * nb * page
+    divisors = [dc for dc in range(2, dh + 1) if dh % dc == 0] or [dh]
+    dchunk = divisors[0]  # best effort: smallest bit-stable chunk
+    for dc in reversed(divisors):
+        if score_bytes + nb * page * dc * scr_item <= budget:
+            dchunk = dc
+            break
+    return {"multipass": True, "dchunk": dchunk, "nd": dh // dchunk,
+            "single_bytes": single,
+            "multi_bytes": score_bytes + nb * page * dchunk * scr_item}
 
 
 def _page_live(start: jax.Array, page: int, cl: jax.Array,
@@ -119,6 +165,91 @@ def _decode_kernel(blk_ref, cl_ref, q_ref, k_ref, v_ref, *rest, page, nb,
         o_ref[0, 0] = o[0, 0].astype(o_ref.dtype)
 
 
+def _decode_kernel_multipass(blk_ref, cl_ref, q_ref, k_ref, v_ref, *rest,
+                             page, nb, nd, dchunk, window, scale, quant):
+    """Two-phase VMEM-bounded twin of ``_decode_kernel``.
+
+    Grid step j: j < nb is phase A (stream K page j, write its score
+    columns; mask + softmax the full row in place on the last page);
+    j >= nb is phase B sub-pass ``(j - nb) // nb`` over dh-chunk
+    columns (stream V page ``(j - nb) % nb``'s chunk; on the last page
+    of a sub-pass, one full-length einsum emits the output chunk)."""
+    if quant:
+        ks_ref, vs_ref, o_ref, s_scr, v_scr = rest
+    else:
+        o_ref, s_scr, v_scr = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    cl = cl_ref[b]
+    W = nb * page
+
+    # ---- phase A: scores -------------------------------------------------
+    jA = j
+    startA = jA * page
+    liveA = jnp.logical_and(j < nb, _page_live(startA, page, cl, window))
+
+    @pl.when(liveA)
+    def _score_page():
+        k = k_ref[0, :, 0, :]
+        if quant:
+            k = k.astype(jnp.bfloat16) * ks_ref[0, :, 0][:, None]
+        # the oracle's score einsum restricted to this page's columns:
+        # each column is an independent output of the contraction, so
+        # the concatenated row is bit-identical to the one-shot einsum
+        q = (q_ref[0, 0] * scale)[None, None]            # (1, 1, G, dh)
+        kc = k[None, :, None]                            # (1, page, 1, dh)
+        s = jnp.einsum("bhgd,bkhd->bhgk", q, kc).astype(jnp.float32)
+        s_scr[:, pl.dslice(startA, page)] = s[0, 0]
+
+    @pl.when(jnp.logical_and(j < nb, jnp.logical_not(liveA)))
+    def _zero_score_page():
+        # finite filler: these columns are NEG_INF-masked before softmax
+        s_scr[:, pl.dslice(startA, page)] = jnp.zeros(
+            (s_scr.shape[0], page), jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _softmax():
+        s = s_scr[...][None, None]                       # (1, 1, G, W)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)[0]
+        valid = pos < cl
+        if window is not None:
+            valid &= pos >= cl - window
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        s_scr[...] = p[0, 0]                             # probs, in place
+
+    # ---- phase B: output chunks ------------------------------------------
+    t = jnp.maximum(j - nb, 0)
+    sc = t // nb
+    jp = t % nb
+    startB = jp * page
+    liveB = jnp.logical_and(j >= nb, _page_live(startB, page, cl, window))
+
+    @pl.when(liveB)
+    def _copy_v_chunk():
+        v = v_ref[0, :, 0, :]                            # (page, dchunk)
+        if quant:
+            v = v.astype(jnp.bfloat16) * vs_ref[0, :, 0][:, None]
+        v_scr[pl.dslice(startB, page), :] = v.astype(v_scr.dtype)
+
+    @pl.when(jnp.logical_and(j >= nb, jnp.logical_not(liveB)))
+    def _zero_v_chunk():
+        v_scr[pl.dslice(startB, page), :] = jnp.zeros((page, dchunk),
+                                                      v_scr.dtype)
+
+    @pl.when(jnp.logical_and(j >= nb, jp == nb - 1))
+    def _emit_chunk():
+        # full-length output einsum over this chunk's dh columns — the
+        # oracle's einsum restricted to independent output columns, so
+        # no reduction is reordered (unlike chunking over K)
+        p = s_scr[...][None, None]                       # (1, 1, G, W)
+        vc = v_scr[...][None, :, None]                   # (1, W, 1, dchunk)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(jnp.float32),
+                       vc.astype(jnp.float32))
+        o_ref[0, 0, :, pl.dslice(sc * dchunk, dchunk)] = (
+            o[0, 0].astype(o_ref.dtype))
+
+
 def paged_attention_tpu(
     q: jax.Array,
     k_pool: jax.Array,
@@ -131,6 +262,7 @@ def paged_attention_tpu(
     k_scale: Optional[jax.Array] = None,
     v_scale: Optional[jax.Array] = None,
     interpret: bool = False,
+    vmem_budget_bytes: Optional[int] = None,
 ) -> jax.Array:
     """One-token paged decode attention through the block table.
 
@@ -139,6 +271,11 @@ def paged_attention_tpu(
     block: (B, NB) int32 block table; cache_len: (B,) or scalar int32.
     Returns (B, 1, H, dh) in q.dtype, bit-identical to
     ``decode_attention(q, gather_pages(...), ...)``.
+
+    ``vmem_budget_bytes`` bounds per-row scratch (default
+    ``DEFAULT_VMEM_BUDGET``); rows whose single-pass scratch outgrows it
+    run the multi-pass split picked by :func:`vmem_plan` — same bitwise
+    contract, thinner VMEM footprint.
     """
     B, _, H, dh = q.shape
     _, page, Hkv, _ = k_pool.shape
@@ -150,6 +287,16 @@ def paged_attention_tpu(
     cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
     qr = q.reshape(B, Hkv, G, dh)
     scr_dtype = jnp.bfloat16 if quant else k_pool.dtype
+    plan = vmem_plan(NB, page, dh, G, quant=quant,
+                     kv_itemsize=k_pool.dtype.itemsize,
+                     budget_bytes=vmem_budget_bytes)
+    if plan["multipass"]:
+        return _paged_attention_multipass(
+            qr, k_pool, v_pool, block, cl, page=page, nb=NB,
+            dchunk=plan["dchunk"], nd=plan["nd"], window=window,
+            scale=scale, k_scale=k_scale, v_scale=v_scale,
+            scr_dtype=scr_dtype, interpret=interpret
+        ).reshape(B, 1, H, dh)
 
     def page_map(b, h, j, blk, cln):
         live = _page_live(j * page, page, cln[b], window)
@@ -190,6 +337,78 @@ def paged_attention_tpu(
         interpret=interpret,
     )(block, cl, *operands)
     return out.reshape(B, 1, H, dh)
+
+
+def _paged_attention_multipass(qr, k_pool, v_pool, block, cl, *, page, nb,
+                               dchunk, nd, window, scale, k_scale, v_scale,
+                               scr_dtype, interpret):
+    """Grid/spec assembly for the multi-pass kernel.
+
+    Grid (B, Hkv, nb*(1+nd)): the first nb steps stream K pages (phase
+    A), the remaining nb*nd stream V dh-chunks (phase B). Off-phase
+    operands park on the trash page / chunk 0 so consecutive grid steps
+    re-request the same block and the pipeline never streams them."""
+    B, Hkv, G, dh = qr.shape
+    quant = k_scale is not None
+
+    def k_map(b, h, j, blk, cln):
+        live = jnp.logical_and(j < nb,
+                               _page_live(j * page, page, cln[b], window))
+        phys = blk[b, jnp.minimum(j, nb - 1)]
+        return (jnp.where(live, phys, TRASH_PAGE), 0, h, 0)
+
+    def ks_map(b, h, j, blk, cln):
+        live = jnp.logical_and(j < nb,
+                               _page_live(j * page, page, cln[b], window))
+        phys = blk[b, jnp.minimum(j, nb - 1)]
+        return (jnp.where(live, phys, TRASH_PAGE), 0, h)
+
+    def v_map(b, h, j, blk, cln):
+        t = jnp.maximum(j - nb, 0)
+        sc, jp = t // nb, t % nb
+        live = jnp.logical_and(j >= nb,
+                               _page_live(jp * page, page, cln[b], window))
+        return (jnp.where(live, blk[b, jp], TRASH_PAGE), 0, h,
+                jnp.where(live, sc, 0))
+
+    def vs_map(b, h, j, blk, cln):
+        t = jnp.maximum(j - nb, 0)
+        sc, jp = t // nb, t % nb
+        live = jnp.logical_and(j >= nb,
+                               _page_live(jp * page, page, cln[b], window))
+        return (jnp.where(live, blk[b, jp], TRASH_PAGE), 0, h)
+
+    def head_map(b, h, j, blk, cln):
+        return (b, h, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, dh), head_map),
+        pl.BlockSpec((1, page, 1, dh), k_map),
+        pl.BlockSpec((1, page, 1, dchunk), v_map),
+    ]
+    operands = [qr, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), ks_map),
+                     pl.BlockSpec((1, page, 1), vs_map)]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb * (1 + nd)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, dh), head_map),
+        scratch_shapes=[pltpu.VMEM((G, nb * page), jnp.float32),
+                        pltpu.VMEM((nb * page, dchunk), scr_dtype)],
+    )
+    kernel = functools.partial(_decode_kernel_multipass, page=page, nb=nb,
+                               nd=nd, dchunk=dchunk, window=window,
+                               scale=scale, quant=quant)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), qr.dtype),
+        interpret=interpret,
+    )(block, cl, *operands)
 
 
 def pages_read_per_step(cache_len: int, page: int, nb: int,

@@ -155,7 +155,9 @@ def run_engine(params, cfg, *, capacity: int, n_requests: int,
                prompt_len: int, gen: int, seed: int = 0,
                temperature: float = 0.0, mesh=None,
                kv_pages=None, page_size: int = 64,
-               prefix_cache: bool = True, requests=None):
+               prefix_cache: bool = True, requests=None,
+               speculative: int = 0, draft_bits: int = 3,
+               draft_params=None):
     """Serve a ragged queue through the continuous-batching engine and
     return its stats dict (shared by the CLI and the example, so both
     report identical fields).
@@ -167,11 +169,13 @@ def run_engine(params, cfg, *, capacity: int, n_requests: int,
     from repro.runtime.engine import synthetic_requests
 
     src_len = prompt_len if cfg.family == "encdec" else 0
-    eng = Engine(params, cfg, capacity=capacity, max_len=prompt_len + gen,
+    eng = Engine(params, cfg, capacity=capacity,
+                 max_len=prompt_len + gen + int(speculative),
                  src_len=src_len, temperature=temperature,
                  rng=jax.random.PRNGKey(seed), mesh=mesh,
                  kv_pages=kv_pages, page_size=page_size,
-                 prefix_cache=prefix_cache)
+                 prefix_cache=prefix_cache, speculative=speculative,
+                 draft_bits=draft_bits, draft_params=draft_params)
     if requests is None:
         requests = synthetic_requests(cfg, n_requests, max_prompt=prompt_len,
                                       max_new=gen, seed=seed, src_len=src_len)
@@ -205,6 +209,16 @@ def format_engine_stats(stats) -> str:
                     f"{stats['prefix_queries']} page hits "
                     f"({stats['prefix_hit_rate']*100:.0f}%), "
                     f"{stats['prefix_evictions']} evictions")
+    if stats.get("speculative_k"):
+        out += (f"\n[serve] speculative: k={stats['speculative_k']} "
+                f"draft_bits={stats['draft_bits']} | acceptance "
+                f"{stats['acceptance_rate']*100:.0f}% | "
+                f"{stats['spec_tokens_per_round']:.2f} tok/round | "
+                f"{stats['tokens_per_engine_step']:.2f} tok/engine-step")
+        if "draft_extra_bytes" in stats:
+            out += (f" | draft view +{stats['draft_extra_bytes']/2**10:.1f} "
+                    f"KiB ({stats['draft_coarse_leaves']} coarse, "
+                    f"{stats['draft_shared_leaves']} shared leaves)")
     return out
 
 
@@ -247,6 +261,21 @@ def main(argv=None):
                     action=argparse.BooleanOptionalAction,
                     help="share identical prompt-prefix pages across "
                          "requests (--no-prefix-cache disables)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per "
+                         "round from a coarsened view of the same LUT-Q "
+                         "weights, verify with one target forward (greedy "
+                         "output token-identical; requires --act-bits 32 — "
+                         "dynamic activation quant couples draft and verify "
+                         "rows; see docs/serving.md)")
+    ap.add_argument("--draft-bits", type=int, default=3,
+                    help="draft-view dictionary size = 2^draft_bits entries "
+                         "per leaf (leaves already at or below this share "
+                         "their tables with the target, costing 0 extra "
+                         "bytes)")
+    ap.add_argument("--act-bits", type=int, default=8, choices=(8, 32),
+                    help="activation fake-quant bits for the serve regime "
+                         "(32 disables; required for --speculative)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve SPMD on a (data, model) host mesh, e.g. 2x4 "
                          "(indices tensor-parallel on the model axis, batch/"
@@ -287,13 +316,18 @@ def main(argv=None):
 
         ckpt_policy = ckpt_mod.load_policy(args.ckpt_dir)
     if ckpt_policy is not None:
-        cfg = cfg.replace(quant=ckpt_policy, act_bits=8)
+        cfg = cfg.replace(quant=ckpt_policy, act_bits=args.act_bits)
     elif args.quant_policy:
-        cfg = cfg.replace(quant=get_policy(args.quant_policy), act_bits=8)
+        cfg = cfg.replace(quant=get_policy(args.quant_policy),
+                          act_bits=args.act_bits)
     else:
         cfg = cfg.replace(quant=QuantSpec(bits=args.quant_bits, min_size=1024),
-                          act_bits=8)
+                          act_bits=args.act_bits)
     cfg = cfg.replace(kernel_backend=args.kernel_backend)
+    if args.speculative:
+        ok, why = api.speculative_supported(cfg)
+        if not ok:
+            raise SystemExit(f"[serve] --speculative refused: {why}")
 
     mesh = None
     if args.mesh:
@@ -384,17 +418,33 @@ def main(argv=None):
     if mesh is not None:
         print(shard_report(sparams, mesh))
 
+    dparams = None
+    if args.speculative:
+        dparams, report = api.draft_view(sparams, draft_bits=args.draft_bits,
+                                         with_report=True)
+        extra = sum(v["draft_bytes"] for v in report.values())
+        n_shared = sum(1 for v in report.values() if v["shared"])
+        print(f"[serve] draft view (2^{args.draft_bits} entries): "
+              f"+{extra/2**10:.1f} KiB over the target weights "
+              f"({len(report) - n_shared} coarse leaves, {n_shared} shared)")
+        for path, v in sorted(report.items()):
+            if not v["shared"]:
+                print(f"[serve]   draft {path}: K {v['K']} -> "
+                      f"{v['draft_K']}, +{v['draft_bytes']/2**10:.1f} KiB")
+
     if args.engine:
         stats = run_engine(sparams, cfg, capacity=args.max_batch,
                            n_requests=args.queue, prompt_len=args.prompt_len,
                            gen=args.gen, seed=args.seed, mesh=mesh,
                            kv_pages=args.kv_pages, page_size=args.page_size,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           speculative=args.speculative,
+                           draft_bits=args.draft_bits, draft_params=dparams)
         print(format_engine_stats(stats))
         return 0
 
     B, P = args.batch, args.prompt_len
-    max_len = P + args.gen
+    max_len = P + args.gen + args.speculative
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
     batch = {"tokens": toks}
     if cfg.family == "encdec":
@@ -405,10 +455,17 @@ def main(argv=None):
             jax.random.PRNGKey(3), (B, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
 
     gen, stats = generate(sparams, cfg, batch, steps=args.gen,
-                          max_len=max_len, return_stats=True, mesh=mesh)
+                          max_len=max_len, return_stats=True, mesh=mesh,
+                          speculative=args.speculative,
+                          draft_bits=args.draft_bits, draft_params=dparams)
     print(f"[serve] prefill {P} toks x{B}: {stats['t_prefill_s']*1e3:.1f} ms | "
           f"decode[{stats['backend']}]: {stats['decode_tok_s']:.1f} tok/s | "
           f"sample: {np.asarray(gen[0])[:8]}")
+    if args.speculative:
+        print(f"[serve] speculative: k={args.speculative} acceptance "
+              f"{stats['acceptance_rate']*100:.0f}% | "
+              f"{stats['spec_tokens_per_round']:.2f} tok/round | "
+              f"{stats['tokens_per_engine_step']:.2f} tok/engine-step")
     return 0
 
 

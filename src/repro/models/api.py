@@ -129,7 +129,8 @@ def calibrate(params, cfg: ModelConfig, batch, *, lengths=None):
 
 
 def serve_state(key, cfg: ModelConfig, *, pack4: bool = False, mesh=None,
-                with_manifest: bool = False, calib_batch=None):
+                with_manifest: bool = False, calib_batch=None,
+                draft_bits: Optional[int] = None):
     """One-call deployment state: init -> quantize -> serve_view.
 
     Returns ``(serve_params, axes)`` (plus the backend manifest with
@@ -142,6 +143,11 @@ def serve_state(key, cfg: ModelConfig, *, pack4: bool = False, mesh=None,
     ``calib_batch``: optional prefill-shaped batch run through
     :func:`calibrate` before the serve view, freezing activation scales
     for ``act_frozen`` rules (the ``serving_pow2`` preset).
+
+    ``draft_bits``: additionally build the coarse speculative-decoding
+    view (:func:`draft_view`) of the serve tree and append it as the
+    LAST element of the returned tuple — existing unpackings stay valid
+    when the kwarg is omitted.
     """
     from repro.core.policy import serve_view
 
@@ -151,9 +157,24 @@ def serve_state(key, cfg: ModelConfig, *, pack4: bool = False, mesh=None,
         qparams = calibrate(qparams, cfg, calib_batch)
     out = serve_view(qparams, pack4=pack4, policy=resolved_policy(cfg),
                      with_manifest=with_manifest, mesh=mesh, axes=axes)
+    tree = out[0] if with_manifest else out
+    res = [tree, axes]
     if with_manifest:
-        return out[0], axes, out[1]
-    return out, axes
+        res.append(out[1])
+    if draft_bits is not None:
+        res.append(draft_view(tree, draft_bits=draft_bits))
+    return tuple(res)
+
+
+def draft_view(params, *, draft_bits: int = 3, with_report: bool = False):
+    """Coarse ``2**draft_bits``-entry view of a serve tree for
+    self-speculative decoding (see :func:`repro.core.policy.draft_view`):
+    same assignment indices, re-clustered dictionary — the draft model
+    costs only a second tiny dictionary plus remapped/packed indices.
+    fp trees pass through unchanged (draft == target)."""
+    from repro.core.policy import draft_view as _draft_view
+
+    return _draft_view(params, draft_bits=draft_bits, with_report=with_report)
 
 
 def loss_fn(params, cfg: ModelConfig, batch):
@@ -254,6 +275,61 @@ def paged_decode_step(params, cfg: ModelConfig, token, cache, mesh=None):
         return m_encdec.encdec_paged_decode_step(params, cfg, token, cache,
                                                  mesh=mesh)
     return m_lm.lm_paged_decode_step(params, cfg, token, cache, mesh=mesh)
+
+
+def speculative_supported(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Whether self-speculative decoding can serve this config.
+
+    Speculation needs (a) rollback to be a pure cache-length truncation
+    — recurrent state (ssm/hybrid) and MLA's latent cache cannot rewind
+    a rejected token — and (b) the k+1-token verify window to be
+    row/position-independent so one batched forward is bitwise identical
+    to chained single-token steps: MoE routing/capacity couples the
+    flattened token batch, and dynamic activation quantization takes
+    per-*tensor* fake-quant scales that couple draft and verify rows
+    (exactly the packed-prefill coupling PR 9 found). Returns
+    ``(ok, reason)`` — the Engine raises the reason.
+    """
+    if cfg.act_bits < 32:
+        return False, ("speculative decoding refused under activation "
+                       "quantization: per-tensor act scales couple draft "
+                       "and verify rows (act_bits < 32)")
+    if cfg.family == "encdec":
+        return True, ""
+    if cfg.n_experts > 0 or cfg.family == "moe":
+        return False, ("speculative decoding unsupported with MoE: "
+                       "routing/capacity couples the verify-window token "
+                       "batch, breaking per-position parity")
+    if cfg.family not in ("dense", "vlm"):
+        return False, (f"speculative decoding unsupported for family="
+                       f"{cfg.family}: recurrent/hybrid state cannot rewind "
+                       "rejected tokens")
+    if cfg.use_mla:
+        return False, ("speculative decoding unsupported with MLA: the "
+                       "latent cache is not length-truncatable bitwise")
+    return True, ""
+
+
+def decode_window(params, cfg: ModelConfig, tokens, cache):
+    """Verify-window forward: (B, W) tokens against a cache at length n.
+
+    Returns ``(logits (B, W, V), cache)`` with ``cache["len"] = n + W``
+    and positions n..n+W-1 holding the window's KV — bitwise identical
+    to W chained :func:`decode_step` calls (weight matmuls are batched
+    over the window, ONE weight stream; attention is replayed
+    per-position against the incrementally scattered cache).
+    """
+    if cfg.family == "encdec":
+        return m_encdec.encdec_decode_window(params, cfg, tokens, cache)
+    return m_lm.lm_decode_window(params, cfg, tokens, cache)
+
+
+def paged_decode_window(params, cfg: ModelConfig, tokens, cache, mesh=None):
+    """Paged-pool variant of :func:`decode_window`."""
+    if cfg.family == "encdec":
+        return m_encdec.encdec_paged_decode_window(params, cfg, tokens, cache,
+                                                   mesh=mesh)
+    return m_lm.lm_paged_decode_window(params, cfg, tokens, cache, mesh=mesh)
 
 
 def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:

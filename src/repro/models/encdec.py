@@ -232,6 +232,59 @@ def encdec_decode_step(params, cfg: ModelConfig, token, cache):
     return logits, out
 
 
+def _cross_attn_window(p, cfg: ModelConfig, x, k, v, *, src_len=None):
+    """W-token cross-attention for the speculative verify window: the
+    q projection batches over the window; attention replays the S==1
+    ``decode_attention`` branch of :func:`cross_attn_apply` per position
+    so each row is bitwise identical to the single-token path (flash
+    attention would not be)."""
+    B, W, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = linear_apply(p["q"], x, backend=cfg.kernel_backend,
+                     act_bits=cfg.act_bits).reshape(B, W, cfg.n_heads, dh)
+    if src_len is None:
+        src_len = jnp.full((B,), k.shape[1], jnp.int32)
+    o = jnp.concatenate(
+        [decode_attention(q[:, i:i + 1], k, v, src_len) for i in range(W)],
+        axis=1)
+    return linear_apply(p["o"], o.reshape(B, W, -1),
+                        backend=cfg.kernel_backend, act_bits=cfg.act_bits)
+
+
+def encdec_decode_window(params, cfg: ModelConfig, tokens, cache):
+    """tokens: (B, W) -> (logits (B, W, V), cache at len+W) — the
+    speculative verify window (see models/lm.py for the parity
+    argument: batched weight matmuls, per-position attention replay)."""
+    from repro.models.lm import attn_decode_window
+
+    h = embedding_apply(params["embed"], tokens,
+                        dtype=cfg.dtype) * (cfg.d_model ** 0.5)
+    cache_len = cache["len"]
+    src_len = cache.get("src_len")
+    W = tokens.shape[1]
+
+    def body(h, xs):
+        lp, lc = xs
+        a, new_sc = attn_decode_window(lp["attn"], cfg,
+                                       rmsnorm_apply(lp["ln1"], h), lc,
+                                       cache_len)
+        h = h + a
+        h = h + _cross_attn_window(lp["xattn"], cfg,
+                                   rmsnorm_apply(lp["ln_x"], h),
+                                   lc["xk"], lc["xv"], src_len=src_len)
+        h = h + mlp_apply(lp["mlp"], cfg, rmsnorm_apply(lp["ln2"], h))
+        return h, {**new_sc, "xk": lc["xk"], "xv": lc["xv"]}
+
+    h, new_caches = jax.lax.scan(body, h, (params["decoder"], cache["layers"]))
+    logits = embedding_logits(params["embed"],
+                              rmsnorm_apply(params["final_norm"], h),
+                              backend=cfg.kernel_backend)
+    out = {"layers": new_caches, "len": cache_len + W}
+    if src_len is not None:
+        out["src_len"] = src_len
+    return logits, out
+
+
 # ---------------------------------------------------------------------------
 # paged serving: self-attn KV in the page pool, cross KV dense per slot
 # ---------------------------------------------------------------------------
@@ -297,6 +350,55 @@ def encdec_paged_decode_step(params, cfg: ModelConfig, token, cache,
                               backend=cfg.kernel_backend)
     out = dict(cache)
     out.update(pool=new_pools, len=cache_len + 1)
+    return logits, out
+
+
+def encdec_paged_decode_window(params, cfg: ModelConfig, tokens, cache,
+                               mesh=None):
+    """tokens: (B, W) -> (logits (B, W, V), cache at len+W) — paged
+    speculative verify window (self-attn scatters + attends through the
+    block table per position; cross-attn replays per position)."""
+    from repro.kernels.ops import paged_attention
+
+    h = embedding_apply(params["embed"], tokens,
+                        dtype=cfg.dtype) * (cfg.d_model ** 0.5)
+    cache_len, block, src_len = cache["len"], cache["block"], cache["src_len"]
+    B, W = tokens.shape
+    pos = (jnp.broadcast_to(cache_len.reshape(-1), (B,)).reshape(B, 1)
+           + jnp.arange(W)[None, :])
+
+    def body(h, xs):
+        lp, lpool, xk, xv = xs
+        a_in = rmsnorm_apply(lp["ln1"], h)
+        q, k, v = _qkv(lp["attn"], cfg, a_in, pos)
+        new_pool = dict(lpool)
+        outs = []
+        for i in range(W):
+            idx = pos[:, i]
+            new_pool["k"] = scatter_token_pages(new_pool["k"], block, idx,
+                                                k[:, i])
+            new_pool["v"] = scatter_token_pages(new_pool["v"], block, idx,
+                                                v[:, i])
+            outs.append(paged_attention(q[:, i:i + 1], new_pool["k"],
+                                        new_pool["v"], block, idx + 1,
+                                        mesh=mesh))
+        o = jnp.concatenate(outs, axis=1)
+        a = linear_apply(lp["attn"]["o"], o.reshape(B, W, -1),
+                         backend=cfg.kernel_backend, act_bits=cfg.act_bits)
+        h = h + a
+        h = h + _cross_attn_window(lp["xattn"], cfg,
+                                   rmsnorm_apply(lp["ln_x"], h), xk, xv,
+                                   src_len=src_len)
+        h = h + mlp_apply(lp["mlp"], cfg, rmsnorm_apply(lp["ln2"], h))
+        return h, new_pool
+
+    h, new_pools = jax.lax.scan(
+        body, h, (params["decoder"], cache["pool"], cache["xk"], cache["xv"]))
+    logits = embedding_logits(params["embed"],
+                              rmsnorm_apply(params["final_norm"], h),
+                              backend=cfg.kernel_backend)
+    out = dict(cache)
+    out.update(pool=new_pools, len=cache_len + W)
     return logits, out
 
 

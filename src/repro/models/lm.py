@@ -467,6 +467,112 @@ def lm_decode_step(params, cfg: ModelConfig, token, cache):
 
 
 # ---------------------------------------------------------------------------
+# speculative verify window (multi-token decode; see runtime/speculative.py)
+# ---------------------------------------------------------------------------
+#
+# The verify pass of self-speculative decoding runs W = k+1 tokens
+# through ONE forward — the whole point: the target weights stream from
+# HBM once per round instead of once per token. Weight matmuls (embed,
+# qkv, o-proj, mlp, readout) batch over the window; XLA matmul rows are
+# independent, so each window row is bit-identical to the (B, 1, ...)
+# single-token call (the same row-independence argument the packed
+# prefill path pins in its parity suite). Attention cannot batch — each
+# window position attends a cache that includes the positions before it
+# — so it replays the decode path per position: scatter position i's KV
+# entry, then run the exact ``decode_attention`` sequence with that
+# position's cache_len. The unrolled python loop is W iterations of
+# O(1)-token work (W = k+1, small by construction).
+
+
+def attn_decode_window(p, cfg: ModelConfig, x, cache, cache_len):
+    """W-token decode window. x: (B, W, D); cache_len: (B,) base length.
+
+    Writes positions cache_len..cache_len+W-1 into the cache (ring slots
+    under SWA — callers snapshot/restore rolled-over columns, see
+    runtime/speculative.py) and returns per-position attention outputs,
+    each bitwise identical to W chained :func:`attn_decode` calls.
+    """
+    B, W, _ = x.shape
+    pos = (jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,))
+           .reshape(B, 1) + jnp.arange(W)[None, :])
+    q, k, v = _qkv(p, cfg, x, pos)
+    eff = cache["k"].shape[1]
+    quant = cfg.kv_cache_bits == 8
+    if quant:
+        k, k_s = _kv_quant(k, 8)
+        v, v_s = _kv_quant(v, 8)
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))
+    ring = cfg.window is not None and eff <= cfg.window
+    kc, vc = cache["k"], cache["v"]
+    ks = cache.get("k_scale")
+    vs = cache.get("v_scale")
+    outs = []
+    for i in range(W):
+        idx = pos[:, i]
+        slot = idx % eff if ring else idx
+        kc = upd(kc, k[:, i:i + 1], slot)
+        vc = upd(vc, v[:, i:i + 1], slot)
+        if quant:
+            ks = upd(ks, k_s[:, i:i + 1], slot)
+            vs = upd(vs, v_s[:, i:i + 1], slot)
+            kd = kc.astype(jnp.bfloat16) * ks[..., None]
+            vd = vc.astype(jnp.bfloat16) * vs[..., None]
+        else:
+            kd, vd = kc, vc
+        if ring:
+            o = decode_attention(q[:, i:i + 1], kd, vd,
+                                 jnp.minimum(idx + 1, eff))
+        else:
+            o = decode_attention(q[:, i:i + 1], kd, vd, idx + 1,
+                                 window=cfg.window)
+        outs.append(o)
+    o = jnp.concatenate(outs, axis=1)  # (B, W, H, dh)
+    out = linear_apply(p["o"], o.reshape(B, W, -1),
+                       backend=cfg.kernel_backend, act_bits=cfg.act_bits)
+    new_cache = {"k": kc, "v": vc}
+    if quant:
+        new_cache.update(k_scale=ks, v_scale=vs)
+    return out, new_cache
+
+
+def layer_decode_window(p, cfg: ModelConfig, h, cache, cache_len):
+    """Window twin of :func:`layer_decode` (plain attention + MLP only —
+    ``api.speculative_supported`` gates out MLA/MoE upstream)."""
+    a_in = rmsnorm_apply(p["ln1"], h)
+    a_out, new_cache = attn_decode_window(p["attn"], cfg, a_in, cache,
+                                          cache_len)
+    h = h + a_out
+    m_in = rmsnorm_apply(p["ln2"], h)
+    return h + mlp_apply(p["mlp"], cfg, m_in), new_cache
+
+
+def lm_decode_window(params, cfg: ModelConfig, tokens, cache):
+    """tokens: (B, W) -> (logits (B, W, V), cache at len+W)."""
+    h = _embed_tokens(params, cfg, tokens)
+    cache_len = cache["len"]
+    W = tokens.shape[1]
+    if cfg.first_dense:
+        new_pc = {}
+        for i in range(cfg.first_dense):
+            h, c = layer_decode_window(params["prefix_layers"][str(i)], cfg, h,
+                                       cache["prefix_layers"][str(i)],
+                                       cache_len)
+            new_pc[str(i)] = c
+
+    def body(h, xs):
+        layer_p, layer_c = xs
+        h, new_c = layer_decode_window(layer_p, cfg, h, layer_c, cache_len)
+        return h, new_c
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+    logits = _readout(params, cfg, h)
+    out = {"layers": new_caches, "len": cache_len + W}
+    if cfg.first_dense:
+        out["prefix_layers"] = new_pc
+    return logits, out
+
+
+# ---------------------------------------------------------------------------
 # paged serving (block-table KV; see runtime/paged_kv.py + docs/serving.md)
 # ---------------------------------------------------------------------------
 #
@@ -589,6 +695,67 @@ def lm_paged_decode_step(params, cfg: ModelConfig, token, cache, mesh=None):
     h, new_pools = jax.lax.scan(body, h, (params["layers"], cache["pool"]))
     logits = _readout(params, cfg, h)
     return logits, {"pool": new_pools, "block": block, "len": cache_len + 1}
+
+
+def paged_attn_decode_window(p, cfg: ModelConfig, x, pool, block, cache_len,
+                             mesh=None):
+    """W-token window against the paged pool (one layer) — the paged
+    twin of :func:`attn_decode_window`: batched qkv, then per position
+    scatter-through-the-block-table + ``ops.paged_attention`` replay.
+    Dead slots scatter to the trash page exactly as single-token decode
+    does."""
+    from repro.kernels.ops import paged_attention
+
+    B, W, _ = x.shape
+    pos = (jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (B,))
+           .reshape(B, 1) + jnp.arange(W)[None, :])
+    q, k, v = _qkv(p, cfg, x, pos)
+    quant = _paged_quant(cfg)
+    if quant:
+        k, k_s = _kv_quant(k, 8)
+        v, v_s = _kv_quant(v, 8)
+    new_pool = dict(pool)
+    outs = []
+    for i in range(W):
+        idx = pos[:, i]
+        new_pool["k"] = scatter_token_pages(new_pool["k"], block, idx, k[:, i])
+        new_pool["v"] = scatter_token_pages(new_pool["v"], block, idx, v[:, i])
+        if quant:
+            new_pool["k_scale"] = scatter_token_pages(
+                new_pool["k_scale"], block, idx, k_s[:, i])
+            new_pool["v_scale"] = scatter_token_pages(
+                new_pool["v_scale"], block, idx, v_s[:, i])
+        o = paged_attention(q[:, i:i + 1], new_pool["k"], new_pool["v"],
+                            block, idx + 1, window=cfg.window,
+                            k_scale=new_pool.get("k_scale"),
+                            v_scale=new_pool.get("v_scale"), mesh=mesh)
+        outs.append(o)
+    o = jnp.concatenate(outs, axis=1)
+    out = linear_apply(p["o"], o.reshape(B, W, -1),
+                       backend=cfg.kernel_backend, act_bits=cfg.act_bits)
+    return out, new_pool
+
+
+def lm_paged_decode_window(params, cfg: ModelConfig, tokens, cache,
+                           mesh=None):
+    """tokens: (B, W) -> (logits (B, W, V), new paged cache at len+W)."""
+    h = _embed_tokens(params, cfg, tokens)
+    cache_len, block = cache["len"], cache["block"]
+    W = tokens.shape[1]
+
+    def body(h, xs):
+        layer_p, layer_pool = xs
+        a_in = rmsnorm_apply(layer_p["ln1"], h)
+        a_out, new_pool = paged_attn_decode_window(
+            layer_p["attn"], cfg, a_in, layer_pool, block, cache_len,
+            mesh=mesh)
+        h = h + a_out
+        m_in = rmsnorm_apply(layer_p["ln2"], h)
+        return h + mlp_apply(layer_p["mlp"], cfg, m_in), new_pool
+
+    h, new_pools = jax.lax.scan(body, h, (params["layers"], cache["pool"]))
+    logits = _readout(params, cfg, h)
+    return logits, {"pool": new_pools, "block": block, "len": cache_len + W}
 
 
 def lm_paged_prefill_chunk(params, cfg: ModelConfig, tokens, ws, start,

@@ -51,6 +51,7 @@ from repro.runtime.serving import (adapt_prefill_cache, paged_chunk_fn,
                                    paged_encdec_splice_fn, paged_hydrate_fn,
                                    paged_packed_fn, paged_splice_fn,
                                    prefill_fn)
+from repro.runtime.speculative import spec_step_fn
 
 
 def _batch_axes(cfg: ModelConfig, max_len: int, src_len: int):
@@ -280,6 +281,14 @@ class Engine:
     batching composes with tensor parallelism (params should already be
     placed via ``distributed.sharding.shard_serve_params``). Results
     are token-identical to an un-meshed engine.
+    ``speculative``: draft block length k (0 disables). Each engine step
+    becomes one speculative round: a coarsened ``draft_bits`` view of
+    the same LUT-Q weights (``api.draft_view`` — or an explicit
+    ``draft_params``) proposes k tokens, ONE target forward over the
+    k+1 window verifies them. Greedy rounds are token-identical to
+    non-speculative serving; temperature uses rejection sampling
+    (distribution-exact, not bitwise). Requires k extra tokens of cache
+    headroom per request (``submit`` enforces it).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, capacity: int = 8,
@@ -289,7 +298,8 @@ class Engine:
                  mesh=None, kv_pages: Optional[int] = None,
                  page_size: int = 64, prefix_cache: bool = True,
                  max_chunk: int = 256, prefill_pack: bool = True,
-                 warmup: bool = True):
+                 warmup: bool = True, speculative: int = 0,
+                 draft_bits: int = 3, draft_params=None):
         if backend is not None:
             cfg = cfg.replace(kernel_backend=backend)
         self.cfg = cfg
@@ -314,6 +324,40 @@ class Engine:
         # prefix-layer caches) silently keep the slot path behind the
         # same API — `stats()["paged"]` reports which path ran.
         self.paged = kv_pages is not None and api.paged_supported(cfg)
+
+        # self-speculative decoding: a coarsened view of the SAME LUT-Q
+        # weights drafts k tokens per round, one verify window checks
+        # them (runtime/speculative.py). Greedy rounds are token-
+        # identical to non-speculative serving; the refusal reasons
+        # (activation quant, recurrent state, MLA, MoE, meshes) are
+        # exactness gates, not missing plumbing.
+        self.spec_k = int(speculative)
+        self.draft_bits = int(draft_bits)
+        self.draft_report: Optional[Dict[str, Dict]] = None
+        self.n_spec_rounds = 0
+        self._spec_acc_tok = 0    # accepted tokens over live slot-rounds
+        self._spec_acc_draft = 0  # accepted DRAFT tokens (excl. bonus)
+        self._spec_live = 0       # live slot-rounds
+        if self.spec_k:
+            ok, why = api.speculative_supported(cfg)
+            if not ok:
+                raise ValueError(why)
+            if mesh is not None:
+                raise ValueError(
+                    "speculative decoding does not compose with SPMD "
+                    "meshes yet (per-slot rewind vs sharded caches); run "
+                    "speculative engines un-meshed")
+            if not self.paged and cfg.window is not None:
+                eff = min(self.max_len, cfg.window)
+                if self.spec_k + 1 > eff:
+                    raise ValueError(
+                        f"speculative k={self.spec_k} needs k+1 <= ring "
+                        f"width {eff} (verify window must fit in the SWA "
+                        "ring)")
+            if draft_params is None:
+                draft_params, self.draft_report = api.draft_view(
+                    params, draft_bits=self.draft_bits, with_report=True)
+        self.draft_params = draft_params if self.spec_k else None
         self._chunking: Optional[Dict[str, Any]] = None
         self.n_chunk_calls = 0
         self.n_packed_groups = 0
@@ -408,10 +452,13 @@ class Engine:
         prompt = np.asarray(jax.device_get(tokens), np.int32).reshape(-1)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
-        if len(prompt) + int(max_new) + self.prefix > self.max_len:
+        if (len(prompt) + int(max_new) + self.prefix + self.spec_k
+                > self.max_len):
+            extra = (f" (+{self.spec_k} speculative headroom)"
+                     if self.spec_k else "")
             raise ValueError(
-                f"prompt {len(prompt)} + max_new {max_new} exceeds engine "
-                f"max_len {self.max_len - self.prefix}")
+                f"prompt {len(prompt)} + max_new {max_new}{extra} exceeds "
+                f"engine max_len {self.max_len - self.prefix}")
         if self.cfg.family == "encdec":
             if frames is None:
                 raise ValueError("encdec requests need `frames`")
@@ -420,7 +467,8 @@ class Engine:
                     f"frames {frames.shape[0]} exceed engine src_len "
                     f"{self.src_len}")
         if self.paged:
-            n_need = self.pkv.n_pages_for(len(prompt) + int(max_new))
+            n_need = self.pkv.n_pages_for(
+                len(prompt) + int(max_new) + self.spec_k)
             if n_need > self.n_pages - 1:
                 raise ValueError(
                     f"request needs {n_need} KV pages but the pool only has "
@@ -564,7 +612,7 @@ class Engine:
                 budget -= 1
                 continue
             got = self.pkv.admit(slot, req.tokens,
-                                 len(req.tokens) + req.max_new)
+                                 len(req.tokens) + req.max_new + self.spec_k)
             if got is None:
                 return  # deferred: not enough pages even after eviction
             self.queue.popleft()
@@ -617,7 +665,8 @@ class Engine:
         for req in plan:
             slot = free[len(admitted)]
             L = len(req.tokens)
-            got = self.pkv.admit(slot, req.tokens, L + req.max_new)
+            got = self.pkv.admit(slot, req.tokens,
+                                 L + req.max_new + self.spec_k)
             if got is None:
                 break
             row, hit = got
@@ -746,7 +795,7 @@ class Engine:
         right-padding), splice self-attn KV to the pages and park the
         cross-attn memory in the slot's dense lane. Returns False on a
         page shortfall (head-of-line waits)."""
-        total = len(req.tokens) + req.max_new
+        total = len(req.tokens) + req.max_new + self.spec_k
         got = self.pkv.admit(slot, None, total)
         if got is None:
             return False
@@ -859,6 +908,15 @@ class Engine:
                              self.src_len)(
             self.params, self.tok, self.cache, self.keys, temp)
         jax.block_until_ready(out)
+        if self.spec_k:
+            # the spec round is one fused trace (drafts + verify window);
+            # all-zero state drafts garbage into the trash page — outputs
+            # discarded, the engine cache stays zeroed
+            out = spec_step_fn(cfg, k=self.spec_k, greedy=self.greedy,
+                               paged=True, mesh=self.mesh)(
+                self.params, self.draft_params, self.tok, self.cache,
+                self.keys, temp)
+            jax.block_until_ready(out)
         self.t_warmup = time.perf_counter() - t0
 
     def paged_trace_counts(self) -> Dict[str, int]:
@@ -875,6 +933,10 @@ class Engine:
                 self.page_size, self.n_blocks, self.src_len)._cache_size(),
             "sample": _sample_fn(self.greedy)._cache_size(),
         }
+        if self.spec_k:
+            out["spec"] = spec_step_fn(
+                cfg, k=self.spec_k, greedy=self.greedy, paged=True,
+                mesh=self.mesh)._cache_size()
         if cfg.family == "encdec":
             pf = prefill_fn(cfg, self.max_len, self.mesh)
             if hasattr(pf, "_cache_size"):
@@ -969,6 +1031,50 @@ class Engine:
             if self.slots[slot] is not None:
                 self._maybe_retire(slot)
 
+    def _spec_round(self):
+        """One speculative round over all slots: k draft steps with the
+        coarse view + ONE verify window with the target weights, then a
+        single host sync of the accepted blocks. Speculation trades the
+        pipelined pending-token scheme for multi-token rounds — the host
+        must see ``n_acc`` each round to know how far every slot got, so
+        rounds materialize eagerly (one sync per round, not per token).
+
+        EOS landing *inside* an accepted block retires the request the
+        same step: the block is truncated at EOS (or at ``max_new``) and
+        the slot is freed immediately — trailing accepted tokens are
+        dropped, exactly as sequential decode would never have produced
+        them. The cache length still advances by the full ``n_acc`` for
+        the round, which is harmless: retirement pins the freed slot's
+        length to 0 and admission overwrites it."""
+        fn = spec_step_fn(self.cfg, k=self.spec_k, greedy=self.greedy,
+                          paged=self.paged, mesh=self.mesh)
+        out, n_acc, self.cache, self.keys = fn(
+            self.params, self.draft_params, self.tok, self.cache,
+            self.keys, jnp.float32(self.temperature))
+        # next pending token = last accepted (its KV is not written yet)
+        self.tok = jnp.take_along_axis(
+            out, (n_acc - 1)[:, None], axis=1).astype(jnp.int32)
+        out_h = np.asarray(jax.device_get(out))     # (B, k+1)
+        acc_h = np.asarray(jax.device_get(n_acc))   # (B,)
+        self.n_spec_rounds += 1
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            A = int(acc_h[slot])
+            self._spec_live += 1
+            self._spec_acc_tok += A
+            self._spec_acc_draft += A - 1
+            for t in out_h[slot, :A]:
+                req.out.append(int(t))
+                if ((req.eos_id is not None and int(t) == req.eos_id)
+                        or len(req.out) >= req.max_new):
+                    break
+            if self.paged:
+                self.pkv.lens[slot] += A
+            self._maybe_retire(slot)
+        if self.paged and self.cfg.window is not None:
+            self._release_window_pages()
+
     def step(self) -> List[Dict[str, Any]]:
         """One engine iteration: admit into free slots, then advance all
         slots one decode step. Returns the requests retired this step.
@@ -998,7 +1104,12 @@ class Engine:
                 slots, free = free[:len(reqs)], free[len(reqs):]
                 self._admit_group(slots, reqs)
         active = [r for r in self.slots if r is not None]
-        if active:
+        if active and self.spec_k:
+            t0 = time.perf_counter()
+            self._spec_round()
+            self.t_decode += time.perf_counter() - t0
+            self.n_decode_steps += 1
+        elif active:
             t0 = time.perf_counter()
             if self.paged:
                 fn = _paged_step_fn(self.cfg, self.greedy, self.mesh,
@@ -1075,12 +1186,30 @@ class Engine:
             "wall_s": wall,
             "decode_tok_s": decoded / max(self.t_decode, 1e-9),
             "goodput_tok_s": new_toks / max(wall, 1e-9),
+            "tokens_per_engine_step": decoded / max(self.n_decode_steps, 1),
             "p50_latency_s": float(np.percentile(lat, 50)),
             "p95_latency_s": float(np.percentile(lat, 95)),
             "ttft_p50_s": float(np.percentile(ttft, 50)),
             "ttft_p99_s": float(np.percentile(ttft, 99)),
             "paged": self.paged,
         }
+        if self.spec_k:
+            live = max(self._spec_live, 1)
+            out["speculative_k"] = self.spec_k
+            out["draft_bits"] = self.draft_bits
+            out["spec_rounds"] = self.n_spec_rounds
+            # fraction of proposed draft tokens the verify pass accepted
+            out["acceptance_rate"] = self._spec_acc_draft / (self.spec_k * live)
+            # raw accepted tokens per live slot-round (incl. the bonus /
+            # correction token — >= 1 by construction)
+            out["spec_tokens_per_round"] = self._spec_acc_tok / live
+            if self.draft_report is not None:
+                out["draft_extra_bytes"] = sum(
+                    v["draft_bytes"] for v in self.draft_report.values())
+                out["draft_shared_leaves"] = sum(
+                    1 for v in self.draft_report.values() if v["shared"])
+                out["draft_coarse_leaves"] = sum(
+                    1 for v in self.draft_report.values() if not v["shared"])
         if self.paged:
             out.update(self.pkv.stats())
             out["kv_bytes_per_token"] = paged_kv.kv_bytes_per_token(self.cfg)

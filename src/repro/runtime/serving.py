@@ -338,6 +338,9 @@ def generate(
     eos_id: Optional[int] = None,
     return_stats: bool = False,
     mesh=None,
+    speculative: int = 0,
+    draft_bits: int = 3,
+    draft_params=None,
 ):
     """Prefill the prompt then decode `steps` tokens. Returns (B, steps).
 
@@ -369,6 +372,13 @@ def generate(
     the engine places its slot pool/caches batch-on-data and the decode
     jits take explicit NamedShardings (see docs/sharding.md). Output is
     token-identical to the un-meshed path.
+
+    ``speculative``: draft block length k for self-speculative decoding
+    (0 disables; see ``runtime.speculative``). ``draft_bits`` sizes the
+    coarsened draft view derived from the SAME LUT-Q weights unless an
+    explicit ``draft_params`` tree is given. Greedy output is
+    token-identical to ``speculative=0``; the cache is sized with k
+    extra positions of verify-window headroom.
     """
     import numpy as np
 
@@ -380,9 +390,12 @@ def generate(
         lengths = np.broadcast_to(
             np.asarray(jax.device_get(lengths), np.int32).reshape(-1), (B,))
     eng = Engine(
-        params, cfg, capacity=B, max_len=max_len or (P + steps),
+        params, cfg, capacity=B,
+        max_len=max_len or (P + steps + int(speculative)),
         src_len=batch["frames"].shape[1] if cfg.family == "encdec" else 0,
-        temperature=temperature, rng=rng, backend=backend, mesh=mesh)
+        temperature=temperature, rng=rng, backend=backend, mesh=mesh,
+        speculative=speculative, draft_bits=draft_bits,
+        draft_params=draft_params)
 
     # recurrent state has no positions to mask and MoE expert capacity
     # couples real tokens to padding, so ANY padding (ragged or
@@ -408,10 +421,17 @@ def generate(
     gen = jnp.asarray(gen)
     if return_stats:
         stats = eng.stats()
-        return gen, {
+        out = {
             "t_prefill_s": stats["t_prefill_s"],
             "t_decode_s": stats["t_decode_s"],
             "decode_tok_s": stats["decode_tok_s"],
             "backend": cfg.kernel_backend if backend is None else backend,
         }
+        if speculative:
+            for k in ("acceptance_rate", "spec_rounds",
+                      "spec_tokens_per_round", "tokens_per_engine_step",
+                      "draft_extra_bytes"):
+                if k in stats:
+                    out[k] = stats[k]
+        return gen, out
     return gen

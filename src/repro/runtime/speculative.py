@@ -1,0 +1,308 @@
+"""Self-speculative decoding from nested LUT-Q dictionaries.
+
+Decode is weight-bandwidth-bound: every engine step streams the whole
+quantized model from HBM for ONE token per slot. LUT-Q gives us a draft
+model for free — :func:`repro.core.policy.draft_view` re-clusters each
+K-entry dictionary into K' = 2**draft_bits coarse entries over the SAME
+stored assignment indices, so a low-bit "view" of the model costs a
+second tiny dictionary plus remapped/packed indices. Each round:
+
+  1. the draft view proposes k tokens autoregressively (k cheap steps,
+     streaming the coarse dictionaries + packed indices);
+  2. ONE target forward over the (k+1)-token window verifies them
+     (``api.decode_window`` — weight matmuls batch over the window, so
+     the full-precision-dictionary weights stream once per round);
+  3. accepted tokens commit; the cache rewinds to the accepted length.
+
+The draft and target share one KV cache: draft steps write their
+(draft-computed) KV at positions n0..n0+k-1, then the verify window
+re-feeds the same tokens with target params and overwrites those
+positions position-by-position *before* each position attends — so
+every verify position attends pure target KV, and under greedy the
+round's accepted tokens are **bitwise identical** to non-speculative
+decode (the repo's parity contract). Rejected positions' KV stays in
+the cache beyond ``len`` — masked scores hit -1e30 before the softmax
+row max, so their contribution is exactly 0.0 (the same bitwise-neutral
+masking the paged trash page relies on) — and is overwritten next
+round.
+
+Sliding-window (ring) caches need one extra move: the k+1 ring columns
+a round touches may hold still-live entries from ``window`` positions
+back, so the round snapshots them up front and restores the columns
+past the accepted length afterwards (requires k+1 <= ring width,
+enforced by the engine).
+
+Under temperature the accept rule is Leviathan et al.'s rejection
+sampling: draft token d_i is accepted with probability
+min(1, p_i(d_i)/q_i(d_i)); the first rejection resamples from
+norm(max(0, p_i - q_i)); a fully-accepted round samples a bonus token
+from p_{k+1}. Per-position outputs are then distributed exactly as
+sampling from the target alone (distributional, not bitwise, parity —
+the rng consumption differs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import api
+from repro.models.config import ModelConfig
+
+_RING_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
+def ring_width(cfg: ModelConfig, max_len: int) -> Optional[int]:
+    """Ring-buffer width of the slot KV cache, or None when the cache is
+    linear (no SWA, or max_len within the window)."""
+    if cfg.window is None:
+        return None
+    eff = min(max_len, cfg.window)
+    return eff if eff <= cfg.window else None
+
+
+def _is_ring(cfg: ModelConfig, cache) -> bool:
+    if cfg.window is None or "layers" not in cache:
+        return False
+    lk = cache["layers"].get("k") if isinstance(cache["layers"], dict) else None
+    if lk is None:
+        return False
+    return lk.shape[2] <= cfg.window
+
+
+def _ring_slots(n0: jax.Array, W: int, eff: int) -> jax.Array:
+    """(B, W) ring columns a round touches: slot of position n0+j."""
+    return (n0[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]) % eff
+
+
+def _take_cols(leaf, slots, *, stacked: bool):
+    b = jnp.arange(slots.shape[0])[:, None]
+    return leaf[:, b, slots] if stacked else leaf[b, slots]
+
+
+def _put_cols(leaf, slots, vals, *, stacked: bool):
+    b = jnp.arange(slots.shape[0])[:, None]
+    return (leaf.at[:, b, slots].set(vals) if stacked
+            else leaf.at[b, slots].set(vals))
+
+
+def _ring_snapshot(cache, slots):
+    """Copy the touched ring columns of every per-position KV leaf.
+
+    ``cache["layers"]`` leaves are stacked (Ls, B, eff, ...); prefix
+    layers (first_dense) hold unstacked (B, eff, ...) twins. Cross-KV
+    (xk/xv) and non-seq leaves are untouched by decode and skipped.
+    """
+    snap = {"layers": {k: _take_cols(cache["layers"][k], slots, stacked=True)
+                       for k in _RING_KEYS if k in cache["layers"]}}
+    if "prefix_layers" in cache:
+        snap["prefix_layers"] = {
+            name: {k: _take_cols(lc[k], slots, stacked=False)
+                   for k in _RING_KEYS if k in lc}
+            for name, lc in cache["prefix_layers"].items()}
+    return snap
+
+
+def _ring_restore(cache, snap, slots, n_acc):
+    """Restore snapshot columns j >= n_acc (per batch row).
+
+    Columns j < n_acc hold the verified target KV of the accepted
+    positions n0..n0+A-1 and must keep it; columns j >= n_acc were
+    speculatively overwritten and must regain their pre-round content
+    (the entries ``window`` positions back, still live under SWA).
+    """
+    keep = jnp.arange(slots.shape[1])[None, :] >= n_acc[:, None]  # (B, W)
+
+    def merge(leaf, sv, stacked):
+        cur = _take_cols(leaf, slots, stacked=stacked)
+        # broadcast (B, W) keep over the (Ls,) lead / head-dim tail
+        lead = 1 if stacked else 0
+        shape = (1,) * lead + keep.shape + (1,) * (cur.ndim - 2 - lead)
+        m = keep.reshape(shape)
+        return _put_cols(leaf, slots, jnp.where(m, sv, cur), stacked=stacked)
+
+    out = dict(cache)
+    out["layers"] = dict(cache["layers"])
+    for k, sv in snap["layers"].items():
+        out["layers"][k] = merge(cache["layers"][k], sv, True)
+    if "prefix_layers" in snap:
+        out["prefix_layers"] = {
+            name: {**cache["prefix_layers"][name],
+                   **{k: merge(cache["prefix_layers"][name][k], sv, False)
+                      for k, sv in lc.items()}}
+            for name, lc in snap["prefix_layers"].items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# accept rules
+# ---------------------------------------------------------------------------
+
+def greedy_accept(d: jax.Array, p_logits: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Longest-matching-prefix accept under greedy.
+
+    d: (B, k) draft tokens; p_logits: (B, k+1, V) target logits over the
+    verify window. Returns ``(out (B, k+1), n_acc (B,))`` — the emitted
+    tokens are ``argmax(p)`` at every position (on the accepted prefix
+    the draft token IS the argmax, so this single expression covers both
+    the matched prefix and the free correction token), valid through
+    ``n_acc = longest match + 1``. Token-identical to sequential greedy
+    decode by induction: position j's logits were computed against pure
+    target KV of positions < n0 + j.
+    """
+    k = d.shape[1]
+    tgt = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)       # (B, k+1)
+    match = (d == tgt[:, :k]).astype(jnp.int32)
+    n_acc = 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+    return tgt, n_acc.astype(jnp.int32)
+
+
+def rejection_accept(keys, d, q_logits, p_logits, temp
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Leviathan-style speculative rejection sampling (temperature > 0).
+
+    d: (B, k) draft tokens sampled from q; q_logits: (B, k, V) draft
+    logits each d_i was sampled from; p_logits: (B, k+1, V) target
+    logits. Accept d_i w.p. min(1, p_i(d_i)/q_i(d_i)) (log-space); the
+    first rejection resamples from norm(max(0, p_i - q_i)); full accept
+    samples the bonus token from p_{k+1}. Returns (keys, out, n_acc);
+    the marginal of each emitted token is exactly softmax(p_i/temp).
+    """
+    k = d.shape[1]
+
+    def one(kk, dd, qq, pp):
+        ka, kr, kn = jax.random.split(kk, 3)
+        lq = jax.nn.log_softmax(qq.astype(jnp.float32) / temp, axis=-1)
+        lp = jax.nn.log_softmax(pp.astype(jnp.float32) / temp, axis=-1)
+        lq_d = jnp.take_along_axis(lq, dd[:, None], axis=1)[:, 0]
+        lp_d = jnp.take_along_axis(lp[:k], dd[:, None], axis=1)[:, 0]
+        u = jax.random.uniform(ka, (k,))
+        acc = jnp.log(u) < (lp_d - lq_d)      # u < p/q  <=>  accept
+        L = jnp.sum(jnp.cumprod(acc.astype(jnp.int32)))
+        p_res = jnp.exp(jnp.take(lp, L, axis=0))                    # (V,)
+        q_res = jnp.exp(jnp.take(lq, jnp.minimum(L, k - 1), axis=0))
+        resid = jnp.where(L == k, p_res, jnp.maximum(p_res - q_res, 0.0))
+        tot = jnp.sum(resid)
+        probs = jnp.where(tot > 0, resid / jnp.maximum(tot, 1e-38), p_res)
+        extra = jax.random.categorical(kr, jnp.log(jnp.maximum(probs, 1e-38)))
+        out = jnp.where(jnp.arange(k + 1) < L,
+                        jnp.concatenate([dd, dd[-1:]]),
+                        extra).astype(jnp.int32)
+        return kn, out, L + 1
+
+    keys, out, n_acc = jax.vmap(one)(keys, d, q_logits, p_logits)
+    return keys, out, n_acc.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the fused speculative step
+# ---------------------------------------------------------------------------
+
+def _sample_draft(keys, logits, temp):
+    def one(kk, lg):
+        k1, k2 = jax.random.split(kk)
+        t = jax.random.categorical(k2, lg.astype(jnp.float32) / temp)
+        return k1, t
+    keys, toks = jax.vmap(one)(keys, logits)
+    return keys, toks.astype(jnp.int32)[:, None]
+
+
+def _build_spec_step(cfg: ModelConfig, k: int, greedy: bool, paged: bool,
+                     mesh):
+    """One round: draft k tokens, verify in one window, accept, rewind.
+
+    Signature: ``step(params, draft_params, tok, cache, keys, temp) ->
+    (out (B, k+1), n_acc (B,), cache, keys)`` — ``tok`` is the per-slot
+    pending token (KV not yet in the cache), ``out[:, :n_acc]`` are the
+    round's emitted tokens, the new pending token is
+    ``out[b, n_acc[b]-1]`` and the cache lands at ``len = n0 + n_acc``.
+    """
+
+    def step(params, draft_params, tok, cache, keys, temp):
+        n0 = cache["len"]
+        ring = (not paged) and _is_ring(cfg, cache)
+        if ring:
+            eff = cache["layers"]["k"].shape[2]
+            slots = _ring_slots(n0, k + 1, eff)
+            snap = _ring_snapshot(cache, slots)
+
+        # -- draft: k cheap autoregressive steps with the coarse view --
+        cur, c = tok, cache
+        q_logits, drafts = [], []
+        for _ in range(k):
+            if paged:
+                lg, c = api.paged_decode_step(draft_params, cfg, cur, c,
+                                              mesh=mesh)
+            else:
+                lg, c = api.decode_step(draft_params, cfg, cur, c)
+            lg = lg[:, -1]
+            q_logits.append(lg)
+            if greedy:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+            else:
+                keys, nxt = _sample_draft(keys, lg, temp)
+            drafts.append(nxt)
+            cur = nxt
+        d = jnp.concatenate(drafts, axis=1)                       # (B, k)
+
+        # -- verify: ONE target forward over the k+1 window, rewound to
+        # n0 so it overwrites the draft KV position-by-position --
+        if ring:
+            # full rings attend EVERY filled slot, so the columns the
+            # draft overwrote must regain their pre-round (still-live)
+            # entries before verify position j attends them; the verify
+            # scatter re-overwrites column j right before position j
+            # attends, replaying the sequential order exactly
+            c = _ring_restore(c, snap, slots, jnp.zeros_like(n0))
+        c = dict(c)
+        c["len"] = n0
+        win = jnp.concatenate([tok, d], axis=1)                   # (B, k+1)
+        if paged:
+            p_logits, c = api.paged_decode_window(params, cfg, win, c,
+                                                  mesh=mesh)
+        else:
+            p_logits, c = api.decode_window(params, cfg, win, c)
+
+        if greedy:
+            out, n_acc = greedy_accept(d, p_logits)
+        else:
+            keys, out, n_acc = rejection_accept(
+                keys, d, jnp.stack(q_logits, axis=1), p_logits, temp)
+
+        c = dict(c)
+        c["len"] = n0 + n_acc
+        if ring:
+            c = _ring_restore(c, snap, slots, n_acc)
+        return out, n_acc, c, keys
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def _spec_fn_cached(cfg: ModelConfig, k: int, greedy: bool, paged: bool,
+                    mesh, tuning):
+    del tuning  # lru salt only (see serving.decode_fn)
+    if mesh is not None:
+        raise ValueError("speculative decoding does not compose with SPMD "
+                         "meshes yet (per-slot rewind vs sharded caches); "
+                         "run speculative engines un-meshed")
+    return jax.jit(_build_spec_step(cfg, k, greedy, paged, mesh))
+
+
+def spec_step_fn(cfg: ModelConfig, *, k: int, greedy: bool,
+                 paged: bool = False, mesh=None):
+    """Jit-cached speculative round (same caching contract as
+    ``serving.decode_fn``: keyed on the hashable config + round shape +
+    the tuning-cache fingerprint). The engine AOT-warms exactly this fn,
+    keeping the closed-trace-set assertion intact."""
+    ok, why = api.speculative_supported(cfg)
+    if not ok:
+        raise ValueError(why)
+    if k < 1:
+        raise ValueError(f"speculative k must be >= 1, got {k}")
+    return _spec_fn_cached(cfg, k, greedy, paged, mesh,
+                           ops.tuning_fingerprint())

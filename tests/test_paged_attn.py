@@ -106,6 +106,62 @@ def test_kernel_matches_gather_bitwise(page, quant, window, g):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("quant,window", [
+    (False, None), (True, None), (False, 12), (True, 12),
+])
+def test_multipass_vmem_split_bitwise(quant, window):
+    """Forced-tiny VMEM budgets push the kernel onto the multi-pass
+    split (phase-A score streaming + phase-B dh-chunked V); every
+    chunking the planner can pick stays bit-identical to the gather
+    oracle — the whole point of splitting scores/chunks at einsum
+    output boundaries instead of chunking the K reduction."""
+    from repro.kernels.paged_attn import vmem_plan
+
+    q, kp, vp, block, cl, ks, vs = _case(
+        seed=11 + (3 if quant else 0), B=4, page=8, nb=3, hkv=2, g=2,
+        dh=16, quant=quant)
+    want = paged_attention_reference(q, kp, vp, block, cl, window=window,
+                                     k_scale=ks, v_scale=vs)
+    seen = set()
+    for budget in (None, 2000, 1000, 700, 300):
+        plan = vmem_plan(3, 8, 16, 2, quant=quant,
+                         kv_itemsize=kp.dtype.itemsize, budget_bytes=budget)
+        seen.add((plan["multipass"], plan["dchunk"]))
+        got = paged_attention_tpu(q, kp, vp, block, cl, window=window,
+                                  k_scale=ks, v_scale=vs, interpret=True,
+                                  vmem_budget_bytes=budget)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"budget={budget} plan={plan}")
+    # the sweep must actually exercise both layouts and >1 chunking
+    assert (False, 16) in seen and any(m for m, _ in seen)
+    assert len({dc for m, dc in seen if m}) > 1
+
+
+def test_vmem_plan_properties():
+    """Planner invariants: default budget keeps test-sized rows single-
+    pass; shrinking budgets shrink the chunk monotonically; the chunk
+    divides dh, never drops below 2 (width-1 einsums are not bit-stable
+    against the oracle), and the multi-pass scratch actually fits the
+    budget whenever any >= 2 chunk can."""
+    from repro.kernels.paged_attn import vmem_plan
+
+    p = vmem_plan(3, 8, 16, 2, quant=False, kv_itemsize=4)
+    assert not p["multipass"]
+    last = None
+    for budget in (3000, 1500, 800, 400, 200):
+        p = vmem_plan(3, 8, 16, 2, quant=False, kv_itemsize=4,
+                      budget_bytes=budget)
+        assert p["multipass"] and 16 % p["dchunk"] == 0
+        assert p["dchunk"] >= 2 and p["nd"] == 16 // p["dchunk"]
+        if last is not None:
+            assert p["dchunk"] <= last
+        last = p["dchunk"]
+        fits_any = 4 * 2 * 3 * 8 + 3 * 8 * 2 * 4 <= budget
+        if fits_any:
+            assert p["multi_bytes"] <= budget
+
+
 def test_dispatch_backends_agree():
     """ops.paged_attention routes both names to the same tokens-in,
     tokens-out function; "auto" with an empty cache takes the kernel."""

@@ -1,0 +1,371 @@
+"""Self-speculative decoding acceptance suite.
+
+The parity contract (ISSUE 10): greedy speculative serving emits tokens
+**bitwise identical** to non-speculative ``generate``/``Engine`` runs of
+the same prompts — across dense/SWA/encdec families, the kernel-backend
+ladder (decode/fused/packed4), int8 KV caches and both slot and paged
+pools. Drafts come from a genuinely coarse view (``draft_bits`` below
+the stored dictionary's log2 K) so rejection, rewind and the SWA ring
+snapshot/restore paths are actually exercised — a draft at the target's
+own width would accept everything and prove nothing.
+
+Also pinned here: the Leviathan rejection sampler's output marginal
+under temperature (distributional, via hypothesis), nested-dictionary
+coarsening invariants, the draft-view roundtrip through checkpoints and
+serve manifests, the engine's refusal gates (activation quant, MoE,
+recurrent/MLA families, SPMD meshes, ring-width floor), EOS-inside-an-
+accepted-block retirement, and the paged engine's closed trace set with
+the speculative round warmed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.lutq import LutqState, coarsen_dictionary
+from repro.core.policy import backend_manifest
+from repro.core.spec import QuantSpec
+from repro.models import api
+from repro.models.reduce import reduced
+from repro.runtime.engine import Engine
+from repro.runtime.serving import generate
+from repro.runtime.speculative import (greedy_accept, rejection_accept,
+                                       spec_step_fn)
+
+
+def _q_setup(arch, pack4=False, **over):
+    """Quantized serve tree: 4-bit LUT-Q (K=16) so draft_bits<4 gives a
+    real nested coarsening with real rejections."""
+    cfg = reduced(get_config(arch)).replace(
+        quant=QuantSpec(bits=4, min_size=1024), act_bits=32, remat=False,
+        **over)
+    params, _ = api.serve_state(jax.random.PRNGKey(0), cfg, pack4=pack4)
+    return cfg, params
+
+
+def _batch(cfg, B, P, seed=1):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, P)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, P, cfg.d_model)), jnp.float32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: generate, across families x backends x KV quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,over,backend,pack4", [
+    ("h2o-danube-1.8b", {"kv_cache_bits": 8}, "auto", False),  # SWA ring+int8
+    ("mistral-nemo-12b", {}, "decode", False),
+    ("mistral-nemo-12b", {}, "fused", False),
+    ("mistral-nemo-12b", {}, "packed4", True),
+    ("seamless-m4t-medium", {}, "auto", False),                # encdec
+])
+def test_generate_speculative_token_parity(arch, over, backend, pack4):
+    cfg, params = _q_setup(arch, pack4=pack4, **over)
+    batch = _batch(cfg, B=2, P=9)
+    lengths = jnp.asarray([9, 6], jnp.int32)
+    base = generate(params, cfg, batch, steps=8, lengths=lengths,
+                    backend=backend)
+    spec, stats = generate(params, cfg, batch, steps=8, lengths=lengths,
+                           backend=backend, speculative=2, draft_bits=2,
+                           return_stats=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(spec),
+                                  err_msg=f"{arch}/{backend}")
+    # draft_bits=2 on a K=16 dictionary must reject sometimes AND accept
+    # sometimes — otherwise the round machinery was not really exercised
+    assert 0.0 < stats["acceptance_rate"] < 1.0
+    assert stats["spec_tokens_per_round"] > 1.0
+
+
+@pytest.mark.slow
+def test_generate_speculative_parity_fp_draft_is_target():
+    """Unquantized params pass through draft_view unchanged (nothing to
+    coarsen), so the draft IS the target and every round fully accepts —
+    the degenerate end of the protocol stays exact too."""
+    cfg = reduced(get_config("mistral-nemo-12b")).replace(
+        quant=None, act_bits=32, remat=False)
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, B=2, P=7)
+    base = generate(params, cfg, batch, steps=6)
+    spec, stats = generate(params, cfg, batch, steps=6, speculative=3,
+                           return_stats=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(spec))
+    assert stats["acceptance_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: Engine, slot + paged pools, trace closure, EOS-in-block
+# ---------------------------------------------------------------------------
+
+LENS = [6, 11, 9, 7]
+
+
+def _run_engine(cfg, params, prompts, spec, *, paged, max_new=12, eos=None):
+    kw = dict(kv_pages=64, page_size=8) if paged else {}
+    eng = Engine(params, cfg, capacity=3, max_len=40, speculative=spec,
+                 draft_bits=2, **kw)
+    tc0 = eng.paged_trace_counts() if paged else None
+    for p in prompts:
+        eng.submit(p, max_new=max_new, eos_id=eos)
+    res = eng.run()
+    if paged:
+        assert eng.paged_trace_counts() == tc0, "serving grew the trace set"
+    return [r["tokens"].tolist() for r in res], eng.stats()
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_speculative_parity(paged):
+    """Ragged requests through a 3-slot speculative engine (slot reuse +
+    mid-flight admission) match the non-speculative engine token-for-
+    token, in fewer engine steps; paged engines additionally keep the
+    AOT-warmed trace set closed across the speculative serve."""
+    cfg, params = _q_setup("mistral-nemo-12b")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in LENS]
+    base, st0 = _run_engine(cfg, params, prompts, 0, paged=paged)
+    spec, st1 = _run_engine(cfg, params, prompts, 2, paged=paged)
+    assert base == spec
+    assert st1["decode_steps"] <= st0["decode_steps"]
+    assert st1["spec_rounds"] == st1["decode_steps"]
+    assert 0.0 < st1["acceptance_rate"] < 1.0
+    if paged:
+        # the spec round is part of the warmed trace set
+        eng = Engine(params, cfg, capacity=3, max_len=40, speculative=2,
+                     draft_bits=2, kv_pages=64, page_size=8)
+        assert eng.paged_trace_counts()["spec"] == 1
+
+
+@pytest.mark.slow
+def test_engine_speculative_parity_swa_ring_int8():
+    """The hard case: a full SWA ring attends every filled column, so a
+    speculative round must snapshot/restore the columns it clobbers.
+    Long enough generations wrap the ring several times."""
+    cfg, params = _q_setup("h2o-danube-1.8b", kv_cache_bits=8)
+    assert cfg.window is not None
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in (6, 9)]
+    # max_len > window => ring cache; max_new wraps it
+    base, _ = _run_engine(cfg, params, prompts, 0, paged=False, max_new=22)
+    spec, _ = _run_engine(cfg, params, prompts, 2, paged=False, max_new=22)
+    assert base == spec
+
+
+def test_eos_inside_accepted_block_retires_same_step():
+    """EOS landing mid-block truncates the block at EOS and retires the
+    request the same engine step — trailing accepted tokens are dropped
+    exactly as sequential decode would never have emitted them."""
+    cfg, params = _q_setup("mistral-nemo-12b")
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, (7,)).astype(np.int32)
+    base, _ = _run_engine(cfg, params, [prompt], 0, paged=False, max_new=14)
+    eos = base[0][5]  # a token known to appear mid-stream
+    want = base[0][:base[0].index(eos) + 1]
+    got, _ = _run_engine(cfg, params, [prompt], 3, paged=False, max_new=14,
+                         eos=int(eos))
+    assert got[0] == want
+    assert got[0][-1] == eos
+
+
+# ---------------------------------------------------------------------------
+# accept rules
+# ---------------------------------------------------------------------------
+
+def test_greedy_accept_longest_prefix():
+    V = 11
+    d = jnp.asarray([[3, 5, 7], [1, 2, 9]], jnp.int32)
+    # row 0: target argmax agrees at positions 0,1 then diverges (-> 4);
+    # row 1: disagrees immediately (-> 8)
+    p = np.full((2, 4, V), -10.0, np.float32)
+    for j, t in enumerate([3, 5, 2, 6]):
+        p[0, j, t] = 0.0
+    for j, t in enumerate([8, 2, 9, 0]):
+        p[1, j, t] = 0.0
+    out, n_acc = greedy_accept(d, jnp.asarray(p))
+    np.testing.assert_array_equal(np.asarray(n_acc), [3, 1])
+    np.testing.assert_array_equal(np.asarray(out), [[3, 5, 2, 6],
+                                                    [8, 2, 9, 0]])
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_rejection_sampler_marginal_matches_target(seed):
+    """Leviathan guarantee: whatever the draft distribution q, the first
+    emitted token of a round is distributed exactly as softmax(p_0/T) —
+    the accept/resample mixture reconstructs the target marginal. TV
+    distance against the exact target over many i.i.d. rounds."""
+    V, k, temp, N = 12, 3, 0.9, 4000
+    rng = np.random.default_rng(seed)
+    q_log = rng.standard_normal((k, V)).astype(np.float32) * 1.5
+    p_log = rng.standard_normal((k + 1, V)).astype(np.float32) * 1.5
+    qt = jnp.asarray(np.broadcast_to(q_log, (N, k, V)))
+    pt = jnp.asarray(np.broadcast_to(p_log, (N, k + 1, V)))
+    key = jax.random.PRNGKey(seed % (2**31 - 1))
+    kd, kr = jax.random.split(key)
+    # drafts sampled from q at the same temperature, per trial
+    d = jax.vmap(lambda kk: jax.vmap(jax.random.categorical)(
+        jax.random.split(kk, k), jnp.asarray(q_log) / temp))(
+        jax.random.split(kd, N)).astype(jnp.int32)
+    _, out, n_acc = rejection_accept(
+        jax.random.split(kr, N), d, qt, pt, jnp.float32(temp))
+    emp = np.bincount(np.asarray(out[:, 0]), minlength=V) / N
+    target = np.asarray(jax.nn.softmax(jnp.asarray(p_log[0]) / temp))
+    tv = 0.5 * np.abs(emp - target).sum()
+    assert tv < 0.08, f"TV(empirical, target) = {tv:.3f}"
+    assert int(n_acc.min()) >= 1 and int(n_acc.max()) <= k + 1
+
+
+# ---------------------------------------------------------------------------
+# nested dictionaries: coarsening + draft view + ckpt/manifest roundtrip
+# ---------------------------------------------------------------------------
+
+def test_coarsen_dictionary_invariants():
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(np.sort(rng.standard_normal(16)).astype(np.float32))
+    a = jnp.asarray(rng.integers(0, 16, (64, 32)).astype(np.int32))
+    dc, fmap = coarsen_dictionary(d, a, 8)
+    dc, fmap = np.asarray(dc), np.asarray(fmap)
+    assert dc.shape == (8,) and fmap.shape == (16,)
+    assert (np.diff(dc) >= 0).all(), "coarse dictionary must stay sorted"
+    assert (np.diff(fmap) >= 0).all(), "fine->coarse map must be monotone"
+    assert fmap.min() >= 0 and fmap.max() <= 7, "map must be total"
+    with pytest.raises(ValueError):
+        coarsen_dictionary(d, a, 32)
+
+
+def test_draft_view_nesting_and_bytes():
+    cfg, params = _q_setup("mistral-nemo-12b")
+    draft, report = api.draft_view(params, draft_bits=2, with_report=True)
+    n_coarse = 0
+    flatp = {"/".join(p): l for p, l in _walk(params)}
+    for path, leaf in _walk(draft):
+        if not isinstance(leaf, LutqState):
+            continue
+        rec = report["/".join(path)]
+        src = flatp["/".join(path)]
+        if rec["shared"]:
+            assert leaf is src and rec["draft_bytes"] == 0
+            continue
+        n_coarse += 1
+        assert leaf.d.shape[-1] == 4 and rec["draft_K"] == 4
+        assert rec["draft_bytes"] == int(leaf.d.nbytes) + int(leaf.a.nbytes)
+        assert leaf.sid is src.sid  # rule ids carried by reference
+    assert n_coarse > 0
+    # draft_bits at/above the stored width shares everything: 0 bytes
+    shared, rep4 = api.draft_view(params, draft_bits=4, with_report=True)
+    assert all(v["shared"] and v["draft_bytes"] == 0 for v in rep4.values())
+
+
+def _walk(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in tree:
+            yield from _walk(tree[k], prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def test_draft_view_k256_twos_complement_wrap():
+    """K=256 assignments live in int8 two's-complement (the kernels
+    reinterpret the plane); the coarsen path must undo the wrap or the
+    upper half of the dictionary remaps through garbage. A 4-bit view
+    of an 8-bit leaf reconstructs within ordinary 4-bit error."""
+    cfg, params = _q_setup("mistral-nemo-12b")
+    cfg8 = cfg.replace(quant=QuantSpec(bits=8, min_size=1024))
+    p8, _ = api.serve_state(jax.random.PRNGKey(0), cfg8)
+    leaf = p8["embed"]["table"]
+    assert leaf.d.shape[-1] == 256 and int(leaf.a.min()) < 0
+    d4 = api.draft_view(p8, draft_bits=4)["embed"]["table"]
+    a = np.asarray(leaf.a).astype(np.int64) % 256
+    ad = np.asarray(d4.a).astype(np.int64) % 256
+    wt = np.asarray(leaf.d)[a]
+    wd = np.asarray(d4.d)[ad]
+    rel = np.abs(wt - wd).mean() / (np.abs(wt).mean() + 1e-9)
+    assert rel < 0.25, f"coarse view decorrelated from target: {rel:.3f}"
+
+
+def test_draft_view_roundtrip_ckpt_and_manifest(tmp_path):
+    """The nested draft dictionary survives a checkpoint save/restore
+    bit-for-bit, and the serve manifest assigns the coarse leaves a
+    kernel backend exactly like first-class serve leaves."""
+    from repro.checkpoint import ckpt
+
+    cfg, params = _q_setup("mistral-nemo-12b")
+    draft = api.draft_view(params, draft_bits=3)
+    ckpt.save(draft, str(tmp_path), step=0)
+    back, step = ckpt.restore(str(tmp_path))
+    assert step == 0
+    orig = dict(_walk(draft))
+    rest = dict(_walk(back))
+    n_lutq = 0
+    for path, leaf in orig.items():
+        if not isinstance(leaf, LutqState):
+            continue
+        n_lutq += 1
+        got = rest[path]
+        np.testing.assert_array_equal(np.asarray(leaf.d), np.asarray(got.d))
+        np.testing.assert_array_equal(np.asarray(leaf.a), np.asarray(got.a))
+    assert n_lutq > 0
+    man = backend_manifest(draft, api.resolved_policy(cfg))
+    assert man and all("backend" in m for m in man.values())
+    # serve_state can emit the draft view alongside the serve tree
+    out = api.serve_state(jax.random.PRNGKey(0), cfg, draft_bits=3)
+    assert len(out) == 3  # (tree, axes, draft_view)
+
+
+# ---------------------------------------------------------------------------
+# refusal gates
+# ---------------------------------------------------------------------------
+
+def test_refuses_dynamic_activation_quant():
+    cfg = reduced(get_config("mistral-nemo-12b")).replace(
+        quant=QuantSpec(bits=4, min_size=1024), act_bits=8, remat=False)
+    ok, why = api.speculative_supported(cfg)
+    assert not ok and "act" in why
+    params, _ = api.serve_state(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="activation"):
+        Engine(params, cfg, capacity=2, max_len=32, speculative=2)
+
+
+@pytest.mark.parametrize("arch,frag", [
+    ("rwkv6-1.6b", "rewind"),
+    ("zamba2-2.7b", "rewind"),
+    ("qwen3-moe-235b-a22b", "MoE"),
+    ("deepseek-v2-lite-16b", "MoE"),
+])
+def test_refuses_unrewindable_families(arch, frag):
+    cfg = reduced(get_config(arch)).replace(act_bits=32)
+    ok, why = api.speculative_supported(cfg)
+    assert not ok and frag in why
+
+
+def test_refuses_mla_mesh_and_bad_k():
+    cfg = reduced(get_config("mistral-nemo-12b")).replace(
+        act_bits=32, use_mla=True)
+    ok, why = api.speculative_supported(cfg)
+    assert not ok and "MLA" in why
+    cfg = reduced(get_config("mistral-nemo-12b")).replace(act_bits=32)
+    with pytest.raises(ValueError, match="mesh"):
+        spec_step_fn(cfg, k=2, greedy=True, mesh="fake-mesh")
+    with pytest.raises(ValueError, match="k must be"):
+        spec_step_fn(cfg, k=0, greedy=True)
+
+
+def test_ring_width_floor_and_headroom():
+    """k+1 must fit the SWA ring, and submit must hold k tokens of
+    cache headroom for the verify window."""
+    cfg, params = _q_setup("h2o-danube-1.8b")
+    eff = min(40, cfg.window)
+    with pytest.raises(ValueError, match="ring"):
+        Engine(params, cfg, capacity=2, max_len=40, speculative=eff)
+    eng = Engine(params, cfg, capacity=2, max_len=20, speculative=3,
+                 draft_bits=2)
+    with pytest.raises(ValueError, match="headroom"):
+        eng.submit(np.arange(1, 10, dtype=np.int32), max_new=9)
+    eng.submit(np.arange(1, 9, dtype=np.int32), max_new=9)  # 8+9+3 fits
